@@ -1,0 +1,65 @@
+"""Real-compute microbenchmarks: jitted HSTU prefill / rank-with-cache /
+fallback steps on this host (CPU), plus kernel interpret-mode checks.
+
+These are the live-engine operation costs (us_per_call measured, not
+simulated) — the numbers a TPU deployment would re-measure to
+recalibrate the cost model (EXPERIMENTS.md §Calibration)."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import LiveExecutor
+from repro.core.types import UserMeta
+from repro.data.synthetic import UserBehaviorStore, WorkloadConfig
+from repro.models import get_model
+
+
+def _time(fn, n=5) -> float:
+    fn()  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def live_engine_ops() -> List[Tuple]:
+    model = get_model("hstu_gr", smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    store = UserBehaviorStore(WorkloadConfig(n_items=64, incr_len=16))
+    ex = LiveExecutor(model, params, store)
+    meta = UserMeta(user_id=7, prefix_len=256, incr_len=16, n_items=64)
+    rows = []
+    psi, nbytes, _ = ex.pre_infer(meta)
+    rows.append(("micro/pre_infer_256tok",
+                 _time(lambda: ex.pre_infer(meta)),
+                 f"psi={nbytes / 1e6:.2f}MB"))
+    rows.append(("micro/rank_cached",
+                 _time(lambda: ex.rank_cached(meta, psi)),
+                 "scores (1,64,1)"))
+    rows.append(("micro/rank_full_fallback",
+                 _time(lambda: ex.rank_full(meta)),
+                 "baseline path"))
+    return rows
+
+
+def kernel_interpret() -> List[Tuple]:
+    from repro.kernels import ops
+    rows = []
+    B, S, H, D = 1, 512, 4, 64
+    rng = np.random.default_rng(0)
+    q, k, v = (jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+               for _ in range(3))
+    rows.append(("micro/hstu_attn_interp_512",
+                 _time(lambda: jax.block_until_ready(
+                     ops.hstu_attention(q, k, v)), n=2),
+                 "Pallas interpret mode (CPU oracle path)"))
+    return rows
+
+
+ALL_MICRO = [live_engine_ops, kernel_interpret]

@@ -1,0 +1,136 @@
+"""Roofline analysis from the compiled dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) record, derive the three roofline terms:
+
+  compute    = FLOPs_per_chip / peak_FLOPs          [s]
+  memory     = HBM_traffic_per_chip / HBM_bw        [s]
+  collective = collective_bytes_per_chip / link_bw  [s]
+
+Sources and caveats (documented in EXPERIMENTS.md §Roofline):
+  * FLOPs: jaxpr-level dot/conv count (exact scan trip accounting;
+    XLA's CPU cost_analysis counts while bodies once), divided by chips.
+    Replication waste (e.g. 36-head attention on a 16-way model axis)
+    is additionally estimated via the compiled per-chip cost_analysis
+    where available.
+  * HBM traffic proxy: argument + output + 2x temp bytes from
+    compiled.memory_analysis() — compiled-real per-chip sizes; temp is
+    touched at least twice (produce+consume).
+  * collective bytes: summed output-operand sizes of all all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute ops in
+    the partitioned HLO (per-chip module).
+
+Also reports MODEL_FLOPS = 6*N*D (train) or 2*N_active*tokens (serve)
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from pathlib import Path
+from typing import Dict, List
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models import INPUT_SHAPES, get_config
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def active_param_count(cfg) -> int:
+    """Parameters touched per token (MoE: shared + top_k experts only)."""
+    n = cfg.param_count()
+    if cfg.n_experts:
+        d, de = cfg.d_model, cfg.d_expert
+        routed_all = cfg.n_layers * cfg.n_experts * 3 * d * de
+        routed_active = cfg.n_layers * cfg.top_k * 3 * d * de
+        n = n - routed_all + routed_active
+    return n
+
+
+def model_flops(cfg, shape) -> float:
+    n_act = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    return 2.0 * n_act * shape.global_batch  # decode: one token/seq
+
+
+def analyse_record(rec: dict) -> dict:
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    chips = rec.get("n_chips", 256)
+    flops_chip = rec["jaxpr_flops_global"] / chips
+    mem = rec.get("memory", {})
+    traffic = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0)
+               + 2 * mem.get("temp_size_in_bytes", 0))
+    coll = rec.get("collectives", {}).get("total_bytes", 0)
+
+    t_comp = flops_chip / PEAK_FLOPS_BF16
+    t_mem = traffic / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_global": rec["jaxpr_flops_global"],
+        "useful_ratio": round(mf / max(rec["jaxpr_flops_global"], 1), 3),
+        "hbm_bytes_chip": traffic,
+        "coll_bytes_chip": coll,
+        "roofline_bound_s": round(max(terms.values()), 6),
+        "fsdp": rec.get("fsdp", False),
+    }
+    # per-chip compiled flops (scan-undercounted; used to estimate
+    # replication waste on archs whose heads cannot shard)
+    cost_flops = rec.get("cost", {}).get("flops")
+    if cost_flops:
+        out["xla_flops_chip_scanbody"] = cost_flops
+    return out
+
+
+def load(tag: str = "baseline", mesh: str = "16x16") -> List[dict]:
+    rows = []
+    for path in sorted(glob.glob(str(ARTIFACTS / f"{tag}__*.json"))):
+        rec = json.loads(Path(path).read_text())
+        if rec.get("status") != "ok":
+            continue
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        rows.append(analyse_record(rec))
+    return rows
+
+
+def table(rows: List[dict]) -> str:
+    hdr = ("arch", "shape", "compute_s", "memory_s", "collective_s",
+           "dominant", "useful_ratio")
+    lines = [" | ".join(hdr), " | ".join("---" for _ in hdr)]
+    for r in rows:
+        lines.append(" | ".join(str(r[h]) for h in hdr))
+    return "\n".join(lines)
+
+
+def main():
+    import sys
+    tag = sys.argv[1] if len(sys.argv) > 1 else "baseline"
+    rows = load(tag=tag)
+    print("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+          "useful_ratio,roofline_bound_s")
+    for r in rows:
+        print(f"{r['arch']},{r['shape']},{r['mesh']},{r['compute_s']},"
+              f"{r['memory_s']},{r['collective_s']},{r['dominant']},"
+              f"{r['useful_ratio']},{r['roofline_bound_s']}")
+    out = ARTIFACTS.parent / f"roofline_{tag}.json"
+    out.write_text(json.dumps(rows, indent=1))
+    print(f"\nwrote {out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

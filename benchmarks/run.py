@@ -1,0 +1,64 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Prints ``name,us_per_call,derived`` CSV — one block per paper
+table/figure (benchmarks/figures.py), the live-compute microbenchmarks
+(benchmarks/microbench.py) and, when dry-run artifacts exist, the
+roofline summary (benchmarks/roofline.py).
+
+``--quick`` runs a reduced subset (used by CI / test_benchmarks).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="substring filter on benchmark function names")
+    args = ap.parse_args(argv)
+
+    from benchmarks import ablations, figures, microbench
+
+    fig_fns = list(figures.ALL_FIGURES) + list(ablations.ALL_ABLATIONS)
+    micro_fns = list(microbench.ALL_MICRO)
+    if args.quick:
+        fig_fns = [figures.fig11d_slo_throughput,
+                   figures.fig12_local_vs_remote,
+                   figures.table1_kv_footprint]
+        micro_fns = []
+    if args.only:
+        fig_fns = [f for f in fig_fns if args.only in f.__name__]
+        micro_fns = [f for f in micro_fns if args.only in f.__name__]
+
+    print("name,us_per_call,derived")
+    for fn in fig_fns + micro_fns:
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # report, keep going
+            print(f"{fn.__name__},0,ERROR: {type(e).__name__}: {e}")
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        print(f"# {fn.__name__} took {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+    # roofline summary (if the dry-run has produced artifacts)
+    try:
+        from benchmarks import roofline
+        rows = roofline.load()
+        for r in rows:
+            print(f"roofline/{r['arch']}/{r['shape']},"
+                  f"{r['roofline_bound_s'] * 1e6:.1f},"
+                  f"dominant={r['dominant']} useful={r['useful_ratio']}")
+    except Exception as e:
+        print(f"roofline,0,unavailable: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Capacity planning with the paper's admission-control equations.
+
+Sweeps the trigger knobs (r1, r2, M, T_life) and prints the derived
+live-cache cap L, per-instance admitted QPS and pool-wide Q_max
+(Eqs. 1-3), then validates the chosen operating point in the
+discrete-event cluster simulator.
+
+Run:  PYTHONPATH=src python examples/cluster_capacity.py
+"""
+from repro.core import GRCostModel, SequenceAwareTrigger, TriggerConfig
+from repro.data.synthetic import UserBehaviorStore, request_stream
+from repro.models import get_config
+from repro.serving.simulator import SimConfig, run_sim
+
+cost = GRCostModel(get_config("hstu-gr"))
+print("r1   M   T_life   L(cap)  Q_admit/inst  Q_max(pool)")
+for r1 in (0.25, 0.5):
+    for m in (3, 5):
+        for t_life in (0.2, 0.4):
+            cfg = TriggerConfig(r1=r1, m_slots=m, t_life_s=t_life)
+            trig = SequenceAwareTrigger(cfg, cost)
+            s = trig.summary()
+            print(f"{r1:.2f} {m:3d} {t_life:6.1f}   "
+                  f"{s['live_cache_cap_L']:7.0f} {s['q_admit_per_instance']:12.0f} "
+                  f"{s['q_max_pool']:12.0f}")
+
+print("\nvalidating r1=0.5, M=5 at 300 QPS in the cluster sim:")
+store = UserBehaviorStore()
+arr = request_stream(store, 300, 15.0)
+s = run_sim(SimConfig(trigger=TriggerConfig(n_instances=10)), cost, arr)
+print({k: round(v, 3) for k, v in s.items() if k in
+       ("p99_ms", "success_rate", "goodput_qps", "hbm_hit", "miss")})

@@ -1,0 +1,38 @@
+"""Quickstart: the RelayGR relay in 40 lines.
+
+Builds the HSTU GR backbone, pre-infers a user's long-term behaviour
+prefix (psi), relays it through the HBM cache, and scores candidates
+with `rank_with_cache` — asserting the paper's epsilon-equivalence
+against full inference.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import get_model
+
+model = get_model("hstu-gr", smoke=True)
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+
+# a user's behaviour stream: long-term prefix | short-term | candidates
+prefix = jnp.asarray(rng.integers(0, 500, (1, 128)), jnp.int32)
+incr   = jnp.asarray(rng.integers(0, 500, (1, 16)), jnp.int32)
+items  = jnp.asarray(rng.integers(0, 500, (1, 32)), jnp.int32)
+
+# 1) relay-race side path (during retrieval): pre-infer psi
+_, psi = jax.jit(model.prefill)(params, {"tokens": prefix})
+kv_mb = sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(psi)) / 2**20
+print(f"psi: per-layer KV cache, {kv_mb:.2f} MiB for 128 tokens")
+
+# 2) fine-grained ranking (later, same instance): reuse psi
+scores_relay = model.rank_with_cache(params, psi, incr, items)
+
+# 3) the paper's correctness contract: |relay - full| <= eps
+scores_full = model.full_rank(params, prefix, incr, items)
+err = float(jnp.abs(scores_relay - scores_full).max())
+print(f"scores: {scores_relay.shape}, |relay - full| = {err:.2e}")
+assert err < 1e-4
+print("relay-race inference == full inference (eps-bound holds)")

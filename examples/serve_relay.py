@@ -1,0 +1,14 @@
+"""End-to-end driver (the paper's kind: serving): boots a live RelayGR
+service — sequence-aware trigger, affinity router, HBM window, DRAM
+expander — over a real jitted HSTU model and replays a batched synthetic
+request stream through the full retrieval->preprocess->rank relay.
+
+Run:  PYTHONPATH=src python examples/serve_relay.py [--requests 100]
+Also: PYTHONPATH=src python -m repro.launch.serve --sim   (cluster sim)
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["--requests", "100", "--qps", "150"])

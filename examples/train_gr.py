@@ -1,0 +1,14 @@
+"""Train the GR backbone on the synthetic next-item-prediction pipeline
+(a few hundred steps, CPU-sized model).
+
+Run:  PYTHONPATH=src python examples/train_gr.py
+Production shapes go through repro.launch.dryrun / the production mesh.
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or
+         ["--arch", "hstu-gr", "--smoke", "--steps", "200",
+          "--batch", "8", "--seq", "128", "--ckpt", "/tmp/relaygr_ck/hstu"])

@@ -1,0 +1,17 @@
+"""RelayGR core: lifecycle caching under late-binding placement.
+
+The paper's contribution as a composable library: sequence-aware trigger
+(admission, Eqs. 1-3), affinity-aware router (placement, invariant I1),
+memory-aware expander (DRAM reuse tier), HBM sliding-window cache
+(invariant I2), and the ranking-instance engine + service composition.
+"""
+from .cache import CacheEntry, HBMCacheStore
+from .costmodel import GRCostModel, HardwareModel
+from .engine import (InstanceConfig, LiveExecutor, RankingInstance,
+                     SimExecutor)
+from .expander import DRAMExpander, ExpanderConfig, SingleFlight
+from .router import AffinityRouter, ConsistentHashRing
+from .service import RelayGRService, ServiceConfig
+from .trigger import SequenceAwareTrigger, TriggerConfig
+from .types import (HASH_KEY, CacheState, HitKind, RankResult, Request,
+                    Stage, UserMeta)

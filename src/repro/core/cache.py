@@ -1,0 +1,101 @@
+"""HBM-resident prefix-cache store — the sliding lifecycle window.
+
+Admitted prefix caches psi(u) are inserted by pre-inference, consumed by
+ranking within the request lifecycle T_life, and evicted as new admitted
+users arrive (paper Fig. 10).  The store enforces the byte budget
+``r1 * HBM`` from invariant I2; admission control (trigger) is what makes
+the budget sufficient for survival — the store itself just implements
+the window and reports violations (an admitted-but-evicted-before-
+consumption cache counts as a ``premature_eviction``; under a correctly
+configured trigger this stays at zero, and the property tests assert it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Tuple
+
+from .types import CacheState
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    user_id: int
+    value: Any                 # pytree of per-layer KV (or a byte-size stub)
+    nbytes: int
+    created_at: float
+    state: CacheState = CacheState.HBM
+    consumed: bool = False
+    prefix_len: int = 0
+
+
+class HBMCacheStore:
+    """FIFO sliding-window cache under a byte budget (single instance)."""
+
+    def __init__(self, budget_bytes: int):
+        self.budget = int(budget_bytes)
+        self.entries: "OrderedDict[int, CacheEntry]" = OrderedDict()
+        self.used_bytes = 0
+        self.stats = {"inserts": 0, "hits": 0, "misses": 0,
+                      "evictions": 0, "premature_evictions": 0,
+                      "peak_bytes": 0}
+
+    def __contains__(self, user_id: int) -> bool:
+        return user_id in self.entries
+
+    @property
+    def live_count(self) -> int:
+        return len(self.entries)
+
+    def insert(self, user_id: int, value: Any, nbytes: int, now: float,
+               prefix_len: int = 0) -> List[CacheEntry]:
+        """Insert psi(u); evicts oldest entries past the budget.
+        Returns the evicted entries (candidates for DRAM spill)."""
+        if user_id in self.entries:
+            self._remove(user_id)
+        entry = CacheEntry(user_id, value, int(nbytes), now,
+                           prefix_len=prefix_len)
+        evicted = []
+        while self.used_bytes + entry.nbytes > self.budget and self.entries:
+            old_uid, old = next(iter(self.entries.items()))
+            self._remove(old_uid)
+            old.state = CacheState.EVICTED
+            self.stats["evictions"] += 1
+            if not old.consumed:
+                self.stats["premature_evictions"] += 1
+            evicted.append(old)
+        if entry.nbytes <= self.budget:
+            self.entries[user_id] = entry
+            self.used_bytes += entry.nbytes
+            self.stats["inserts"] += 1
+            self.stats["peak_bytes"] = max(self.stats["peak_bytes"],
+                                           self.used_bytes)
+        return evicted
+
+    def lookup(self, user_id: int) -> Optional[CacheEntry]:
+        e = self.entries.get(user_id)
+        if e is None:
+            self.stats["misses"] += 1
+        else:
+            self.stats["hits"] += 1
+        return e
+
+    def consume(self, user_id: int) -> Optional[CacheEntry]:
+        """Mark psi(u) consumed by ranking; it stays until evicted by the
+        sliding window (it may serve same-lifecycle repeats) but becomes
+        the preferred spill candidate."""
+        e = self.entries.get(user_id)
+        if e is not None:
+            e.consumed = True
+        return e
+
+    def pop(self, user_id: int) -> Optional[CacheEntry]:
+        e = self.entries.get(user_id)
+        if e is not None:
+            self._remove(user_id)
+        return e
+
+    def _remove(self, user_id: int):
+        e = self.entries.pop(user_id)
+        self.used_bytes -= e.nbytes

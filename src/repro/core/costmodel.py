@@ -1,0 +1,103 @@
+"""Analytic latency cost model for GR serving on an accelerator instance.
+
+Used by (a) the sequence-aware trigger's risk test, (b) the discrete-
+event cluster simulator, and (c) the benchmark harness when deriving
+paper-figure curves.  Constants default to a production-mirror Ascend
+910C-class instance and are calibrated so that the absolute numbers in
+the paper's evaluation are reproduced (pre-inference ~35 ms at ~3.5K
+tokens for the HSTU backbone; rank-on-cache < 10 ms at 512 candidates;
+DRAM->HBM load < 20 ms at 15K-token caches; remote fetch 100s of times
+local access).  See EXPERIMENTS.md §Calibration.
+
+All returned latencies are in milliseconds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    # effective sustained throughput for small-GR-model inference
+    # (small matmuls at batch<=1k tokens reach ~<1% of peak cube FLOPs on
+    # a 910C-class part; the default reproduces pre(2K) ~= 35 ms)
+    eff_flops: float = 2.0e12          # FLOP/s sustained
+    hbm_bw: float = 1.6e12             # B/s
+    h2d_bw: float = 2.0e10             # B/s (PCIe/host-link, shared)
+    net_bw: float = 1.25e9             # B/s cross-server (10 GbE share)
+    net_rtt_ms: float = 2.0            # per remote fetch
+    host_feature_ms: float = 2.0       # CPU feature processing per request
+    embed_bytes_per_token: int = 1024  # host->device embedding traffic
+
+
+@dataclasses.dataclass(frozen=True)
+class GRCostModel:
+    cfg: ModelConfig
+    hw: HardwareModel = HardwareModel()
+
+    # ---- model primitives -------------------------------------------------
+    def layer_param_flops(self) -> int:
+        c = self.cfg
+        if c.hstu:
+            per = 4 * c.d_model * c.n_heads * c.head_dim \
+                + c.n_heads * c.head_dim * c.d_model
+        else:
+            per = (2 * c.d_model * c.n_heads * c.head_dim
+                   + 2 * c.d_model * c.n_kv_heads * c.head_dim
+                   + 3 * c.d_model * c.d_ff)
+        return 2 * per
+
+    def forward_flops(self, n_tokens: int, n_ctx: int = None) -> float:
+        """FLOPs for a forward pass of ``n_tokens`` attending to
+        ``n_ctx`` context tokens (quadratic term)."""
+        c = self.cfg
+        n_ctx = n_ctx if n_ctx is not None else n_tokens
+        lin = n_tokens * c.n_layers * self.layer_param_flops()
+        attn = 4 * n_tokens * n_ctx * c.n_layers * c.n_heads * c.head_dim
+        return lin + attn
+
+    def kv_bytes(self, seq_len: int) -> int:
+        c = self.cfg
+        itemsize = 4 if c.dtype == "float32" else 2
+        return 2 * c.n_layers * seq_len * c.n_heads * c.head_dim * itemsize
+
+    # ---- serving-path latencies (ms) ---------------------------------------
+    def h2d_ms(self, seq_len: int) -> float:
+        bytes_ = seq_len * self.hw.embed_bytes_per_token
+        return bytes_ / self.hw.h2d_bw * 1e3
+
+    def pre_infer_ms(self, prefix_len: int, dim_scale: float = 1.0) -> float:
+        """Pre-inference of the long-term prefix (relay-race side path)."""
+        fl = self.forward_flops(prefix_len) * dim_scale
+        return (fl / self.hw.eff_flops * 1e3
+                + self.h2d_ms(prefix_len) + self.hw.host_feature_ms)
+
+    def rank_on_cache_ms(self, prefix_len: int, incr_len: int,
+                         n_items: int, dim_scale: float = 1.0) -> float:
+        """Ranking that reuses cached psi: only incremental tokens +
+        candidate items run, attending to the full context."""
+        q = incr_len + n_items
+        fl = self.forward_flops(q, n_ctx=prefix_len + q) * dim_scale
+        return (fl / self.hw.eff_flops * 1e3
+                + self.h2d_ms(q) + self.hw.host_feature_ms)
+
+    def full_rank_ms(self, prefix_len: int, incr_len: int, n_items: int,
+                     dim_scale: float = 1.0) -> float:
+        """Baseline: the whole sequence on the ranking critical path."""
+        n = prefix_len + incr_len + n_items
+        fl = self.forward_flops(n) * dim_scale
+        return (fl / self.hw.eff_flops * 1e3
+                + self.h2d_ms(n) + self.hw.host_feature_ms)
+
+    def dram_load_ms(self, prefix_len: int) -> float:
+        """DRAM -> HBM reload of psi (expander hit)."""
+        return self.kv_bytes(prefix_len) / self.hw.h2d_bw * 1e3
+
+    def remote_fetch_ms(self, prefix_len: int) -> float:
+        """Cross-server cache fetch — the path RelayGR's invariant I1
+        forbids on the ranking critical path."""
+        return (self.hw.net_rtt_ms
+                + self.kv_bytes(prefix_len) / self.hw.net_bw * 1e3)

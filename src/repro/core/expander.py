@@ -1,0 +1,138 @@
+"""Memory-aware expander (paper §3.4): server-local DRAM reuse tier.
+
+HBM bridges a single request lifecycle; DRAM extends reuse across
+repeated requests from the same user (rapid refresh) at bounded H2D
+cost.  Three mechanisms:
+
+  * two-level lookup: HBM first, DRAM on miss, then DRAM->HBM reload;
+  * per-user single-flight: at most one cache-affecting action in flight
+    per user — concurrent requests wait and then hit HBM;
+  * pseudo-pre-infer: a lightweight cache-check step enqueued in front of
+    every ranking request, so out-of-order arrivals (ranking before the
+    real pre-infer lands) trigger at most ONE reload per user per burst.
+
+Reloads are additionally rate-limited with a bounded-concurrency gate so
+the expander cannot become a new PCIe bottleneck.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Tuple
+
+from .cache import CacheEntry, HBMCacheStore
+from .types import CacheState
+
+
+@dataclasses.dataclass
+class ExpanderConfig:
+    dram_budget_bytes: float = 500e9
+    max_reload_concurrency: int = 4
+
+
+class SingleFlight:
+    """Per-user in-flight op registry. begin() returns True for the op
+    leader; followers queue and are released on end()."""
+
+    def __init__(self):
+        self._inflight: Dict[int, int] = {}
+
+    def begin(self, user_id: int) -> bool:
+        n = self._inflight.get(user_id, 0)
+        self._inflight[user_id] = n + 1
+        return n == 0
+
+    def end(self, user_id: int):
+        n = self._inflight.get(user_id, 0)
+        if n <= 1:
+            self._inflight.pop(user_id, None)
+        else:
+            self._inflight[user_id] = n - 1
+
+    def waiters(self, user_id: int) -> int:
+        return max(0, self._inflight.get(user_id, 0) - 1)
+
+
+class DRAMExpander:
+    def __init__(self, cfg: ExpanderConfig):
+        self.cfg = cfg
+        self.entries: "OrderedDict[int, CacheEntry]" = OrderedDict()
+        self.used_bytes = 0
+        self.flight = SingleFlight()
+        self.active_reloads = 0
+        self.stats = {"spills": 0, "reloads": 0, "redundant_avoided": 0,
+                      "dram_hits": 0, "dram_misses": 0, "lru_evictions": 0,
+                      "reload_throttled": 0}
+
+    # --- spill (after consumption, off the critical path) -------------------
+    def spill(self, entry: CacheEntry):
+        if entry.user_id in self.entries:
+            self._remove(entry.user_id)
+        while (self.used_bytes + entry.nbytes > self.cfg.dram_budget_bytes
+               and self.entries):
+            old, _ = self.entries.popitem(last=False)  # LRU
+            self.used_bytes -= _.nbytes
+            self.stats["lru_evictions"] += 1
+        if entry.nbytes <= self.cfg.dram_budget_bytes:
+            entry.state = CacheState.DRAM
+            self.entries[entry.user_id] = entry
+            self.used_bytes += entry.nbytes
+            self.stats["spills"] += 1
+
+    def lookup(self, user_id: int) -> Optional[CacheEntry]:
+        e = self.entries.get(user_id)
+        if e is None:
+            self.stats["dram_misses"] += 1
+        else:
+            self.entries.move_to_end(user_id)  # LRU touch
+            self.stats["dram_hits"] += 1
+        return e
+
+    def _remove(self, user_id: int):
+        e = self.entries.pop(user_id)
+        self.used_bytes -= e.nbytes
+
+    # --- pseudo-pre-infer --------------------------------------------------
+    def pseudo_pre_infer(self, user_id: int, hbm: HBMCacheStore,
+                         now: float) -> Tuple[str, Optional[CacheEntry]]:
+        """The cache-check step enqueued ahead of every ranking request.
+
+        Returns (action, entry):
+          'hbm'    — psi already resident, proceed to ranking directly;
+          'reload' — leader: psi in DRAM, caller performs the (rate-
+                     limited) DRAM->HBM reload;
+          'wait'   — follower: another op for this user is in flight;
+                     caller re-probes HBM after the leader completes;
+          'miss'   — psi nowhere local: caller falls back (or the real
+                     pre-infer computes it)."""
+        e = hbm.lookup(user_id)
+        if e is not None:
+            return "hbm", e
+        leader = self.flight.begin(user_id)
+        if not leader:
+            self.stats["redundant_avoided"] += 1
+            return "wait", None
+        d = self.lookup(user_id)
+        if d is None:
+            return "miss", None
+        if self.active_reloads >= self.cfg.max_reload_concurrency:
+            self.stats["reload_throttled"] += 1
+            return "miss", None
+        return "reload", d
+
+    def complete_reload(self, user_id: int, hbm: HBMCacheStore, now: float
+                        ) -> List[CacheEntry]:
+        """Leader finished the H2D copy: promote DRAM entry into HBM."""
+        e = self.entries.get(user_id)
+        evicted: List[CacheEntry] = []
+        if e is not None:
+            self._remove(user_id)
+            e.state = CacheState.HBM
+            evicted = hbm.insert(user_id, e.value, e.nbytes, now,
+                                 prefix_len=e.prefix_len)
+            self.stats["reloads"] += 1
+        return evicted
+
+    def finish(self, user_id: int):
+        self.flight.end(user_id)

@@ -1,0 +1,96 @@
+"""Affinity-aware router (paper §3.3).
+
+Converts late-binding placement into an early-binding contract: the
+auxiliary pre-infer signal and the eventual ranking request for the same
+user both carry ``consistency-hash-key: userID``; the load balancer and
+gateway apply consistent hashing on that key, so producer and consumer
+rendezvous at the same special instance with no coordination.
+
+Requests without the key (normal, short-sequence traffic) fall back to
+standard policies (round-robin / least-connections).
+"""
+
+from __future__ import annotations
+
+import bisect
+import hashlib
+from typing import Dict, List, Optional
+
+from .types import HASH_KEY, Request
+
+
+def _h(data: str) -> int:
+    return int.from_bytes(hashlib.sha256(data.encode()).digest()[:8], "big")
+
+
+class ConsistentHashRing:
+    def __init__(self, nodes: Optional[List[str]] = None, vnodes: int = 128):
+        self.vnodes = vnodes
+        self._ring: List[int] = []
+        self._owner: Dict[int, str] = {}
+        self.nodes: List[str] = []
+        for n in nodes or []:
+            self.add(n)
+
+    def add(self, node: str):
+        if node in self.nodes:
+            return
+        self.nodes.append(node)
+        for v in range(self.vnodes):
+            hv = _h(f"{node}#{v}")
+            idx = bisect.bisect(self._ring, hv)
+            self._ring.insert(idx, hv)
+            self._owner[hv] = node
+
+    def remove(self, node: str):
+        if node not in self.nodes:
+            return
+        self.nodes.remove(node)
+        self._ring = [hv for hv in self._ring if self._owner[hv] != node]
+        self._owner = {hv: n for hv, n in self._owner.items() if n != node}
+
+    def route(self, key) -> str:
+        if not self._ring:
+            raise RuntimeError("no nodes on the ring")
+        hv = _h(str(key))
+        idx = bisect.bisect(self._ring, hv) % len(self._ring)
+        return self._owner[self._ring[idx]]
+
+
+class AffinityRouter:
+    """Two-tier routing: special pool via consistent hashing on the
+    user-keyed header; normal pool via round-robin/least-connections."""
+
+    def __init__(self, special: List[str], normal: List[str],
+                 policy: str = "round_robin", vnodes: int = 128):
+        self.ring = ConsistentHashRing(special, vnodes=vnodes)
+        self.normal = list(normal)
+        self.policy = policy
+        self._rr = 0
+        self._load: Dict[str, int] = {n: 0 for n in normal}
+        self.stats = {"special": 0, "normal": 0}
+
+    def route(self, request: Request) -> str:
+        key = request.header.get(HASH_KEY)
+        if key is not None:
+            self.stats["special"] += 1
+            return self.ring.route(key)
+        self.stats["normal"] += 1
+        if self.policy == "least_connections" and self._load:
+            node = min(self._load, key=self._load.get)
+            self._load[node] += 1
+            return node
+        node = self.normal[self._rr % len(self.normal)]
+        self._rr += 1
+        return node
+
+    def release(self, node: str):
+        if node in self._load:
+            self._load[node] = max(0, self._load[node] - 1)
+
+    # deployment churn (affinity disruption -> fallback path, not an error)
+    def add_special(self, node: str):
+        self.ring.add(node)
+
+    def remove_special(self, node: str):
+        self.ring.remove(node)

@@ -1,0 +1,112 @@
+"""RelayGR service: the full retrieval -> pre-processing -> ranking relay.
+
+Wires the sequence-aware trigger (admission), the affinity-aware router
+(placement) and the ranking instances (execution + expander) into one
+request path.  This is the *functional* composition used by tests and the
+live examples; the discrete-event simulator (repro.serving.simulator)
+replays the same state machines under a virtual clock and concurrency to
+measure P99/throughput at cluster scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional
+
+from repro.serving.metrics import SLOTracker
+
+from .costmodel import GRCostModel
+from .engine import InstanceConfig, RankingInstance, SimExecutor
+from .router import AffinityRouter
+from .trigger import Decision, SequenceAwareTrigger, TriggerConfig
+from .types import HitKind, RankResult, Request, Stage, UserMeta
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    trigger: TriggerConfig = TriggerConfig()
+    n_normal: int = 0                  # 0 -> derived from trigger cfg
+    hbm_cache_bytes: float = 16e9
+    dram_budget_bytes: float = 500e9
+    long_seq_threshold: int = 0        # 0 -> use the trigger's risk test
+                                       # (pre-processing decides the service)
+
+
+class RelayGRService:
+    def __init__(self, cfg: ServiceConfig, cost: GRCostModel,
+                 executor_factory=None):
+        self.cfg = cfg
+        self.cost = cost
+        self.trigger = SequenceAwareTrigger(cfg.trigger, cost)
+        n_special = cfg.trigger.n_special
+        n_normal = cfg.n_normal or (cfg.trigger.n_instances - n_special)
+        self.special_names = [f"special-{i}" for i in range(n_special)]
+        self.normal_names = [f"normal-{i}" for i in range(max(n_normal, 1))]
+        self.router = AffinityRouter(self.special_names, self.normal_names)
+        factory = executor_factory or (lambda name: SimExecutor(cost))
+        self.instances: Dict[str, RankingInstance] = {}
+        for name in self.special_names + self.normal_names:
+            icfg = InstanceConfig(
+                name=name, hbm_cache_bytes=cfg.hbm_cache_bytes,
+                special=name.startswith("special"))
+            icfg.dram.dram_budget_bytes = cfg.dram_budget_bytes
+            self.instances[name] = RankingInstance(icfg, factory(name))
+        self._req_ids = itertools.count()
+        self.slo = SLOTracker()
+
+    # --- stage 1: retrieval side-path ----------------------------------------
+    def on_retrieval(self, meta: UserMeta, now: float
+                     ) -> Optional[Request]:
+        """Trigger assessment; returns the auxiliary pre-infer signal if
+        the request was admitted (caller/simulator delivers it)."""
+        signal = Request.pre_infer(next(self._req_ids), meta, now)
+        target = self.router.route(signal)  # consistent hash on user key
+        decision = self.trigger.admit(meta, target, now)
+        if not decision.admitted:
+            return None
+        signal.body["target"] = target
+        return signal
+
+    def deliver_pre_infer(self, signal: Request, now: float
+                          ) -> Dict[str, float]:
+        inst = self.instances[signal.body["target"]]
+        return inst.handle_pre_infer(signal, now)
+
+    # --- stage 3: fine-grained ranking ----------------------------------------
+    def on_rank(self, meta: UserMeta, now: float) -> RankResult:
+        if self.cfg.long_seq_threshold:
+            long_seq = meta.prefix_len >= self.cfg.long_seq_threshold
+        else:
+            long_seq = self.trigger.assess(meta).at_risk
+        req = Request.rank(next(self._req_ids), meta, now=now,
+                           long_sequence=long_seq)
+        target = self.router.route(req)
+        result = self.instances[target].handle_rank(req, now)
+        self.slo.observe(now=now, e2e_ms=result.latency_ms,
+                         hit=result.hit.value,
+                         components=result.components)
+        return result
+
+    # --- synchronous end-to-end (live mode / tests) ----------------------------
+    def submit(self, meta: UserMeta, now: float = 0.0) -> RankResult:
+        signal = self.on_retrieval(meta, now)
+        pre = {}
+        if signal is not None:
+            pre = self.deliver_pre_infer(signal, now)
+        result = self.on_rank(meta, now + 1e-3)
+        if pre:
+            result.components["pre"] = pre["pre"]
+        return result
+
+    # --- observability -----------------------------------------------------------
+    def stats(self) -> Dict[str, Dict]:
+        agg = {"trigger": dict(self.trigger.stats),
+               "router": dict(self.router.stats),
+               "slo": self.slo.summary(now=0.0)}
+        inst = {}
+        for name, i in self.instances.items():
+            inst[name] = {**i.stats, "hbm": dict(i.hbm.stats),
+                          "dram": dict(i.expander.stats)}
+        agg["instances"] = inst
+        return agg

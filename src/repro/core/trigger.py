@@ -1,0 +1,138 @@
+"""Sequence-aware trigger: selective admission of at-risk requests
+(paper §3.2, Eqs. 1-3).
+
+The trigger runs beside retrieval, inspects only lightweight behaviour
+metadata, and admits a request for prefix pre-inference iff
+
+  (risk)  full inline ranking would violate the ranking-stage P99 budget,
+  (Eq. 2) the live caches it creates survive T_life under the HBM budget:
+              L * kv_p99 <= r1 * HBM,   L = Q_admit * T_life       (Eq. 1)
+  (Eq. 3) per-instance compute is not overloaded:
+              Q_admit <= Q_m * M, and pool-wide
+              Q_max   <= (Q_m * M) * (r2 * N).
+
+Rates are enforced with token buckets (one per special instance plus a
+pool-wide bucket), so admission is load-aware at millisecond granularity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+from .costmodel import GRCostModel
+from .types import UserMeta
+
+
+@dataclasses.dataclass(frozen=True)
+class TriggerConfig:
+    hbm_bytes: float = 32e9          # HBM per special instance
+    r1: float = 0.5                  # HBM fraction reserved for live caches
+    t_life_s: float = 0.3            # request lifecycle window
+    q_m: float = 30.0                # pre-infer QPS per model slot
+    m_slots: int = 5                 # concurrent model slots per instance
+    r2: float = 0.1                  # fraction of instances that are special
+    n_instances: int = 100           # total ranking instances
+    rank_p99_budget_ms: float = 50.0 # ranking-stage P99 budget
+    kv_p99_len: int = 4096           # P99 prefix length among admitted users
+    concurrency_factor: float = 2.0  # queueing amplification at high QPS
+    # beyond-paper (EXPERIMENTS.md §Perf): only admit when pre-inference
+    # is estimated to finish inside the retrieval+preprocess slack, so
+    # ranking never parks on its own pre-infer signal. 0 disables.
+    slack_budget_ms: float = 0.0
+
+    @property
+    def n_special(self) -> int:
+        return max(1, int(round(self.r2 * self.n_instances)))
+
+
+class TokenBucket:
+    def __init__(self, rate: float, burst: Optional[float] = None):
+        self.rate = float(rate)
+        self.burst = burst if burst is not None else max(rate, 1.0)
+        self.tokens = self.burst
+        self.t_last = 0.0
+
+    def try_take(self, now: float) -> bool:
+        self.tokens = min(self.burst,
+                          self.tokens + (now - self.t_last) * self.rate)
+        self.t_last = now
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return True
+        return False
+
+
+@dataclasses.dataclass
+class Decision:
+    admitted: bool
+    at_risk: bool
+    est_full_ms: float
+    reason: str
+
+
+class SequenceAwareTrigger:
+    def __init__(self, cfg: TriggerConfig, cost: GRCostModel):
+        self.cfg = cfg
+        self.cost = cost
+        self.kv_p99_bytes = cost.kv_bytes(cfg.kv_p99_len)
+        # Eq. 2 -> cap on live caches, Eq. 1 -> admitted rate cap
+        self.live_cap = cfg.r1 * cfg.hbm_bytes / self.kv_p99_bytes
+        rate_survive = self.live_cap / cfg.t_life_s
+        rate_compute = cfg.q_m * cfg.m_slots                      # Eq. 3a
+        self.q_admit = min(rate_survive, rate_compute)
+        self.q_max = rate_compute * cfg.n_special                 # Eq. 3b
+        self._instance_buckets: Dict[str, TokenBucket] = {}
+        self._pool_bucket = TokenBucket(self.q_max)
+        self.stats = {"assessed": 0, "at_risk": 0, "admitted": 0,
+                      "rate_limited": 0, "slack_rejected": 0}
+
+    # --- side-path risk test (metadata only) -------------------------------
+    def assess(self, meta: UserMeta) -> Decision:
+        self.stats["assessed"] += 1
+        dim_scale = (meta.dim / self.cost.cfg.d_model) ** 2 \
+            if meta.dim else 1.0
+        est = self.cost.full_rank_ms(
+            meta.prefix_len, meta.incr_len, meta.n_items,
+            dim_scale=dim_scale) * self.cfg.concurrency_factor
+        at_risk = est > self.cfg.rank_p99_budget_ms
+        if at_risk:
+            self.stats["at_risk"] += 1
+        return Decision(False, at_risk, est,
+                        "at-risk" if at_risk else "safe")
+
+    # --- admission ----------------------------------------------------------
+    def admit(self, meta: UserMeta, instance: str, now: float) -> Decision:
+        d = self.assess(meta)
+        if not d.at_risk:
+            return Decision(False, False, d.est_full_ms, "safe")
+        if self.cfg.slack_budget_ms:
+            pre_est = self.cost.pre_infer_ms(meta.prefix_len)
+            if pre_est > self.cfg.slack_budget_ms:
+                self.stats["slack_rejected"] += 1
+                return Decision(False, True, d.est_full_ms,
+                                "insufficient-slack")
+        bucket = self._instance_buckets.get(instance)
+        if bucket is None:
+            bucket = TokenBucket(self.q_admit)
+            self._instance_buckets[instance] = bucket
+        if not self._pool_bucket.try_take(now):
+            self.stats["rate_limited"] += 1
+            return Decision(False, True, d.est_full_ms, "pool-rate-limited")
+        if not bucket.try_take(now):
+            self.stats["rate_limited"] += 1
+            return Decision(False, True, d.est_full_ms,
+                            "instance-rate-limited")
+        self.stats["admitted"] += 1
+        return Decision(True, True, d.est_full_ms, "admitted")
+
+    # --- derived quantities (paper §3.2 sanity check) ------------------------
+    def summary(self) -> Dict[str, float]:
+        return {
+            "kv_p99_bytes": self.kv_p99_bytes,
+            "live_cache_cap_L": self.live_cap,
+            "q_admit_per_instance": self.q_admit,
+            "q_max_pool": self.q_max,
+            "n_special": self.cfg.n_special,
+        }

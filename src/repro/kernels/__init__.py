@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the GR serving hot spots.
+
+hstu_attn        — HSTU pointwise (SiLU) causal attention (pre-inference)
+prefix_rank_attn — ranking-with-cache attention (RelayGR consumption path)
+decode_attn      — flash-decode softmax attention over a KV cache (LM serve)
+
+Each kernel ships with a pure-jnp oracle in ref.py and a layout-adapting
+jit wrapper in ops.py.  On CPU the kernels execute in interpret mode.
+"""
+from .ops import cache_decode_attention, hstu_attention, rank_attention

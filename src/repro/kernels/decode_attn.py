@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: flash-decode softmax attention over a KV cache.
+
+The generic-LM serve_step hot spot (decode_32k / long_500k shapes): one
+query token per sequence attends over a seq_len-deep KV cache with GQA.
+The kv-sequence axis is tiled over the innermost grid dimension with the
+classic running-(max, denom, acc) online-softmax state held in VMEM
+scratch; GQA is handled in the BlockSpec index map (q head h reads kv
+head h*KV//H), so KV blocks are fetched once per q-head group.
+
+m/l running scalars are stored as (1, 128) lanes (tile-aligned) rather
+than true scalars.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BK = 512
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, n_kv_blocks):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (1, D)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)               # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # s: (1, bk); online softmax update
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                            # (1, bk)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p)
+    m_ref[...] = jnp.full_like(m_ref, m_new)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)           # (1, D)
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[0, 0]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attn(q, k, v, *, bk: int = DEFAULT_BK, interpret: bool = False):
+    """q: (B, H, D); k, v: (B, KV, S, D) -> (B, H, D)."""
+    B, H, D = q.shape
+    _, KV, S, _ = k.shape
+    bk = min(bk, S)
+    assert S % bk == 0, (S, bk)
+    nk = S // bk
+    scale = 1.0 / np.sqrt(D)
+    group = H // KV
+
+    kernel = functools.partial(_kernel, scale=scale, n_kv_blocks=nk)
+    q4 = q[:, :, None, :]                             # (B, H, 1, D)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, ik: (b, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32),
+                        pltpu.VMEM((1, 128), jnp.float32),
+                        pltpu.VMEM((1, 128), jnp.float32)],
+        interpret=interpret,
+    )(q4, k, v)
+    return out[:, :, 0, :]

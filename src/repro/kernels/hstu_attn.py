@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: HSTU pointwise (SiLU) causal attention.
+
+The GR ranking hot spot.  Unlike softmax attention there is no running
+max/denominator — the accumulation is a plain masked sum — so the flash
+pattern degenerates to a tiled matmul chain, which maps directly onto
+the MXU:
+
+  grid = (B, H, Sq/bq, Sk/bk); the kv-block axis is innermost, so the
+  f32 accumulator scratch lives in VMEM across kv iterations and the
+  output block is written once on the last kv step.
+
+Block shapes are multiples of 128 on the lane dimension (MXU-aligned);
+the causal test prunes fully-masked kv blocks via @pl.when.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, *, scale, inv_n, bq, bk,
+            n_kv_blocks):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal block pruning: a kv block strictly after the q block is dead
+    @pl.when(ik * bk <= iq * bq + (bq - 1))
+    def _work():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        a = jax.nn.silu(logits) * inv_n
+        qi = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        ki = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        a = jnp.where(ki <= qi, a, 0.0)
+        acc_ref[...] += jax.lax.dot_general(
+            a, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _done():
+        o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bk", "n_total", "interpret"))
+def hstu_attn(q, k, v, *, bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+              n_total: float = None, interpret: bool = False):
+    """q, k, v: (B, H, S, D) -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    nq, nk = S // bq, S // bk
+    scale = 1.0 / np.sqrt(D)
+    inv_n = 1.0 / (n_total or S)
+
+    kernel = functools.partial(_kernel, scale=scale, inv_n=inv_n, bq=bq,
+                               bk=bk, n_kv_blocks=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Shapes use the kernel-native layout (B, H, S, D); the ops.py wrappers
+adapt from the model layout (B, S, H, D).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def hstu_attn_ref(q, k, v, *, n_total: float = None):
+    """HSTU pointwise attention, causal.  q,k,v: (B, H, S, D)."""
+    S = q.shape[2]
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    nt = n_total or S
+    a = jax.nn.silu(logits) / nt
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    a = jnp.where(mask[None, None], a, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", a.astype(v.dtype), v)
+
+
+def rank_mask_ref(n_prefix: int, n_incr: int, n_items: int):
+    """(Sq, Sk) ranking mask: incr causal; items see prefix+incr+self."""
+    Sq = n_incr + n_items
+    Sk = n_prefix + n_incr + n_items
+    qi = np.arange(Sq)[:, None]
+    ki = np.arange(Sk)[None, :]
+    causal = ki <= (qi + n_prefix)
+    is_item_q = qi >= n_incr
+    is_item_k = ki >= n_prefix + n_incr
+    self_key = ki == (qi + n_prefix)
+    items_ok = np.where(is_item_q, (~is_item_k) | self_key, True)
+    return jnp.asarray(causal & items_ok)
+
+
+def prefix_rank_attn_ref(q, k, v, *, n_prefix: int, n_incr: int,
+                         n_total: float = None):
+    """Ranking-with-cache HSTU attention.
+
+    q: (B, H, Sq, D) new tokens (incr + items);
+    k, v: (B, H, Sk, D) with Sk = n_prefix + Sq (cached prefix concat new).
+    """
+    B, H, Sq, D = q.shape
+    n_items = Sq - n_incr
+    scale = 1.0 / np.sqrt(D)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    nt = n_total or k.shape[2]
+    a = jax.nn.silu(logits) / nt
+    mask = rank_mask_ref(n_prefix, n_incr, n_items)
+    a = jnp.where(mask[None, None], a, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", a.astype(v.dtype), v)
+
+
+def decode_attn_ref(q, k, v):
+    """Softmax flash-decode oracle (GQA).
+
+    q: (B, H, D) one query per sequence; k,v: (B, KV, S, D)."""
+    B, H, D = q.shape
+    KV = k.shape[1]
+    kmap = jnp.arange(H) * KV // H
+    ke = jnp.take(k, kmap, axis=1)          # (B, H, S, D)
+    ve = jnp.take(v, kmap, axis=1)
+    scale = 1.0 / np.sqrt(D)
+    logits = jnp.einsum("bhd,bhsd->bhs", q, ke).astype(jnp.float32) * scale
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", w.astype(v.dtype), ve)

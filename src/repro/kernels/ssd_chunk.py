@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk contraction.
+
+The chunked SSD formulation (models/ssm.py) spends most of its FLOPs on
+the per-chunk masked contraction
+
+    M[q, t] = exp(cum[q] - cum[t]) * (C[q] . B[t]) * dt[t],  t <= q
+    y[q]    = sum_t M[q, t] * x[t]
+
+with Q = 128 chunk length — exactly one MXU tile.  This kernel fuses the
+decay/mask/score elementwise chain between the two matmuls so the (Q, Q)
+score tile never leaves VMEM; grid = (B, n_chunks, H) with per-head
+blocks, so VMEM holds only (Q,N)+(Q,N)+(Q,P)+(Q,Q) ~ 200 KB.
+
+Beyond-paper addition: the CUDA `mamba_chunk_scan` has no TPU port; this
+is the MXU-native equivalent of its intra-chunk stage (the inter-chunk
+recurrence stays a lax.scan over chunk summaries — it is O(L/Q) and
+bandwidth-trivial).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(c_ref, b_ref, x_ref, cum_ref, dt_ref, o_ref):
+    Q = c_ref.shape[2]
+    c = c_ref[0, 0].astype(jnp.float32)          # (Q, N)
+    b = b_ref[0, 0].astype(jnp.float32)          # (Q, N)
+    x = x_ref[0, 0, :, 0].astype(jnp.float32)    # (Q, P)
+    cum = cum_ref[0, 0, :, 0].astype(jnp.float32)   # (Q,)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)     # (Q,)
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    dec = cum[:, None] - cum[None, :]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    m = jnp.where(ki <= qi, jnp.exp(dec), 0.0)
+    mx = m * scores * dt[None, :]
+    y = jax.lax.dot_general(mx, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[0, 0, :, 0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_intra(Cc, Bc, xc, cum, dtc, *, interpret: bool = False):
+    """Cc, Bc: (B, nc, Q, N); xc: (B, nc, Q, H, P);
+    cum, dtc: (B, nc, Q, H).  Returns y_intra (B, nc, Q, H, P)."""
+    B, nc, Q, N = Cc.shape
+    H, P = xc.shape[3], xc.shape[4]
+    return pl.pallas_call(
+        _kernel,
+        grid=(B, nc, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q, 1, P),
+                               lambda b, c, h: (b, c, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nc, Q, H, P), xc.dtype),
+        interpret=interpret,
+    )(Cc, Bc, xc, cum, dtc)
+
+
+def ssd_chunk_intra_ref(Cc, Bc, xc, cum, dtc):
+    """Pure-jnp oracle (mirrors models/ssm.mamba2_forward intra-chunk)."""
+    Q = Cc.shape[2]
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))
+    dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(causal[None, None, :, :, None], jnp.exp(dec), 0.0)
+    Mx = M * scores[..., None] * dtc[:, :, None, :, :]
+    return jnp.einsum("bcqkh,bckhp->bcqhp", Mx,
+                      xc.astype(jnp.float32)).astype(xc.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunk-state summary kernel: S_c = sum_t exp(cum_last - cum_t) dt_t B_t (x) x_t
+# (the other matmul-heavy stage of chunked SSD; the inter-chunk scan then
+# runs over these (H, N, P) summaries)
+# ---------------------------------------------------------------------------
+
+
+def _state_kernel(b_ref, x_ref, cum_ref, dt_ref, o_ref):
+    b = b_ref[0, 0].astype(jnp.float32)             # (Q, N)
+    x = x_ref[0, 0, :, 0].astype(jnp.float32)       # (Q, P)
+    cum = cum_ref[0, 0, :, 0].astype(jnp.float32)   # (Q,)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)     # (Q,)
+    w = jnp.exp(cum[-1] - cum) * dt                 # decay to chunk end
+    bw = b * w[:, None]                             # (Q, N)
+    s = jax.lax.dot_general(bw, x, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (N, P)
+    o_ref[0, 0, 0] = s.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_state(Bc, xc, cum, dtc, *, interpret: bool = False):
+    """Bc: (B, nc, Q, N); xc: (B, nc, Q, H, P); cum/dtc: (B, nc, Q, H).
+    Returns per-chunk states (B, nc, H, N, P)."""
+    B, nc, Q, N = Bc.shape
+    H, P = xc.shape[3], xc.shape[4]
+    return pl.pallas_call(
+        _state_kernel,
+        grid=(B, nc, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, N, P),
+                               lambda b, c, h: (b, c, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nc, H, N, P), jnp.float32),
+        interpret=interpret,
+    )(Bc, xc, cum, dtc)
+
+
+def ssd_chunk_state_ref(Bc, xc, cum, dtc):
+    tail = cum[:, :, -1:, :] - cum
+    return jnp.einsum("bcqn,bcqh,bcqhp->bchnp",
+                      Bc.astype(jnp.float32),
+                      jnp.exp(tail) * dtc, xc.astype(jnp.float32))

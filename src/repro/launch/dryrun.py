@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh)
+combination lowers, partitions and compiles for the production meshes.
+
+For each combination this script:
+  1. builds the model and the step function (train_step for train shapes,
+     prefill/serve_step for inference shapes),
+  2. lowers + compiles it under the 16x16 single-pod mesh AND the
+     2x16x16 multi-pod mesh with explicit in_shardings,
+  3. records memory_analysis / cost_analysis / collective traffic
+     (parsed from the partitioned HLO) into a JSON artifact consumed by
+    the roofline analysis (benchmarks/roofline.py, EXPERIMENTS.md).
+
+Failures (sharding mismatch, OOM at compile, unsupported collective) are
+system bugs: the run exits non-zero listing them.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_step
+from repro.models import ARCH_IDS, INPUT_SHAPES, build_model, get_config
+from repro.models.partitioning import Rules, logical_rules
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "u64": 8}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _parse_collectives(hlo_text: str):
+    """Sum output-operand bytes of every collective op in partitioned HLO."""
+    stats = {c: {"count": 0, "bytes": 0} for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # "%x = bf16[8,128]{1,0} all-gather(...)" / fusion lines excluded
+        m = re.match(r"^[%\w.\-]+ = \(?([a-z0-9]+)\[([\d,]*)\]", s)
+        if not m:
+            continue
+        op = None
+        for c in COLLECTIVES:
+            if re.search(rf"\b{c}(-start|-done)?\(", s):
+                op = c
+                break
+        if op is None or f"{op}-done(" in s:
+            continue
+        dt, dims = m.group(1), m.group(2)
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        stats[op]["count"] += 1
+        stats[op]["bytes"] += n * nbytes
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+def _should_skip(cfg, shape):
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return ("long_500k requires sub-quadratic attention; "
+                f"{cfg.name} is full-attention with no sliding window "
+                "(see DESIGN.md)")
+    return None
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            fsdp: str = "auto", donate: bool = True,
+            overrides=None) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    skip = _should_skip(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "params": cfg.param_count()}
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        return rec
+
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+
+    zero2 = fsdp == "zero2"
+    if fsdp == "auto":
+        # keep weights under ~25% of chip HBM without FSDP; else ZeRO-3
+        itemsize = 4 if cfg.dtype == "float32" else 2
+        per_chip = cfg.param_count() * itemsize / mesh.shape["model"]
+        use_fsdp = per_chip > 4e9
+    else:
+        use_fsdp = fsdp == "on"
+    rec["fsdp"] = "zero2" if zero2 else bool(use_fsdp)
+
+    ovr = dict(overrides or {})
+    if shape.kind == "decode" and shape.global_batch == 1:
+        ovr.setdefault("kv_seq", "data")
+
+    t0 = time.time()
+    with logical_rules(mesh, overrides=ovr, fsdp=use_fsdp) as rules:
+        fn, arg_sds, arg_axes = make_step(model, shape, zero2=zero2)
+        from repro.launch.flops import step_flops
+        rec["jaxpr_flops_global"] = float(step_flops(fn, arg_sds))
+        in_shardings = jax.tree.map(
+            lambda ax, sds: jax.NamedSharding(
+                mesh, rules.spec(ax, shape=sds.shape)),
+            arg_axes, arg_sds,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+        # donate params+opt state (train) / KV cache (decode): the update
+        # is in-place at the XLA level, halving resident state
+        donate_args = ((0, 1) if shape.kind == "train"
+                       else (1,) if shape.kind == "decode" else ())
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_shardings,
+                             donate_argnums=donate_args if donate else ())
+            lowered = jitted.lower(*arg_sds)
+            compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # backend-dependent
+        rec["memory"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        rec["cost"] = {k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float)) and (
+                           k in ("flops", "bytes accessed")
+                           or k.startswith("bytes accessed"))}
+    except Exception as e:
+        rec["cost"] = {"error": str(e)}
+    hlo = compiled.as_text()
+    rec["collectives"] = _parse_collectives(hlo)
+    rec["n_chips"] = n_chips
+    rec["status"] = "ok"
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="input shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--fsdp", default="auto",
+                    choices=["auto", "on", "off", "zero2"])
+    ap.add_argument("--out", default=str(ARTIFACT_DIR))
+    ap.add_argument("--tag", default="baseline",
+                    help="artifact tag (perf iterations use new tags)")
+    ap.add_argument("--override", action="append", default=[],
+                    help="logical=mesh axis rule override, e.g. kv_seq=data")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        overrides[k] = tuple(v.split(",")) if "," in v else v
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = run_one(arch, shape, mp, fsdp=args.fsdp,
+                                  overrides=overrides)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc(limit=8)}
+                    failures.append(tag)
+                path = outdir / f"{args.tag}__{tag}.json"
+                path.write_text(json.dumps(rec, indent=1))
+                flops = rec.get("cost", {}).get("flops", 0)
+                print(f"{rec['status']:8s} {tag:55s} "
+                      f"compile={rec.get('compile_s', 0):6.1f}s "
+                      f"GFLOPs={flops / 1e9:12.1f} "
+                      f"coll={rec.get('collectives', {}).get('total_bytes', 0) / 1e6:10.1f}MB",
+                      flush=True)
+                if rec["status"] == "FAILED":
+                    print(rec["error"], flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES: {failures}")
+        sys.exit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Target: TPU v5e pods — 256 chips per pod arranged (data=16, model=16);
+multi-pod adds a leading "pod" axis (2 pods = 512 chips) used for data
+parallelism across pods (batch shards over ("pod", "data")).
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first init.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# --- hardware constants (TPU v5e) used by the roofline analysis -----------
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # B/s per chip
+ICI_BW = 50e9                 # B/s per link
+CHIP_HBM_BYTES = 16e9         # v5e HBM capacity

@@ -1,0 +1,74 @@
+"""Serving launcher: the end-to-end RelayGR driver (paper's kind).
+
+``python -m repro.launch.serve --requests 200`` boots a live RelayGR
+service (real HSTU compute on the local device), replays a synthetic
+request stream through retrieval -> trigger -> affinity routing ->
+ranking, and reports hit rates + latency components.  ``--sim`` switches
+to the discrete-event cluster simulation at production QPS.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.core import (GRCostModel, LiveExecutor, RelayGRService,
+                        ServiceConfig, TriggerConfig)
+from repro.data.synthetic import (UserBehaviorStore, WorkloadConfig,
+                                  request_stream)
+from repro.models import build_model, get_config
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="hstu-gr")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--qps", type=float, default=200.0)
+    ap.add_argument("--sim", action="store_true",
+                    help="cluster-scale discrete-event simulation")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke and not args.sim)
+    cost = GRCostModel(get_config(args.arch))
+
+    if args.sim:
+        from repro.serving.simulator import SimConfig, run_sim
+        store = UserBehaviorStore()
+        arr = request_stream(store, args.qps, args.requests / args.qps)
+        s = run_sim(SimConfig(trigger=TriggerConfig(n_instances=10)),
+                    cost, arr)
+        print(json.dumps(s, indent=1))
+        return s
+
+    # live mode: real JAX compute, small instance pool
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    store = UserBehaviorStore(WorkloadConfig(
+        vocab=cfg.vocab, n_items=64, incr_len=16, len_mu=6.8, len_sigma=0.9,
+        max_len=2048))
+    svc = RelayGRService(
+        ServiceConfig(trigger=TriggerConfig(n_instances=4, r2=0.5,
+                                            rank_p99_budget_ms=20.0)),
+        cost,
+        executor_factory=lambda name: LiveExecutor(model, params, store))
+    hits, lat = {}, []
+    for i, (t, meta) in enumerate(request_stream(
+            store, args.qps, 1e9, refresh_prob=0.2)):
+        if i >= args.requests:
+            break
+        r = svc.submit(meta, now=t)
+        hits[r.hit.value] = hits.get(r.hit.value, 0) + 1
+        lat.append(r.components["rank"])
+    print(f"requests={args.requests} hits={hits}")
+    print(f"rank compute ms: p50={np.percentile(lat, 50):.1f} "
+          f"p99={np.percentile(lat, 99):.1f}")
+    print(json.dumps(svc.stats()["trigger"], indent=1))
+    return hits
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""train_step / serve_step factories — the functions the launcher jits,
+the dry-run lowers, and the benchmarks time.
+
+Each factory returns ``(fn, arg_specs, arg_axes, out_axes_hint)`` where
+``arg_specs`` is a tuple of ShapeDtypeStruct pytrees (positional args of
+``fn``) and ``arg_axes`` the matching logical-axes pytrees used to build
+``in_shardings`` for a concrete mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import InputShape
+from repro.training import optimizer as opt
+
+
+def make_train_step(model, shape: InputShape, adamw: opt.AdamWConfig = None,
+                    zero2: bool = False):
+    adamw = adamw or opt.AdamWConfig()
+
+    def train_step(params, state, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, state, om = opt.apply_updates(adamw, params, grads, state)
+        metrics = dict(metrics, **om, loss=loss)
+        return params, state, metrics
+
+    p_sds = model.abstract_params()
+    p_axes = model.param_axes()
+    s_sds = opt.abstract_state(p_sds)
+    s_axes = opt.state_axes(p_axes, zero2=zero2)
+    b_sds = model.batch_specs(shape)
+    b_axes = model.batch_axes(shape)
+    return train_step, (p_sds, s_sds, b_sds), (p_axes, s_axes, b_axes)
+
+
+def make_prefill_step(model, shape: InputShape):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    p_sds = model.abstract_params()
+    p_axes = model.param_axes()
+    b_sds = model.batch_specs(shape)
+    b_axes = model.batch_axes(shape)
+    return prefill_step, (p_sds, b_sds), (p_axes, b_axes)
+
+
+def make_serve_step(model, shape: InputShape):
+    """Decode: ONE new token against a KV cache / recurrent state of
+    ``shape.seq_len`` tokens."""
+
+    def serve_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    p_sds = model.abstract_params()
+    p_axes = model.param_axes()
+    c_sds, c_axes = model.cache_specs(shape.global_batch, shape.seq_len)
+    b_sds = model.batch_specs(shape)
+    b_axes = model.batch_axes(shape)
+    return serve_step, (p_sds, c_sds, b_sds), (p_axes, c_axes, b_axes)
+
+
+def make_step(model, shape: InputShape, zero2: bool = False):
+    if shape.kind == "train":
+        return make_train_step(model, shape, zero2=zero2)
+    if shape.kind == "prefill":
+        return make_prefill_step(model, shape)
+    return make_serve_step(model, shape)
+
+
+def input_specs(model, shape: InputShape):
+    """ShapeDtypeStruct stand-ins for every model input of a step —
+    weak-type-correct, shardable, no device allocation (the dry-run
+    contract).  Train shapes: {tokens, labels, (frontend/frames)};
+    serve shapes additionally include the KV-cache/state stand-ins."""
+    _, arg_sds, _ = make_step(model, shape)
+    return arg_sds

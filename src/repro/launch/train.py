@@ -1,0 +1,78 @@
+"""Training launcher: ``python -m repro.launch.train --arch hstu-gr``.
+
+Runs the real data pipeline -> jitted train_step -> checkpoint loop on
+whatever devices are visible (CPU here; a TPU slice in production —
+pass --mesh to enable the production sharding rules).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import UserBehaviorStore, WorkloadConfig
+from repro.launch.steps import make_train_step
+from repro.models import build_model, get_config
+from repro.models.config import InputShape
+from repro.training import checkpoint
+from repro.training import optimizer as opt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="hstu-gr")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    print(f"arch={cfg.name} params={cfg.param_count() / 1e6:.1f}M "
+          f"family={cfg.family}")
+
+    shape = InputShape("cli", args.seq, args.batch, "train")
+    adamw = opt.AdamWConfig(lr=args.lr, warmup_steps=20,
+                            total_steps=args.steps)
+    step_fn, _, _ = make_train_step(model, shape, adamw)
+    jstep = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    params = model.init(jax.random.PRNGKey(0))
+    state = opt.init_state(params)
+    store = UserBehaviorStore(WorkloadConfig(vocab=cfg.vocab))
+    batches = store.train_batches(args.batch, args.seq)
+
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        if cfg.family == "vlm":
+            batch["frontend"] = jnp.zeros(
+                (args.batch, cfg.n_frontend_tokens, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (args.batch, cfg.n_frontend_tokens, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        params, state, m = jstep(params, state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss={float(m['loss']):.4f} "
+                  f"grad_norm={float(m['grad_norm']):.3f} "
+                  f"lr={float(m['lr']):.2e} "
+                  f"({(time.time() - t0) / (i + 1):.2f}s/step)", flush=True)
+    if args.ckpt:
+        checkpoint.save(args.ckpt, params, state, step=args.steps)
+        print(f"checkpoint -> {args.ckpt}")
+    return float(m["loss"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,519 @@
+"""Architecture assembly: dense / MoE / VLM / SSM / hybrid / enc-dec / HSTU.
+
+All families implement the same protocol (duck-typed, see ``BaseModel``):
+
+    param_specs() -> pytree[ParamSpec]
+    init(rng) -> params
+    loss(params, batch) -> (scalar, metrics)          # train_step target
+    prefill(params, batch) -> (hidden/logits, cache)  # produce KV/state psi
+    decode_step(params, cache, batch) -> (logits, cache)  # serve_step target
+    cache_specs(batch, seq_len) -> (sds_tree, axes_tree)
+    batch_specs(shape) -> dict[str, ShapeDtypeStruct]
+
+Layers are stacked on a leading axis and driven by ``lax.scan`` so the
+compiled HLO size is independent of depth (essential: the multi-pod
+dry-run compiles 40-layer models on a single host CPU).  Training wraps
+the scan body in ``jax.checkpoint`` (full remat between layers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ssm as ssm_lib
+from .config import InputShape, ModelConfig
+from .layers import (ParamSpec, abstract_tree, attention, attention_specs,
+                     axes_tree, cross_entropy, ffn, ffn_specs, init_tree,
+                     rms_norm)
+from .moe import moe_ffn, moe_specs, shared_expert_ffn
+from .partitioning import constrain
+
+
+def stack_specs(specs, n: int):
+    """Add a leading stacked-layer dim to every ParamSpec in a tree."""
+    def one(s: ParamSpec) -> ParamSpec:
+        return dataclasses.replace(s, shape=(n,) + s.shape,
+                                   axes=("layers",) + s.axes)
+    return jax.tree.map(one, specs, is_leaf=lambda s: isinstance(s, ParamSpec))
+
+
+def embed_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, vp, dt = cfg.d_model, cfg.vocab_padded, cfg.dtype
+    return {
+        "tok": ParamSpec((vp, d), ("vocab", "embed"), scale=1.0, dtype=dt),
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "unembed": ParamSpec((d, vp), ("embed", "vocab"), dtype=dt),
+    }
+
+
+def _embed(params, tokens):
+    e = jnp.take(params["tok"], tokens, axis=0)
+    return constrain(e, ("batch", "seq", "embed"))
+
+
+def _logits(params, x):
+    x = rms_norm(x, params["final_norm"])
+    lg = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    return constrain(lg, ("batch", "seq", "vocab"))
+
+
+CE_CHUNK = 512
+
+
+def ce_loss(params, x, labels, cfg, chunk: int = CE_CHUNK):
+    """Sequence-chunked cross-entropy: the (B, S, vocab_padded) logits
+    tensor is the single largest training temp (e.g. 420 GB global f32
+    for hstu-gr train_4k); computing the loss chunk-by-chunk with remat
+    caps the live slice at (B, chunk, Vp) and lets XLA free each chunk.
+    Identical value to the unchunked mean CE (sum/N)."""
+    B, S, d = x.shape
+    if S <= chunk or S % chunk:
+        logits = _logits(params, x)
+        return cross_entropy(logits, labels, cfg.vocab).mean()
+    nc = S // chunk
+    xc = jnp.swapaxes(x.reshape(B, nc, chunk, d), 0, 1)
+    lc = jnp.swapaxes(labels.reshape(B, nc, chunk), 0, 1)
+
+    def one(args):
+        xx, ll = args
+        logits = _logits(params, xx)
+        return cross_entropy(logits, ll, cfg.vocab).sum()
+
+    tot = jax.lax.map(jax.checkpoint(one), (xc, lc)).sum()
+    return tot / (B * S)
+
+
+class BaseModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # --- shared helpers -------------------------------------------------
+    def init(self, rng):
+        return init_tree(self.param_specs(), rng)
+
+    def abstract_params(self):
+        return abstract_tree(self.param_specs())
+
+    def param_axes(self):
+        return axes_tree(self.param_specs())
+
+    def batch_specs(self, shape: InputShape) -> Dict[str, Any]:
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.dtype("int32")
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        return {"token": jax.ShapeDtypeStruct((B, 1), i32),
+                "pos": jax.ShapeDtypeStruct((B,), i32)}
+
+    def batch_axes(self, shape: InputShape) -> Dict[str, Any]:
+        if shape.kind == "train":
+            return {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        if shape.kind == "prefill":
+            return {"tokens": ("batch", "seq")}
+        return {"token": ("batch", None), "pos": ("batch",)}
+
+
+# ===========================================================================
+# Dense / MoE / VLM decoder-only transformer
+# ===========================================================================
+
+
+class TransformerModel(BaseModel):
+    """Decoder-only transformer: dense, MoE and VLM (stub frontend)."""
+
+    @property
+    def is_moe(self):
+        return self.cfg.family == "moe"
+
+    def block_specs(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        specs = {
+            "ln1": ParamSpec((d,), ("embed",), init="ones"),
+            "ln2": ParamSpec((d,), ("embed",), init="ones"),
+            "attn": attention_specs(cfg),
+        }
+        if self.is_moe:
+            specs["moe"] = moe_specs(cfg)
+        else:
+            specs["ffn"] = ffn_specs(cfg)
+        return specs
+
+    def param_specs(self):
+        cfg = self.cfg
+        specs = dict(embed_specs(cfg))
+        specs["layers"] = stack_specs(self.block_specs(), cfg.n_layers)
+        if cfg.family == "vlm":
+            # projector from (stubbed) vision embeddings into d_model
+            specs["projector"] = ParamSpec(
+                (cfg.d_model, cfg.d_model), ("embed", None), dtype=cfg.dtype)
+        return specs
+
+    # --- block ----------------------------------------------------------
+    def _block(self, p, x, positions, cache=None, cache_index=None,
+               window=0, prefix_len=0, causal=True):
+        cfg = self.cfg
+        h, kvc = attention(p["attn"], rms_norm(x, p["ln1"]), cfg,
+                           positions=positions, cache=cache,
+                           cache_index=cache_index, window=window,
+                           causal=causal, prefix_len=prefix_len)
+        x = x + h
+        aux = jnp.zeros((), jnp.float32)
+        if self.is_moe:
+            y, aux = moe_ffn(p["moe"], rms_norm(x, p["ln2"]), cfg)
+            if cfg.n_shared_experts:
+                y = y + shared_expert_ffn(p["moe"], rms_norm(x, p["ln2"]),
+                                          cfg)
+        else:
+            y = ffn(p["ffn"], rms_norm(x, p["ln2"]), cfg)
+        return x + y, kvc, aux
+
+    def _run(self, params, x, positions, cache=None, cache_index=None,
+             window=0, prefix_len=0, remat=False):
+        def body(carry, per_layer):
+            xc, aux = carry
+            pl, cl = per_layer
+            y, kvc, a = self._block(pl, xc, positions, cache=cl,
+                                    cache_index=cache_index, window=window,
+                                    prefix_len=prefix_len)
+            return (y, aux + a), kvc
+
+        if remat:
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        (x, aux), kv = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                    (params["layers"], cache))
+        return x, aux, kv
+
+    # --- public protocol --------------------------------------------------
+    def loss(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = _embed(params, tokens)
+        if cfg.family == "vlm":
+            fe = batch["frontend"]
+            fe = jnp.einsum("bfd,de->bfe", fe, params["projector"])
+            x = jnp.concatenate([fe.astype(x.dtype), x], axis=1)
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, aux, _ = self._run(params, x, positions,
+                              window=cfg.sliding_window, remat=True)
+        if cfg.family == "vlm":
+            x = x[:, cfg.n_frontend_tokens:]
+        ce = ce_loss(params, x, batch["labels"], cfg)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        x = _embed(params, batch["tokens"])
+        if cfg.family == "vlm" and "frontend" in batch:
+            fe = jnp.einsum("bfd,de->bfe", batch["frontend"],
+                            params["projector"])
+            x = jnp.concatenate([fe.astype(x.dtype), x], axis=1)
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, _, kv = self._run(params, x, positions,
+                             window=cfg.sliding_window)
+        return _logits(params, x[:, -1:]), kv
+
+    def decode_step(self, params, cache, batch):
+        positions = batch["pos"][:, None]
+        x = _embed(params, batch["token"])
+        x, _, kv = self._run(params, x, positions, cache=cache,
+                             cache_index=batch["pos"])
+        return _logits(params, x), kv
+
+    def cache_specs(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        S = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+        cache_dt = jnp.int8 if cfg.kv_quant else jnp.dtype(cfg.dtype)
+        kv_sds = jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, S, cfg.n_kv_heads, cfg.head_dim),
+            cache_dt)
+        # long-context dense decode: shard the cache sequence over "data"
+        seq_ax = "kv_seq" if (batch == 1 and seq_len >= 65536) else None
+        axes = ("layers", "batch", seq_ax, "kv_heads", None)
+        if cfg.kv_quant:
+            sc_sds = jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, S, cfg.n_kv_heads, 1), jnp.float32)
+            return ((kv_sds, kv_sds, sc_sds, sc_sds),
+                    (axes, axes, axes, axes))
+        return (kv_sds, kv_sds), (axes, axes)
+
+    def init_cache(self, batch: int, seq_len: int):
+        (ks, vs), _ = self.cache_specs(batch, seq_len)
+        return (jnp.zeros(ks.shape, ks.dtype), jnp.zeros(vs.shape, vs.dtype))
+
+    def batch_specs(self, shape: InputShape):
+        specs = super().batch_specs(shape)
+        cfg = self.cfg
+        if cfg.family == "vlm" and shape.kind != "decode":
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.n_frontend_tokens, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        return specs
+
+    def batch_axes(self, shape: InputShape):
+        axes = super().batch_axes(shape)
+        if self.cfg.family == "vlm" and shape.kind != "decode":
+            axes["frontend"] = ("batch", "frames", "embed")
+        return axes
+
+
+# ===========================================================================
+# SSM stacks (Mamba2 / RWKV6)
+# ===========================================================================
+
+
+class SSMModel(BaseModel):
+    """Attention-free stack; decode state is O(1) in sequence length."""
+
+    @property
+    def is_mamba(self):
+        return self.cfg.family == "ssm_mamba2"
+
+    def block_specs(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        mixer = (ssm_lib.mamba2_specs(cfg) if self.is_mamba
+                 else ssm_lib.rwkv6_specs(cfg))
+        return {
+            "ln1": ParamSpec((d,), ("embed",), init="ones"),
+            "ln2": ParamSpec((d,), ("embed",), init="ones"),
+            "mixer": mixer,
+            "ffn": ffn_specs(cfg),
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        specs = dict(embed_specs(cfg))
+        specs["layers"] = stack_specs(self.block_specs(), cfg.n_layers)
+        return specs
+
+    def _mix(self, p, x, state, decode):
+        cfg = self.cfg
+        if self.is_mamba:
+            if decode:
+                return ssm_lib.mamba2_decode(p, x, cfg, state)
+            return ssm_lib.mamba2_forward(p, x, cfg, state)
+        return ssm_lib.rwkv6_forward(p, x, cfg, state)
+
+    def _run(self, params, x, state=None, decode=False, remat=False):
+        def body(xc, per_layer):
+            pl, sl = per_layer
+            h, s2 = self._mix(pl["mixer"], rms_norm(xc, pl["ln1"]), sl,
+                              decode)
+            xc = xc + h
+            xc = xc + ffn(pl["ffn"], rms_norm(xc, pl["ln2"]), self.cfg)
+            return xc, s2
+
+        if remat:
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        x, states = jax.lax.scan(body, x, (params["layers"], state))
+        return x, states
+
+    def _zero_state(self, batch):
+        sds, _ = self.cache_specs(batch, 0)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
+
+    def loss(self, params, batch):
+        x = _embed(params, batch["tokens"])
+        x, _ = self._run(params, x, state=self._zero_state(x.shape[0]),
+                         remat=True)
+        ce = ce_loss(params, x, batch["labels"], self.cfg)
+        return ce, {"ce": ce}
+
+    def prefill(self, params, batch):
+        x = _embed(params, batch["tokens"])
+        x, states = self._run(params, x,
+                              state=self._zero_state(x.shape[0]))
+        return _logits(params, x[:, -1:]), states
+
+    def decode_step(self, params, cache, batch):
+        x = _embed(params, batch["token"])
+        x, states = self._run(params, x, state=cache, decode=True)
+        return _logits(params, x), states
+
+    def cache_specs(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        per = (ssm_lib.mamba2_state_specs(cfg, batch) if self.is_mamba
+               else ssm_lib.rwkv6_state_specs(cfg, batch))
+        sds = tuple(jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype)
+                    for s, _ in per)
+        axes = tuple(("layers",) + a for _, a in per)
+        return sds, axes
+
+    def init_cache(self, batch: int, seq_len: int):
+        sds, _ = self.cache_specs(batch, seq_len)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
+
+
+# ===========================================================================
+# Hybrid (Zamba2): mamba2 backbone + shared attention blocks
+# ===========================================================================
+
+
+class HybridModel(BaseModel):
+    """``n_layers`` mamba blocks; a *shared-weight* GQA block (with
+    per-invocation LoRA on the query projection) is applied after every
+    ``attn_every`` mamba layers — Zamba2's shared-attention pattern."""
+
+    LORA_R = 32
+
+    def __init__(self, cfg):
+        super().__init__(cfg)
+        self.n_sections = cfg.n_layers // cfg.attn_every
+        self.n_tail = cfg.n_layers - self.n_sections * cfg.attn_every
+
+    def param_specs(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        mamba_block = {
+            "ln1": ParamSpec((d,), ("embed",), init="ones"),
+            "ln2": ParamSpec((d,), ("embed",), init="ones"),
+            "mixer": ssm_lib.mamba2_specs(cfg),
+            "ffn": ffn_specs(cfg),
+        }
+        specs = dict(embed_specs(cfg))
+        specs["sections"] = stack_specs(
+            stack_specs(mamba_block, cfg.attn_every), self.n_sections)
+        if self.n_tail:
+            specs["tail"] = stack_specs(mamba_block, self.n_tail)
+        specs["shared_attn"] = {
+            "ln": ParamSpec((d,), ("embed",), init="ones"),
+            "attn": attention_specs(cfg),
+            "lora_a": ParamSpec((self.n_sections, d, self.LORA_R),
+                                (None, "embed", None), dtype=cfg.dtype),
+            "lora_b": ParamSpec(
+                (self.n_sections, self.LORA_R, cfg.n_heads, cfg.head_dim),
+                (None, None, "heads", None), init="zeros", dtype=cfg.dtype),
+        }
+        return specs
+
+    def _mamba_scan(self, stacked, x, states, decode, remat=False):
+        def body(xc, per_layer):
+            pl, sl = per_layer
+            fwd = ssm_lib.mamba2_decode if decode else ssm_lib.mamba2_forward
+            h, s2 = fwd(pl["mixer"], rms_norm(xc, pl["ln1"]), self.cfg, sl)
+            xc = xc + h
+            xc = xc + ffn(pl["ffn"], rms_norm(xc, pl["ln2"]), self.cfg)
+            return xc, s2
+
+        if remat:
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        return jax.lax.scan(body, x, (stacked, states))
+
+    def _shared_attn(self, params, x, sec, positions, cache=None,
+                     cache_index=None):
+        p = params["shared_attn"]
+        xn = rms_norm(x, p["ln"])
+        lora = jnp.einsum("bsd,dr,rhk->bshk", xn, p["lora_a"][sec],
+                          p["lora_b"][sec])
+        h, kv = attention(p["attn"], xn, self.cfg, positions=positions,
+                          cache=cache, cache_index=cache_index)
+        return x + h + jnp.einsum("bshk,hkd->bsd", lora,
+                                  p["attn"]["wo"]), kv
+
+    def _run(self, params, x, mstates, astates, positions, decode,
+             cache_index=None, remat=False):
+        cfg = self.cfg
+        new_m, new_a = [], []
+        shared_fn = self._shared_attn
+        if remat:
+            # the 6 shared-attention invocations are python-unrolled (not
+            # inside the mamba scan); without remat each keeps its (B, H,
+            # S, S) f32 score tensor + qkv alive for the backward pass —
+            # ~13 GB/chip at train_4k (see EXPERIMENTS.md §Perf zamba2-i2)
+            shared_fn = jax.checkpoint(
+                self._shared_attn, static_argnums=(2,),
+                policy=jax.checkpoint_policies.nothing_saveable)
+        for sec in range(self.n_sections):
+            stacked = jax.tree.map(lambda t: t[sec], params["sections"])
+            st = jax.tree.map(lambda t: t[sec], mstates["sections"])
+            x, s2 = self._mamba_scan(stacked, x, st, decode, remat)
+            new_m.append(s2)
+            ac = (jax.tree.map(lambda t: t[sec], astates)
+                  if astates is not None else None)
+            x, kv = shared_fn(params, x, sec, positions,
+                              cache=ac, cache_index=cache_index)
+            new_a.append(kv)
+        if self.n_tail:
+            x, s_tail = self._mamba_scan(params["tail"], x,
+                                         mstates["tail"], decode, remat)
+        else:
+            s_tail = mstates["tail"]
+        mst = {"sections": jax.tree.map(lambda *t: jnp.stack(t), *new_m),
+               "tail": s_tail}
+        ast = jax.tree.map(lambda *t: jnp.stack(t), *new_a)
+        return x, mst, ast
+
+    def _zero_mstates(self, batch):
+        sds, _ = self._mstate_specs(batch)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
+
+    def _mstate_specs(self, batch):
+        cfg = self.cfg
+        per = ssm_lib.mamba2_state_specs(cfg, batch)
+        def stk(n):
+            sds = tuple(jax.ShapeDtypeStruct((n,) + s.shape, s.dtype)
+                        for s, _ in per)
+            axes = tuple(("layers",) + a for _, a in per)
+            return sds, axes
+        sec_sds, sec_axes = stk(cfg.attn_every)
+        sds = {"sections": tuple(
+            jax.ShapeDtypeStruct((self.n_sections,) + s.shape, s.dtype)
+            for s in sec_sds)}
+        axes = {"sections": tuple(("sections",) + a for a in sec_axes)}
+        tail_sds, tail_axes = stk(max(self.n_tail, 1))
+        sds["tail"] = tail_sds
+        axes["tail"] = tail_axes
+        return sds, axes
+
+    def loss(self, params, batch):
+        x = _embed(params, batch["tokens"])
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, _, _ = self._run(params, x, self._zero_mstates(x.shape[0]), None,
+                            positions, decode=False, remat=True)
+        ce = ce_loss(params, x, batch["labels"], self.cfg)
+        return ce, {"ce": ce}
+
+    def prefill(self, params, batch):
+        x = _embed(params, batch["tokens"])
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, mst, ast = self._run(params, x, self._zero_mstates(x.shape[0]),
+                                None, positions, decode=False)
+        return _logits(params, x[:, -1:]), {"m": mst, "a": ast}
+
+    def decode_step(self, params, cache, batch):
+        x = _embed(params, batch["token"])
+        positions = batch["pos"][:, None]
+        x, mst, ast = self._run(params, x, cache["m"], cache["a"],
+                                positions, decode=True,
+                                cache_index=batch["pos"])
+        return _logits(params, x), {"m": mst, "a": ast}
+
+    def cache_specs(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        m_sds, m_axes = self._mstate_specs(batch)
+        S = max(seq_len, 1)
+        seq_ax = "kv_seq" if (batch == 1 and seq_len >= 65536) else None
+        kv_sds = jax.ShapeDtypeStruct(
+            (self.n_sections, batch, S, cfg.n_kv_heads, cfg.head_dim),
+            jnp.dtype(cfg.dtype))
+        kv_axes = ("sections", "batch", seq_ax, "kv_heads", None)
+        return ({"m": m_sds, "a": (kv_sds, kv_sds)},
+                {"m": m_axes, "a": (kv_axes, kv_axes)})
+
+    def init_cache(self, batch: int, seq_len: int):
+        sds, _ = self.cache_specs(batch, seq_len)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)

@@ -1,0 +1,165 @@
+"""Encoder-decoder backbone (SeamlessM4T-v2 style, audio frontend stubbed).
+
+The speech frontend (mel filterbank + conformer feature extractor) is a
+stub per the assignment: ``batch_specs`` exposes precomputed frame
+embeddings (B, F, d_model).  This module implements the transformer
+encoder over those frames and the causal text decoder with
+self-attention KV cache + cross-attention to the encoder output.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .arch import (BaseModel, _embed, _logits, ce_loss, embed_specs,
+                   stack_specs)
+from .config import InputShape
+from .layers import (ParamSpec, attention, attention_specs, cross_entropy,
+                     ffn, ffn_specs, rms_norm)
+from .partitioning import constrain
+
+
+class EncDecModel(BaseModel):
+    def enc_block_specs(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        return {
+            "ln1": ParamSpec((d,), ("embed",), init="ones"),
+            "ln2": ParamSpec((d,), ("embed",), init="ones"),
+            "attn": attention_specs(cfg),
+            "ffn": ffn_specs(cfg),
+        }
+
+    def dec_block_specs(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        return {
+            "ln1": ParamSpec((d,), ("embed",), init="ones"),
+            "lnx": ParamSpec((d,), ("embed",), init="ones"),
+            "ln2": ParamSpec((d,), ("embed",), init="ones"),
+            "attn": attention_specs(cfg),
+            "xattn": attention_specs(cfg),
+            "ffn": ffn_specs(cfg),
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        specs = dict(embed_specs(cfg))
+        specs["encoder"] = stack_specs(self.enc_block_specs(),
+                                       cfg.n_enc_layers)
+        specs["decoder"] = stack_specs(self.dec_block_specs(), cfg.n_layers)
+        specs["enc_norm"] = ParamSpec((cfg.d_model,), ("embed",),
+                                      init="ones")
+        return specs
+
+    # --- encoder ---------------------------------------------------------
+    def encode(self, params, frames, remat=False):
+        cfg = self.cfg
+        positions = jnp.arange(frames.shape[1])[None, :]
+
+        def body(x, pl):
+            h, _ = attention(pl["attn"], rms_norm(x, pl["ln1"]), cfg,
+                             positions=positions, causal=False)
+            x = x + h
+            x = x + ffn(pl["ffn"], rms_norm(x, pl["ln2"]), cfg)
+            return x, None
+
+        if remat:
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, frames, params["encoder"])
+        return rms_norm(x, params["enc_norm"])
+
+    # --- decoder ---------------------------------------------------------
+    def _dec_run(self, params, x, positions, enc=None, self_cache=None,
+                 cross_kv=None, cache_index=None, remat=False):
+        cfg = self.cfg
+
+        def body(xc, per_layer):
+            pl, sc, xkv = per_layer
+            h, kvc = attention(pl["attn"], rms_norm(xc, pl["ln1"]), cfg,
+                               positions=positions, cache=sc,
+                               cache_index=cache_index)
+            xc = xc + h
+            if xkv is None:  # compute cross-KV from encoder output
+                xn = rms_norm(xc, pl["lnx"])
+                ek = jnp.einsum("bfd,dhk->bfhk", enc, pl["xattn"]["wk"])
+                ev = jnp.einsum("bfd,dhk->bfhk", enc, pl["xattn"]["wv"])
+            else:
+                xn = rms_norm(xc, pl["lnx"])
+                ek, ev = xkv
+            h, _ = attention(pl["xattn"], xn, cfg, positions=positions,
+                             kv_override=(ek, ev), causal=False)
+            xc = xc + h
+            xc = xc + ffn(pl["ffn"], rms_norm(xc, pl["ln2"]), cfg)
+            return xc, (kvc, (ek, ev))
+
+        if remat:
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        x, (kv, xkv) = jax.lax.scan(
+            body, x, (params["decoder"], self_cache, cross_kv))
+        return x, kv, xkv
+
+    # --- protocol ----------------------------------------------------------
+    def loss(self, params, batch):
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"], remat=True)
+        x = _embed(params, batch["tokens"])
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, _, _ = self._dec_run(params, x, positions, enc=enc, remat=True)
+        ce = ce_loss(params, x, batch["labels"], cfg)
+        return ce, {"ce": ce}
+
+    def prefill(self, params, batch):
+        enc = self.encode(params, batch["frames"])
+        x = _embed(params, batch["tokens"])
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, kv, xkv = self._dec_run(params, x, positions, enc=enc)
+        return _logits(params, x[:, -1:]), {"self": kv, "cross": xkv}
+
+    def decode_step(self, params, cache, batch):
+        x = _embed(params, batch["token"])
+        positions = batch["pos"][:, None]
+        x, kv, xkv = self._dec_run(params, x, positions,
+                                   self_cache=cache["self"],
+                                   cross_kv=cache["cross"],
+                                   cache_index=batch["pos"])
+        return _logits(params, x), {"self": kv, "cross": xkv}
+
+    def cache_specs(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        F = cfg.n_frontend_tokens
+        kv = jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, seq_len, cfg.n_kv_heads, cfg.head_dim),
+            jnp.dtype(cfg.dtype))
+        xkv = jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, F, cfg.n_kv_heads, cfg.head_dim),
+            jnp.dtype(cfg.dtype))
+        seq_ax = "kv_seq" if (batch == 1 and seq_len >= 65536) else None
+        kv_axes = ("layers", "batch", seq_ax, "kv_heads", None)
+        xkv_axes = ("layers", "batch", None, "kv_heads", None)
+        return ({"self": (kv, kv), "cross": (xkv, xkv)},
+                {"self": (kv_axes, kv_axes), "cross": (xkv_axes, xkv_axes)})
+
+    def init_cache(self, batch: int, seq_len: int):
+        sds, _ = self.cache_specs(batch, seq_len)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
+
+    def batch_specs(self, shape: InputShape):
+        specs = super().batch_specs(shape)
+        cfg = self.cfg
+        if shape.kind != "decode":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.n_frontend_tokens, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        return specs
+
+    def batch_axes(self, shape: InputShape):
+        axes = super().batch_axes(shape)
+        if shape.kind != "decode":
+            axes["frames"] = ("batch", "frames", "embed")
+        return axes

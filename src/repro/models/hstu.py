@@ -1,0 +1,210 @@
+"""HSTU generative-recommendation backbone (Zhai et al., 2024) — the GR
+model family served by RelayGR.
+
+HSTU replaces softmax attention with a pointwise aggregated attention:
+
+    U, V, Q, K = split(SiLU(f1(norm(x))))
+    A          = SiLU(Q K^T / sqrt(d)) / n        (no softmax)
+    y          = x + f2(norm(A V) * U)
+
+The per-layer (K, V) tensors of the *user-behaviour prefix* are exactly
+the cache object psi(u) RelayGR pre-infers and relays across pipeline
+stages.  ``rank_with_cache`` consumes psi: incremental tokens
+(short-term behaviours + cross features) attend causally, candidate
+items attend to prefix+incremental but NOT to each other (independent
+scoring), and a task tower maps each item position to a score.
+
+This file is the pure-JAX reference; the Pallas kernels in
+``repro.kernels`` (hstu_attn, prefix_rank_attn) implement the same
+contractions with VMEM tiling for TPU.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .arch import (BaseModel, _embed, _logits, ce_loss, embed_specs,
+                   stack_specs)
+from .config import InputShape, ModelConfig
+from .layers import ParamSpec, apply_rope, cross_entropy, rms_norm
+from .partitioning import constrain
+
+
+def hstu_block_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, h, hd, dt = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.dtype
+    return {
+        "ln": ParamSpec((d,), ("embed",), init="ones"),
+        "uvqk": ParamSpec((d, 4, h, hd), ("embed", None, "heads", None),
+                          dtype=dt),
+        "ln_attn": ParamSpec((h * hd,), ("heads",), init="ones"),
+        "wo": ParamSpec((h, hd, d), ("heads", None, "embed"), dtype=dt),
+    }
+
+
+def hstu_attention(q, k, v, mask, n_total: float):
+    """Pointwise SiLU attention (no softmax). q,k,v: (B,S,H,D)."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * scale
+    a = jax.nn.silu(logits) / n_total
+    if mask is not None:
+        a = jnp.where(mask, a, 0.0)
+    return jnp.einsum("bhqs,bshd->bqhd", a.astype(v.dtype), v)
+
+
+def rank_mask(n_prefix: int, n_incr: int, n_items: int):
+    """Attention mask for ranking-with-cache.
+
+    Queries: [incr tokens | item tokens]; keys: [prefix | incr | items].
+    Incr tokens: causal over prefix+incr.  Items: see prefix+incr+self
+    only (candidate independence)."""
+    Sq = n_incr + n_items
+    Sk = n_prefix + n_incr + n_items
+    qi = jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Sk)[None, :]
+    causal = ki <= (qi + n_prefix)
+    is_item_q = qi >= n_incr
+    is_item_k = ki >= n_prefix + n_incr
+    self_key = ki == (qi + n_prefix)
+    items_ok = jnp.where(is_item_q, (~is_item_k) | self_key, True)
+    return (causal & items_ok)[None, None, :, :]
+
+
+class HSTUModel(BaseModel):
+    """Implements both the LM-style protocol (for dry-run parity) and the
+    RelayGR prefix/rank protocol used by the serving engine."""
+
+    def block_specs(self):
+        return hstu_block_specs(self.cfg)
+
+    def param_specs(self):
+        cfg = self.cfg
+        specs = dict(embed_specs(cfg))
+        specs["layers"] = stack_specs(self.block_specs(), cfg.n_layers)
+        if cfg.n_tasks:
+            d = cfg.d_model
+            specs["task_tower"] = {
+                "w1": ParamSpec((d, 4 * d), ("embed", "ff"), dtype=cfg.dtype),
+                "w2": ParamSpec((4 * d, cfg.n_tasks), ("ff", None),
+                                dtype=cfg.dtype),
+            }
+        return specs
+
+    # --- core block -------------------------------------------------------
+    def _block(self, p, x, positions, mask, cache=None, n_total=None):
+        cfg = self.cfg
+        h, hd = cfg.n_heads, cfg.head_dim
+        B, S, d = x.shape
+        xn = rms_norm(x, p["ln"])
+        uvqk = jax.nn.silu(jnp.einsum("bsd,dfhk->bsfhk", xn, p["uvqk"]))
+        u, v, q, k = [uvqk[:, :, i] for i in range(4)]
+        if cfg.rope_theta:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        if cache is not None:
+            pk, pv = cache  # cached prefix (B, P, H, D)
+            k_all = jnp.concatenate([pk, k], axis=1)
+            v_all = jnp.concatenate([pv, v], axis=1)
+        else:
+            k_all, v_all = k, v
+        nt = n_total or k_all.shape[1]
+        if cfg.use_flash_kernels and mask is None and cache is not None:
+            from repro.kernels import ops as kops
+            av = kops.hstu_attention(q, k_all, v_all, n_total=nt)
+        else:
+            av = hstu_attention(q, k_all, v_all, mask, nt)
+        av = rms_norm(av.reshape(B, S, h * hd),
+                      p["ln_attn"]).reshape(B, S, h, hd)
+        gated = av * u
+        y = jnp.einsum("bshk,hkd->bsd", gated, p["wo"])
+        return x + constrain(y, ("batch", "seq", "embed")), (k, v)
+
+    def _run(self, params, x, positions, mask, cache=None, remat=False):
+        def body(xc, per_layer):
+            pl, cl = per_layer
+            y, kv = self._block(pl, xc, positions, mask, cache=cl)
+            return y, kv
+
+        if remat:
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        return jax.lax.scan(body, x, (params["layers"], cache))
+
+    # --- LM-style protocol (dry-run parity with other archs) ---------------
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x = _embed(params, batch["tokens"])
+        S = x.shape[1]
+        positions = jnp.arange(S)[None, :]
+        mask = jnp.tril(jnp.ones((S, S), bool))[None, None]
+        x, _ = self._run(params, x, positions, mask, remat=True)
+        ce = ce_loss(params, x, batch["labels"], cfg)
+        return ce, {"ce": ce}
+
+    def prefill(self, params, batch):
+        """Pre-inference: compute psi = per-layer (K, V) of the prefix."""
+        x = _embed(params, batch["tokens"])
+        S = x.shape[1]
+        positions = jnp.arange(S)[None, :]
+        mask = jnp.tril(jnp.ones((S, S), bool))[None, None]
+        x, kv = self._run(params, x, positions, mask)
+        return _logits(params, x[:, -1:]), kv
+
+    def decode_step(self, params, cache, batch):
+        x = _embed(params, batch["token"])
+        positions = batch["pos"][:, None]
+        x, _ = self._run(params, x, positions, None, cache=cache)
+        return _logits(params, x), cache
+
+    # --- RelayGR rank protocol ---------------------------------------------
+    def rank_with_cache(self, params, cache, incr_tokens, item_tokens):
+        """Score candidate items reusing the cached prefix psi.
+
+        cache: per-layer (K, V) stacked (L, B, P, H, D) — or None for the
+        fallback full-inference path (then incr_tokens must contain the
+        full behaviour sequence).
+        Returns (scores (B, n_items, n_tasks), updated hidden).
+        """
+        cfg = self.cfg
+        B, n_incr = incr_tokens.shape
+        n_items = item_tokens.shape[1]
+        n_prefix = 0 if cache is None else cache[0].shape[2]
+        x = _embed(params, jnp.concatenate([incr_tokens, item_tokens],
+                                           axis=1))
+        positions = (n_prefix + jnp.arange(n_incr + n_items))[None, :]
+        mask = rank_mask(n_prefix, n_incr, n_items)
+        x, _ = self._run(params, x, positions, mask, cache=cache)
+        items_h = x[:, n_incr:]
+        tw = params["task_tower"]
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", items_h, tw["w1"]))
+        scores = jnp.einsum("bsf,ft->bst", h, tw["w2"])
+        return scores
+
+    def full_rank(self, params, prefix_tokens, incr_tokens, item_tokens):
+        """Baseline: full inference with the long prefix on the critical
+        path (no cache)."""
+        _, kv = self.prefill(params, {"tokens": prefix_tokens})
+        return self.rank_with_cache(params, kv, incr_tokens, item_tokens)
+
+    def cache_specs(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        kv = jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, seq_len, cfg.n_heads, cfg.head_dim),
+            jnp.dtype(cfg.dtype))
+        seq_ax = "kv_seq" if (batch == 1 and seq_len >= 65536) else None
+        axes = ("layers", "batch", seq_ax, "heads", None)
+        return (kv, kv), (axes, axes)
+
+    def init_cache(self, batch: int, seq_len: int):
+        sds, _ = self.cache_specs(batch, seq_len)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
+
+    def kv_bytes(self, seq_len: int) -> int:
+        """psi footprint per user — drives trigger admission control."""
+        cfg = self.cfg
+        sds, _ = self.cache_specs(1, seq_len)
+        return sum(int(np.prod(s.shape)) * s.dtype.itemsize
+                   for s in jax.tree.leaves(sds))

@@ -1,0 +1,145 @@
+"""Logical-axis partitioning rules.
+
+Model code annotates tensors with *logical* axis names ("batch", "heads",
+"ff", "vocab", "experts", ...).  A thread-local rule set maps logical axes
+to mesh axes; outside of a mesh context every annotation is a no-op, so
+the same model code runs on one CPU device and on a 512-chip mesh.
+
+Weights additionally get a *param spec* derived from the same rules, used
+for ``in_shardings`` when lowering.  FSDP-style weight sharding (ZeRO-3 on
+the "data" axis) is switched per-mesh via ``fsdp=True``: the largest
+non-model-sharded dimension of every weight is sharded over "data".
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_tls = threading.local()
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "heads": "model",
+    "kv_heads": "model",      # dropped per-arch when not divisible
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "embed": None,            # becomes ("data",) under fsdp
+    "opt_data": "data",       # ZeRO-2: optimizer-state-only sharding
+    "kv_seq": None,           # long-context decode shards cache seq on data
+    "seq": None,
+    "ssm_heads": "model",
+    "rwkv_heads": "model",
+    "ssm_state": None,
+    "frames": None,
+}
+
+
+class Rules:
+    def __init__(self, mesh: Optional[Mesh], overrides=None, fsdp: bool = False):
+        self.mesh = mesh
+        self.fsdp = fsdp
+        self.table = dict(DEFAULT_RULES)
+        if overrides:
+            self.table.update(overrides)
+        if fsdp:
+            self.table["embed"] = "data"
+        if mesh is not None:
+            names = set(mesh.axis_names)
+            resolved = {}
+            for k, v in self.table.items():
+                if v is None or v == "":
+                    resolved[k] = None
+                elif isinstance(v, tuple):
+                    kept = tuple(a for a in v if a in names)
+                    resolved[k] = kept if kept else None
+                else:
+                    resolved[k] = v if v in names else None
+            self.table = resolved
+
+    def axis_size(self, mesh_axis) -> int:
+        if self.mesh is None or mesh_axis is None:
+            return 1
+        if isinstance(mesh_axis, tuple):
+            n = 1
+            for a in mesh_axis:
+                n *= self.mesh.shape[a]
+            return n
+        return self.mesh.shape[mesh_axis]
+
+    def spec(self, logical: Sequence[Optional[str]], shape=None) -> P:
+        """Map logical axis names to a PartitionSpec.
+
+        If ``shape`` is given, any axis whose size does not divide evenly
+        by the mesh-axis size is dropped to None (replicated) — this is
+        how e.g. 36 attention heads on a 16-way model axis degrade
+        gracefully to replicated attention.
+        """
+        out = []
+        used = set()
+        for i, name in enumerate(logical):
+            m = self.table.get(name) if name else None
+            if m is not None and shape is not None:
+                if shape[i] % self.axis_size(m) != 0:
+                    m = None
+            # a mesh axis may appear at most once in a spec
+            key = m if not isinstance(m, tuple) else m
+            if m is not None:
+                flat = m if isinstance(m, tuple) else (m,)
+                if any(a in used for a in flat):
+                    m = None
+                else:
+                    used.update(flat)
+            out.append(m)
+        return P(*out)
+
+
+@contextlib.contextmanager
+def logical_rules(mesh: Optional[Mesh], overrides=None, fsdp: bool = False):
+    prev = getattr(_tls, "rules", None)
+    _tls.rules = Rules(mesh, overrides, fsdp)
+    try:
+        yield _tls.rules
+    finally:
+        _tls.rules = prev
+
+
+def current_rules() -> Optional[Rules]:
+    return getattr(_tls, "rules", None)
+
+
+def constrain(x, logical: Sequence[Optional[str]]):
+    """Apply a sharding constraint inside jit, or no-op without a mesh."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    spec = rules.spec(logical, shape=x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec)
+    )
+
+
+def sharding_for(logical: Sequence[Optional[str]], shape) -> Optional[NamedSharding]:
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return None
+    return NamedSharding(rules.mesh, rules.spec(logical, shape=shape))
+
+
+def tree_shardings(mesh: Mesh, tree_logical, tree_shapes, fsdp: bool = False):
+    """Build a NamedSharding pytree from parallel pytrees of logical axes
+    and shapes (ShapeDtypeStructs)."""
+    rules = Rules(mesh, fsdp=fsdp)
+
+    def one(logical, sds):
+        return NamedSharding(mesh, rules.spec(logical, shape=sds.shape))
+
+    return jax.tree.map(one, tree_logical, tree_shapes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,265 @@
+"""State-space sequence layers: Mamba2 (SSD) and RWKV6 (Finch).
+
+TPU adaptation notes (see DESIGN.md):
+  * Mamba2 uses the chunked SSD formulation — intra-chunk work is plain
+    batched matmul (MXU-friendly) and only the inter-chunk recurrence is a
+    ``lax.scan`` over ``L/chunk`` steps.  This replaces the CUDA selective
+    -scan kernel with a matmul-dominant algorithm natural to the MXU.
+  * RWKV6 keeps a time-step ``lax.scan`` for the prefill path (the decode
+    path is O(1) per token) — its recurrence is rank-1 per step and does
+    not benefit from chunking as much; heads shard over the model axis.
+
+Both expose a recurrent state usable as the "KV cache" analogue for the
+decode input shapes: Mamba2 state (B, H, N, P); RWKV6 state (B, H, N, P)
+plus the token-shift buffer.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamSpec, rms_norm
+from .partitioning import constrain
+
+MAMBA_CHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_specs(cfg) -> Dict[str, ParamSpec]:
+    d, di, N, H, P = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.n_ssm_heads, cfg.ssm_head_dim)
+    dt = cfg.dtype
+    return {
+        # in_proj -> [z(di), x(di), B(N), C(N), dt(H)]
+        "w_in": ParamSpec((d, 2 * di + 2 * N + H), ("embed", "ff"), dtype=dt),
+        "conv": ParamSpec((cfg.ssm_conv, di + 2 * N), (None, "ff"),
+                          init="normal", scale=0.5, dtype=dt),
+        "A_log": ParamSpec((H,), ("ssm_heads",), init="value", value=0.0),
+        "D": ParamSpec((H,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), init="zeros"),
+        "norm": ParamSpec((di,), ("ff",), init="ones"),
+        "w_out": ParamSpec((di, d), ("ff", "embed"), dtype=dt),
+    }
+
+
+def _mamba_split(params, u, cfg):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    proj = jnp.einsum("bld,de->ble", u, params["w_in"])
+    z, xBC, dt = jnp.split(proj, [di, 2 * di + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, weight, state=None):
+    """Depthwise causal conv along time. state: (B, K-1, C) history."""
+    K = weight.shape[0]
+    if state is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[-1]), xBC.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    out = sum(xp[:, i:i + xBC.shape[1]] * weight[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_forward(params, u, cfg, state=None):
+    """u: (B, L, d).  Returns (y, (ssm_state, conv_state)).
+
+    ``state``: optional (ssm_state (B,H,N,P), conv_state (B,K-1,C)) to
+    continue from (prefix-cache / decode continuation).
+    """
+    B, L, d = u.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    Q = min(MAMBA_CHUNK, L)
+    ssm0 = state[0] if state is not None else jnp.zeros(
+        (B, H, N, P), jnp.float32)
+    conv0 = state[1] if state is not None else None
+
+    z, xBC, dtr = _mamba_split(params, u, cfg)
+    xBC, conv_state = _causal_conv(xBC, params["conv"], conv0)
+    x, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+    x = x.reshape(B, L, H, P)
+    x = constrain(x, ("batch", "seq", "ssm_heads", None))
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)
+                         + params["dt_bias"])           # (B, L, H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))   # (H,) negative
+    la = dt * A                                         # log-decay <= 0
+
+    nc = max(L // Q, 1)
+    xc = x.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, H)
+    lac = la.reshape(B, nc, Q, H)
+    cum = jnp.cumsum(lac, axis=2)                       # (B,nc,Q,H)
+
+    # intra-chunk (matmul-dominant)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)      # (B,nc,Q,Q)
+    dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # t - t'
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(causal[None, None, :, :, None],
+                  jnp.exp(dec), 0.0)                    # (B,nc,Q,Q,H)
+    Mx = M * scores[..., None] * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", Mx, xc)
+
+    # chunk summaries -> inter-chunk scan
+    tail = cum[:, :, -1:, :] - cum                      # decay to chunk end
+    S_c = jnp.einsum("bcqn,bcqh,bcqhp->bchnp",
+                     Bc, jnp.exp(tail) * dtc, xc)       # (B,nc,H,N,P)
+    a_tot = jnp.exp(cum[:, :, -1, :])                   # (B,nc,H)
+
+    def step(S, inp):
+        Sc, at = inp
+        S_out = S
+        S = at[..., None, None] * S + Sc
+        return S, S_out
+
+    Sc_t = jnp.moveaxis(S_c, 1, 0)
+    at_t = jnp.moveaxis(a_tot, 1, 0)
+    S_final, S_prev = jax.lax.scan(step, ssm0, (Sc_t, at_t))
+    S_prev = jnp.moveaxis(S_prev, 0, 1)                 # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         Cc, jnp.exp(cum), S_prev)
+    y = (y_intra + y_inter).reshape(B, L, H, P)
+    y = y + params["D"][None, None, :, None] * x.reshape(B, L, H, P)
+    y = y.reshape(B, L, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    out = jnp.einsum("bld,de->ble", y, params["w_out"])
+    return constrain(out, ("batch", "seq", "embed")), (S_final, conv_state)
+
+
+def mamba2_decode(params, u, cfg, state):
+    """Single-token step. u: (B, 1, d); state from mamba2_forward."""
+    B = u.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    ssm, conv = state
+    z, xBC, dtr = _mamba_split(params, u, cfg)
+    xBC, conv = _causal_conv(xBC, params["conv"], conv)
+    x, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+    x = x.reshape(B, H, P).astype(jnp.float32)
+    Bm = Bm[:, 0].astype(jnp.float32)                   # (B,N)
+    Cm = Cm[:, 0].astype(jnp.float32)
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                 # (B,H)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", Bm, dt, x)
+    ssm = a[..., None, None] * ssm + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm, ssm) + params["D"][None, :, None] * x
+    y = y.reshape(B, 1, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    out = jnp.einsum("bld,de->ble", y, params["w_out"])
+    return out, (ssm, conv)
+
+
+def mamba2_state_specs(cfg, batch: int):
+    B, H, N, P = batch, cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    C = cfg.d_inner + 2 * cfg.ssm_state
+    return (
+        (jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+         ("batch", "ssm_heads", None, None)),
+        (jax.ShapeDtypeStruct((B, cfg.ssm_conv - 1, C), jnp.dtype(cfg.dtype)),
+         ("batch", None, "ff")),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) — data-dependent decay
+# ---------------------------------------------------------------------------
+
+RWKV_HEAD = 64
+RWKV_LORA = 64
+
+
+def rwkv6_specs(cfg) -> Dict[str, ParamSpec]:
+    d, dt = cfg.d_model, cfg.dtype
+    H = d // RWKV_HEAD
+    return {
+        "mu": ParamSpec((5, d), (None, "embed"), init="value", value=0.5),
+        "w0": ParamSpec((d,), ("embed",), init="value", value=-4.0),
+        "w_lora_a": ParamSpec((d, RWKV_LORA), ("embed", None), dtype=dt),
+        "w_lora_b": ParamSpec((RWKV_LORA, d), (None, "embed"),
+                              init="zeros", dtype=dt),
+        "wr": ParamSpec((d, d), ("embed", "heads"), dtype=dt),
+        "wk": ParamSpec((d, d), ("embed", "heads"), dtype=dt),
+        "wv": ParamSpec((d, d), ("embed", "heads"), dtype=dt),
+        "wg": ParamSpec((d, d), ("embed", "heads"), dtype=dt),
+        "u": ParamSpec((H, RWKV_HEAD), ("rwkv_heads", None),
+                       init="value", value=0.5),
+        "ln_out": ParamSpec((d,), ("embed",), init="ones"),
+        "w_out": ParamSpec((d, d), ("heads", "embed"), dtype=dt),
+    }
+
+
+def _rwkv_mix(params, x, x_prev):
+    """Token-shift mixing for r,k,v,w,g. x: (B,L,d); x_prev (B,1,d)."""
+    xx = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    mu = params["mu"]                                   # (5, d)
+    mixed = x[None] + (xx - x)[None] * mu[:, None, None, :]
+    return mixed.astype(x.dtype)  # (5, B, L, d) order: r,k,v,w,g
+
+
+def _rwkv_wkv_scan(r, k, v, w, u, state):
+    """r,k,v: (B,L,H,N); w: (B,L,H,N) decay in (0,1); state (B,H,N,N)."""
+    def step(S, inp):
+        rt, kt, vt, wt = inp                            # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]        # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    S, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), S                    # (B,L,H,N)
+
+
+def rwkv6_forward(params, x, cfg, state=None):
+    """x: (B,L,d). state: (wkv (B,H,N,N) f32, shift (B,1,d)).
+
+    Returns (y, new_state)."""
+    B, L, d = x.shape
+    H, N = d // RWKV_HEAD, RWKV_HEAD
+    if state is None:
+        wkv0 = jnp.zeros((B, H, N, N), jnp.float32)
+        shift0 = jnp.zeros((B, 1, d), x.dtype)
+    else:
+        wkv0, shift0 = state
+    xr, xk, xv, xw, xg = _rwkv_mix(params, x, shift0)
+    r = jnp.einsum("bld,de->ble", xr, params["wr"]).reshape(B, L, H, N)
+    k = jnp.einsum("bld,de->ble", xk, params["wk"]).reshape(B, L, H, N)
+    v = jnp.einsum("bld,de->ble", xv, params["wv"]).reshape(B, L, H, N)
+    g = jax.nn.silu(jnp.einsum("bld,de->ble", xg, params["wg"]))
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(xw)))
+    lora = jnp.einsum("blr,rd->bld",
+                      jnp.tanh(jnp.einsum("bld,dr->blr", xw,
+                                          params["w_lora_a"])),
+                      params["w_lora_b"])
+    wlog = params["w0"][None, None, :] + lora.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wlog)).reshape(B, L, H, N)
+    r = constrain(r, ("batch", "seq", "rwkv_heads", None))
+    y, wkv = _rwkv_wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), w,
+                            params["u"].astype(jnp.float32), wkv0)
+    y = y.reshape(B, L, d).astype(x.dtype)
+    y = rms_norm(y, params["ln_out"]) * g
+    out = jnp.einsum("bld,de->ble", y, params["w_out"])
+    new_shift = x[:, -1:, :]
+    return constrain(out, ("batch", "seq", "embed")), (wkv, new_shift)
+
+
+def rwkv6_state_specs(cfg, batch: int):
+    d = cfg.d_model
+    H, N = d // RWKV_HEAD, RWKV_HEAD
+    return (
+        (jax.ShapeDtypeStruct((batch, H, N, N), jnp.float32),
+         ("batch", "rwkv_heads", None, None)),
+        (jax.ShapeDtypeStruct((batch, 1, d), jnp.dtype(cfg.dtype)),
+         ("batch", None, "embed")),
+    )

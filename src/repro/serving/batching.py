@@ -1,0 +1,146 @@
+"""Continuous micro-batching for ranking instances.
+
+The paper's "M model slots" (§3.2, Fig. 7) abstracts NPU-side
+concurrency.  On a real accelerator the equivalent mechanism is
+*batched execution with bucketed shapes*: ranking requests that arrive
+within a short window are grouped by (prefix-bucket, item-count) and
+executed as one jitted call, amortizing dispatch and filling the MXU.
+
+This module implements that layer for the live engine:
+
+  * shape bucketing — prefix lengths round up to power-of-two-ish
+    buckets so the jit cache stays small (a production system would
+    pre-warm these);
+  * a `BatchAggregator` that groups compatible requests up to
+    ``max_batch`` or ``max_wait_ms``;
+  * `BatchedRankExecutor` — drop-in for `LiveExecutor.rank_cached` that
+    pads/stacks per-user psi caches and scores candidates for the whole
+    group in one `rank_with_cache` call.
+
+Correctness contract: batched scores equal per-request scores (same
+mask semantics; padding keys are masked by zero-length contribution) —
+asserted in tests/test_batching.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+BUCKETS = (64, 128, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768)
+
+
+def bucket_of(n: int) -> int:
+    for b in BUCKETS:
+        if n <= b:
+            return b
+    return BUCKETS[-1]
+
+
+@dataclasses.dataclass
+class PendingRank:
+    user_id: int
+    psi: Any                      # per-layer (K, V), (L, 1, P, H, D)
+    prefix_len: int
+    incr: np.ndarray              # (n_incr,)
+    items: np.ndarray             # (n_items,)
+    enqueued_at: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchingConfig:
+    max_batch: int = 8
+    max_wait_ms: float = 2.0
+    max_buckets_live: int = 4     # jit-cache pressure guard
+
+
+class BatchAggregator:
+    """Groups compatible pending requests into executable batches."""
+
+    def __init__(self, cfg: BatchingConfig = BatchingConfig()):
+        self.cfg = cfg
+        self.queues: Dict[Tuple[int, int, int], List[PendingRank]] = \
+            defaultdict(list)
+        self.stats = {"batches": 0, "requests": 0, "max_seen_batch": 0}
+
+    def _key(self, p: PendingRank) -> Tuple[int, int, int]:
+        return (bucket_of(p.prefix_len), len(p.incr), len(p.items))
+
+    def add(self, p: PendingRank, now: float) -> Optional[List[PendingRank]]:
+        """Enqueue; returns a full batch if one is ready."""
+        p.enqueued_at = now
+        q = self.queues[self._key(p)]
+        q.append(p)
+        self.stats["requests"] += 1
+        if len(q) >= self.cfg.max_batch:
+            return self._take(self._key(p))
+        return None
+
+    def expired(self, now: float) -> List[List[PendingRank]]:
+        """Batches whose oldest member exceeded max_wait_ms."""
+        out = []
+        for key in list(self.queues):
+            q = self.queues[key]
+            if q and (now - q[0].enqueued_at) * 1e3 >= self.cfg.max_wait_ms:
+                out.append(self._take(key))
+        return out
+
+    def _take(self, key) -> List[PendingRank]:
+        q = self.queues.pop(key, [])
+        batch = q[: self.cfg.max_batch]
+        rest = q[self.cfg.max_batch:]
+        if rest:
+            self.queues[key] = rest
+        self.stats["batches"] += 1
+        self.stats["max_seen_batch"] = max(self.stats["max_seen_batch"],
+                                           len(batch))
+        return batch
+
+
+class BatchedRankExecutor:
+    """Executes a batch of rank-with-cache requests in one jitted call.
+
+    psi caches are padded to the shared prefix bucket: HSTU's pointwise
+    attention with explicit 1/n normalization is *not* invariant to
+    zero-padding keys (zero K rows still contribute silu(0)=0 — exactly
+    nothing) so right-padding K/V with zeros is mask-free and exact;
+    only the n_total normalizer must use the bucket length consistently
+    for every request in the batch (same value the per-request call
+    would use after bucketing).
+    """
+
+    def __init__(self, model, params):
+        import jax
+        self._jax = jax
+        self.model = model
+        self.params = params
+        self._rank = jax.jit(
+            lambda p, kv, incr, items: model.rank_with_cache(
+                p, kv, incr, items))
+
+    def _pad_psi(self, psi, target_len: int):
+        jnp = self._jax.numpy
+        k, v = psi
+        pad = target_len - k.shape[2]
+        if pad <= 0:
+            return psi
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+        return (jnp.pad(k, widths), jnp.pad(v, widths))
+
+    def run(self, batch: Sequence[PendingRank]):
+        jnp = self._jax.numpy
+        bucket = bucket_of(max(p.prefix_len for p in batch))
+        ks, vs = [], []
+        for p in batch:
+            k, v = self._pad_psi(p.psi, bucket)
+            ks.append(k)
+            vs.append(v)
+        kv = (jnp.concatenate(ks, axis=1), jnp.concatenate(vs, axis=1))
+        incr = jnp.asarray(np.stack([p.incr for p in batch]))
+        items = jnp.asarray(np.stack([p.items for p in batch]))
+        scores = self._rank(self.params, kv, incr, items)
+        return [scores[i] for i in range(len(batch))]

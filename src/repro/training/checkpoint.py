@@ -1,0 +1,73 @@
+"""Checkpointing: flat-key npz snapshots of (params, opt state, step).
+
+Pure numpy container (no orbax dependency): pytree leaves are flattened
+to ``path/to/leaf`` keys.  bfloat16 leaves are bit-cast to uint16 with a
+dtype sidecar so ``np.savez`` round-trips them losslessly.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_part(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _part(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(path, params, opt_state=None, step: int = 0):
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tree = {"params": params}
+    if opt_state is not None:
+        tree["opt"] = opt_state
+    flat = _flatten(tree)
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        a = np.asarray(v)
+        dtypes[k] = str(a.dtype)
+        if a.dtype == jnp.bfloat16:
+            a = a.view(np.uint16)
+        arrays[k] = a
+    np.savez(path.with_suffix(".npz"), **arrays)
+    meta = {"step": int(step), "dtypes": dtypes}
+    path.with_suffix(".json").write_text(json.dumps(meta))
+
+
+def restore(path, template) -> Tuple[Any, Any, int]:
+    """Restore into the structure of ``template`` ({'params':..,'opt':..})."""
+    path = Path(path)
+    data = np.load(path.with_suffix(".npz"))
+    meta = json.loads(path.with_suffix(".json").read_text())
+    flat_t = _flatten(template)
+    out = {}
+    for k, tmpl in flat_t.items():
+        a = data[k]
+        want = meta["dtypes"][k]
+        if want == "bfloat16":
+            a = a.view(jnp.bfloat16)
+        out[k] = jnp.asarray(a)
+    leaves, treedef = jax.tree.flatten(template)
+    keys = [ _SEP.join(_part(p) for p in path)
+             for path, _ in jax.tree_util.tree_flatten_with_path(template)[0]]
+    restored = jax.tree.unflatten(treedef, [out[k] for k in keys])
+    return restored, meta["step"]

@@ -1,0 +1,17 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run sets its own
+# XLA_FLAGS in a separate process; never set device_count here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,225 @@
+"""Unit + property tests for the RelayGR core (trigger, router, cache,
+expander) — the paper's invariants I1/I2 as executable properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (AffinityRouter, ConsistentHashRing, DRAMExpander,
+                        ExpanderConfig, GRCostModel, HBMCacheStore,
+                        SequenceAwareTrigger, SingleFlight, TriggerConfig)
+from repro.core.types import HASH_KEY, Request, UserMeta
+from repro.models import get_config
+
+COST = GRCostModel(get_config("hstu_gr"))
+
+
+# ---------------------------------------------------------------------------
+# Sequence-aware trigger (Eqs. 1-3)
+# ---------------------------------------------------------------------------
+
+
+def test_trigger_derived_caps_match_paper_example():
+    """Paper §3.2 sanity check: Qm=30, M=5, kv_p99=0.1GB, HBM=32GB,
+    r1=0.5 -> L<=160, Q_admit<=150; r2=0.1, N=100 -> Qmax<=1500."""
+    cfg = TriggerConfig(hbm_bytes=32e9, r1=0.5, q_m=30, m_slots=5,
+                        r2=0.1, n_instances=100, t_life_s=160 / 150)
+    trig = SequenceAwareTrigger(cfg, COST)
+    trig.kv_p99_bytes = 0.1e9  # exact paper constant
+    live = cfg.r1 * cfg.hbm_bytes / trig.kv_p99_bytes
+    assert live == pytest.approx(160)
+    assert trig.q_admit <= 150 + 1e-9
+    assert trig.summary()["q_max_pool"] == pytest.approx(1500)
+
+
+def test_short_sequences_never_admitted():
+    trig = SequenceAwareTrigger(TriggerConfig(), COST)
+    d = trig.admit(UserMeta(user_id=1, prefix_len=64), "i0", 0.0)
+    assert not d.admitted and not d.at_risk
+
+
+def test_long_sequences_at_risk():
+    trig = SequenceAwareTrigger(TriggerConfig(), COST)
+    d = trig.assess(UserMeta(user_id=1, prefix_len=8192))
+    assert d.at_risk
+
+
+@given(qps=st.floats(10, 2000), dur=st.floats(0.5, 5.0))
+def test_admission_rate_bounded(qps, dur):
+    """Eq. 1/3: admitted rate per instance never exceeds q_admit."""
+    trig = SequenceAwareTrigger(TriggerConfig(), COST)
+    n = int(qps * dur)
+    admitted = 0
+    for i in range(n):
+        t = i / qps
+        d = trig.admit(UserMeta(user_id=i, prefix_len=8192), "inst-0", t)
+        admitted += d.admitted
+    cap = trig.q_admit * dur + trig.q_admit  # rate + initial burst
+    assert admitted <= cap + 1
+
+
+@given(st.integers(256, 32768))
+def test_risk_monotone_in_length(n):
+    """Longer prefixes are never less at-risk."""
+    trig = SequenceAwareTrigger(TriggerConfig(), COST)
+    a = trig.assess(UserMeta(user_id=1, prefix_len=n))
+    b = trig.assess(UserMeta(user_id=1, prefix_len=n + 512))
+    assert b.est_full_ms >= a.est_full_ms
+
+
+# ---------------------------------------------------------------------------
+# HBM sliding-window cache (I2)
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.tuples(st.integers(0, 50), st.integers(1, 40)),
+                min_size=1, max_size=200))
+def test_hbm_budget_never_exceeded(ops):
+    store = HBMCacheStore(budget_bytes=100)
+    for i, (uid, nbytes) in enumerate(ops):
+        store.insert(uid, "psi", nbytes, now=float(i))
+        assert store.used_bytes <= 100
+    assert store.stats["peak_bytes"] <= 100
+
+
+def test_hbm_fifo_window_semantics():
+    store = HBMCacheStore(budget_bytes=3)
+    store.insert(1, "a", 1, 0.0)
+    store.insert(2, "b", 1, 1.0)
+    store.insert(3, "c", 1, 2.0)
+    evicted = store.insert(4, "d", 1, 3.0)
+    assert [e.user_id for e in evicted] == [1]      # oldest out
+    assert 2 in store and 4 in store and 1 not in store
+
+
+def test_consumed_flag_tracks():
+    store = HBMCacheStore(budget_bytes=10)
+    store.insert(1, "a", 5, 0.0)
+    assert store.consume(1).consumed
+    evicted = store.insert(2, "b", 6, 1.0)
+    assert evicted[0].consumed  # consumed-then-evicted -> spill candidate
+    assert store.stats["premature_evictions"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Affinity router (I1)
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.integers(0, 10**9), min_size=1, max_size=100))
+def test_affinity_producer_consumer_rendezvous(uids):
+    """The core contract: pre-infer signal and ranking request with the
+    same consistency-hash-key land on the same instance."""
+    router = AffinityRouter([f"s{i}" for i in range(7)], ["n0"])
+    for uid in uids:
+        meta = UserMeta(user_id=uid, prefix_len=4096)
+        pre = Request.pre_infer(0, meta)
+        rank = Request.rank(1, meta, long_sequence=True)
+        assert router.route(pre) == router.route(rank)
+
+
+@given(st.integers(2, 16), st.integers(200, 1000))
+def test_ring_balance(n_nodes, n_keys):
+    ring = ConsistentHashRing([f"s{i}" for i in range(n_nodes)], vnodes=256)
+    counts = {}
+    for k in range(n_keys):
+        counts[ring.route(k)] = counts.get(ring.route(k), 0) + 1
+    # no instance gets more than 4x the fair share (vnode smoothing)
+    assert max(counts.values()) <= 4 * n_keys / n_nodes + 8
+
+
+@given(st.integers(3, 12))
+def test_churn_minimal_remap(n_nodes):
+    """Removing one node only remaps keys owned by that node."""
+    nodes = [f"s{i}" for i in range(n_nodes)]
+    ring = ConsistentHashRing(nodes)
+    before = {k: ring.route(k) for k in range(500)}
+    ring.remove(nodes[0])
+    for k, owner in before.items():
+        if owner != nodes[0]:
+            assert ring.route(k) == owner
+
+
+def test_normal_traffic_uses_lb_policies():
+    router = AffinityRouter(["s0"], ["n0", "n1", "n2"],
+                            policy="round_robin")
+    meta = UserMeta(user_id=5, prefix_len=10)
+    seen = {router.route(Request.rank(i, meta, long_sequence=False))
+            for i in range(6)}
+    assert seen == {"n0", "n1", "n2"}
+
+
+# ---------------------------------------------------------------------------
+# Memory-aware expander (single flight + pseudo-pre-infer)
+# ---------------------------------------------------------------------------
+
+
+def _entry(uid, nbytes=10):
+    from repro.core.cache import CacheEntry
+    return CacheEntry(uid, "psi", nbytes, 0.0, prefix_len=2048)
+
+
+def test_single_flight_leader_follower():
+    sf = SingleFlight()
+    assert sf.begin(7)          # leader
+    assert not sf.begin(7)      # follower
+    assert sf.waiters(7) == 1
+    sf.end(7)
+    sf.end(7)
+    assert sf.begin(7)          # fresh burst -> leader again
+
+
+def test_pseudo_pre_infer_at_most_one_reload():
+    """Out-of-order burst: N concurrent ranking requests for one user
+    with psi in DRAM -> exactly one reload action."""
+    hbm = HBMCacheStore(budget_bytes=10**9)
+    exp = DRAMExpander(ExpanderConfig())
+    exp.spill(_entry(42))
+    actions = [exp.pseudo_pre_infer(42, hbm, 0.0)[0] for _ in range(8)]
+    assert actions.count("reload") == 1
+    assert actions.count("wait") == 7
+    exp.complete_reload(42, hbm, 0.0)
+    assert 42 in hbm
+    assert exp.stats["reloads"] == 1
+    assert exp.stats["redundant_avoided"] == 7
+
+
+def test_pseudo_pre_infer_hbm_short_circuit():
+    hbm = HBMCacheStore(budget_bytes=10**9)
+    exp = DRAMExpander(ExpanderConfig())
+    hbm.insert(42, "psi", 10, 0.0)
+    action, e = exp.pseudo_pre_infer(42, hbm, 0.0)
+    assert action == "hbm" and e is not None
+    assert exp.stats["reloads"] == 0
+
+
+@given(st.lists(st.tuples(st.integers(0, 20), st.integers(1, 30)),
+                min_size=1, max_size=100))
+def test_dram_budget_never_exceeded(ops):
+    exp = DRAMExpander(ExpanderConfig(dram_budget_bytes=100))
+    for uid, nbytes in ops:
+        exp.spill(_entry(uid, nbytes))
+        assert exp.used_bytes <= 100
+
+
+def test_reload_rate_limited():
+    hbm = HBMCacheStore(budget_bytes=10**9)
+    exp = DRAMExpander(ExpanderConfig(max_reload_concurrency=0))
+    exp.spill(_entry(1))
+    action, _ = exp.pseudo_pre_infer(1, hbm, 0.0)
+    assert action == "miss"      # throttled -> safe fallback, not a stall
+    assert exp.stats["reload_throttled"] == 1
+
+
+def test_slack_aware_admission():
+    """Beyond-paper knob: pre-inference that cannot finish inside the
+    retrieval slack is not admitted (ranking would just park on it)."""
+    cfg = TriggerConfig(slack_budget_ms=30.0)
+    trig = SequenceAwareTrigger(cfg, COST)
+    short = UserMeta(user_id=1, prefix_len=2048)   # pre ~26ms fits
+    long = UserMeta(user_id=2, prefix_len=16384)   # pre >> 30ms
+    assert trig.admit(short, "i", 0.0).admitted
+    d = trig.admit(long, "i", 0.0)
+    assert not d.admitted and d.reason == "insufficient-slack"
+    assert trig.stats["slack_rejected"] == 1

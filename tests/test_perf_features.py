@@ -1,0 +1,144 @@
+"""Equivalence tests for the §Perf hillclimb features: none of the
+performance changes may alter numerics (beyond fp reassociation)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import get_config, get_model
+from repro.models.arch import ce_loss, _logits
+from repro.models.layers import attention, attention_specs, init_tree
+from repro.training import optimizer as opt
+
+RNG = np.random.default_rng(11)
+
+
+def _x(B, S, d):
+    return jnp.asarray(RNG.normal(size=(B, S, d)), jnp.float32)
+
+
+def test_q_chunked_attention_matches_unchunked():
+    cfg = get_config("starcoder2_7b", smoke=True)
+    params = init_tree(attention_specs(cfg), jax.random.PRNGKey(0))
+    x = _x(2, 64, cfg.d_model)
+    pos = jnp.arange(64)[None]
+    o1, _ = attention(params, x, cfg, positions=pos)
+    o2, _ = attention(params, x, dataclasses.replace(cfg, attn_q_chunk=16),
+                      positions=pos)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_q_chunked_attention_with_window():
+    cfg = dataclasses.replace(get_config("starcoder2_7b", smoke=True),
+                              sliding_window=32)
+    params = init_tree(attention_specs(cfg), jax.random.PRNGKey(0))
+    x = _x(2, 64, cfg.d_model)
+    pos = jnp.arange(64)[None]
+    o1, _ = attention(params, x, cfg, positions=pos, window=32)
+    o2, _ = attention(params, x, dataclasses.replace(cfg, attn_q_chunk=16),
+                      positions=pos, window=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_head_padding_exact_semantics():
+    """Padded heads contribute nothing and the GQA kv-grouping of the
+    real heads is unchanged."""
+    cfg = get_config("starcoder2_7b", smoke=True)  # 9 heads, kv 3
+    params = init_tree(attention_specs(cfg), jax.random.PRNGKey(0))
+    cfg_p = dataclasses.replace(cfg, head_pad=12)
+    pp = init_tree(attention_specs(cfg_p), jax.random.PRNGKey(1))
+    pp["wq"] = pp["wq"].at[:, :9].set(params["wq"])
+    pp["wo"] = pp["wo"].at[:9].set(params["wo"])
+    pp["wk"], pp["wv"] = params["wk"], params["wv"]
+    x = _x(2, 32, cfg.d_model)
+    pos = jnp.arange(32)[None]
+    o1, _ = attention(params, x, cfg, positions=pos)
+    o2, _ = attention(pp, x, cfg_p, positions=pos)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_head_padding_zero_gradient():
+    cfg = dataclasses.replace(get_config("starcoder2_7b", smoke=True),
+                              head_pad=12)
+    params = init_tree(attention_specs(cfg), jax.random.PRNGKey(2))
+    x = _x(1, 16, cfg.d_model)
+    pos = jnp.arange(16)[None]
+
+    def loss(p):
+        o, _ = attention(p, x, cfg, positions=pos)
+        return jnp.sum(o.astype(jnp.float32) ** 2)
+
+    g = jax.grad(loss)(params)
+    # padded wo rows get no gradient
+    assert float(jnp.abs(g["wo"][9:]).max()) == 0.0
+
+
+def test_chunked_ce_matches_unchunked():
+    model = get_model("qwen3_4b", smoke=True)
+    cfg = model.cfg
+    params = model.init(jax.random.PRNGKey(3))
+    B, S = 2, 64
+    x = _x(B, S, cfg.d_model).astype(jnp.bfloat16)
+    labels = jnp.asarray(RNG.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    a = ce_loss(params, x, labels, cfg, chunk=16)
+    from repro.models.layers import cross_entropy
+    b = cross_entropy(_logits(params, x), labels, cfg.vocab).mean()
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-5)
+
+
+def test_zero2_state_axes():
+    axes = {"w": ("embed", "ff"), "b": (None,)}
+    z = opt.state_axes(axes, zero2=True)
+    assert z["mu"]["w"] == ("opt_data", "ff")
+    assert z["nu"]["b"] == (None,)
+    plain = opt.state_axes(axes)
+    assert plain["mu"]["w"] == ("embed", "ff")
+
+
+def test_smoke_models_unaffected_by_full_config_flags():
+    """Full configs carry head_pad/attn_q_chunk; smoke variants must not
+    (they are the CPU correctness baseline)."""
+    for arch in ("starcoder2_7b", "qwen3_4b", "dbrx_132b"):
+        assert get_config(arch, smoke=True).attn_q_chunk == 0
+    assert get_config("starcoder2_7b").head_pad == 48
+    assert get_config("starcoder2_7b").attn_q_chunk == 2048
+
+
+def test_kv_quant_decode_within_tolerance():
+    """int8 KV cache (per-token dynamic scale) preserves decode logits
+    to <2% relative error while halving the decode HBM stream."""
+    cfg = get_config("qwen3_4b", smoke=True)
+    from repro.models.registry import build_model
+    from repro.models.layers import quantize_kv
+    m = build_model(cfg)
+    mq = build_model(dataclasses.replace(cfg, kv_quant=True))
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 500)
+    _, (k, v) = m.prefill(params, {"tokens": toks[:, :15]})
+    L, B, P, KV, D = k.shape
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    ck = jnp.zeros((L, B, 16, KV, D), jnp.bfloat16).at[:, :, :15].set(k)
+    cv = jnp.zeros((L, B, 16, KV, D), jnp.bfloat16).at[:, :, :15].set(v)
+    ckq = jnp.zeros((L, B, 16, KV, D), jnp.int8).at[:, :, :15].set(kq)
+    cvq = jnp.zeros((L, B, 16, KV, D), jnp.int8).at[:, :, :15].set(vq)
+    cks = jnp.ones((L, B, 16, KV, 1), jnp.float32).at[:, :, :15].set(ks)
+    cvs = jnp.ones((L, B, 16, KV, 1), jnp.float32).at[:, :, :15].set(vs)
+    batch = {"token": toks[:, 15:], "pos": jnp.full((2,), 15, jnp.int32)}
+    lf, _ = m.decode_step(params, (ck, cv), batch)
+    lq, cq = mq.decode_step(params, (ckq, cvq, cks, cvs), batch)
+    rel = (float(jnp.abs(lf.astype(jnp.float32)
+                         - lq.astype(jnp.float32)).max())
+           / float(jnp.abs(lf.astype(jnp.float32)).max()))
+    assert rel < 0.02
+    assert len(cq) == 4 and cq[0].dtype == jnp.int8
+
+    # cache_specs reflects the quantized layout
+    sds, axes = mq.cache_specs(2, 16)
+    assert len(sds) == 4 and sds[0].dtype == jnp.int8

@@ -1,0 +1,92 @@
+"""Cluster-simulator behaviour: the paper's qualitative claims must hold
+in the discrete-event model before the benchmarks quantify them."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.costmodel import GRCostModel
+from repro.core.trigger import TriggerConfig
+from repro.core.types import UserMeta
+from repro.data.synthetic import UserBehaviorStore, request_stream
+from repro.models import get_config
+from repro.serving.simulator import SimConfig, run_sim
+
+COST = GRCostModel(get_config("hstu_gr"))
+
+
+def _fixed(L, qps, dur=8.0, seed=0, refresh=0.0, horizon=6000):
+    rng = np.random.default_rng(seed)
+    t, recent = 0.0, []
+    while t < dur:
+        t += rng.exponential(1.0 / qps)
+        if recent and rng.random() < refresh:
+            uid = int(rng.choice(recent[-horizon:]))
+        else:
+            uid = int(rng.integers(0, 10**9))
+        recent.append(uid)
+        yield t, UserMeta(user_id=uid, prefix_len=L)
+
+
+def _cfg(relay, dram=0.0, r2=0.8):
+    return SimConfig(trigger=TriggerConfig(n_instances=5, r2=r2,
+                                           kv_p99_len=4096),
+                     relay_enabled=relay, dram_budget_bytes=dram,
+                     hbm_cache_bytes=2e9)
+
+
+def test_relay_beats_baseline_on_long_sequences():
+    base = run_sim(_cfg(False, r2=0.2), COST, _fixed(4096, 50))
+    relay = run_sim(_cfg(True), COST, _fixed(4096, 50))
+    assert relay["p99_ms"] < base["p99_ms"]
+    assert relay["hbm_hit"] > 0.5
+
+
+def test_all_requests_complete():
+    arr = list(_fixed(4096, 80))
+    s = run_sim(_cfg(True), COST, iter(arr))
+    assert s["n"] == len(arr)
+
+
+def test_out_of_order_single_reload_per_burst():
+    """Rapid same-user refresh burst: pseudo-pre-infer + single-flight
+    keep DRAM->HBM reloads at <= one per burst (paper §3.4)."""
+    meta = UserMeta(user_id=42, prefix_len=4096)
+    arr = [(0.001 * i, meta) for i in range(6)]
+    cfg = _cfg(True, dram=500e9)
+    from repro.serving.simulator import ClusterSim
+    sim = ClusterSim(cfg, COST)
+    sim.run(iter(arr))
+    inst = [i for i in sim.instances.values()
+            if i.expander.stats["spills"] or i.hbm.stats["inserts"]]
+    assert inst, "no instance touched"
+    total_pre_plus_reloads = sum(
+        i.expander.stats["reloads"] for i in sim.instances.values())
+    assert total_pre_plus_reloads <= 1
+
+
+def test_dram_tier_extends_reuse():
+    relay = run_sim(_cfg(True), COST,
+                    _fixed(4096, 120, refresh=0.6))
+    dram = run_sim(_cfg(True, dram=500e9), COST,
+                   _fixed(4096, 120, refresh=0.6))
+    assert dram["dram_hit"] >= relay["dram_hit"]
+    assert dram["miss"] <= relay["miss"] + 0.05
+
+
+def test_premature_evictions_zero_under_admission_control():
+    """Invariant I2: with the trigger bounding the live-cache footprint,
+    no admitted cache is evicted before its ranking consumes it."""
+    from repro.serving.simulator import ClusterSim
+    sim = ClusterSim(_cfg(True), COST, )
+    sim.run(_fixed(4096, 100, dur=10.0))
+    for inst in sim.instances.values():
+        assert inst.hbm.stats["premature_evictions"] == 0
+
+
+@given(st.integers(1024, 8192))
+@settings(max_examples=5, deadline=None)
+def test_utilisation_bounded(L):
+    s = run_sim(_cfg(True), COST, _fixed(L, 40, dur=5.0))
+    assert 0.0 <= s["special_util"] <= 1.0 + 1e-6

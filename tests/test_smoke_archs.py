@@ -1,0 +1,93 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned architecture instantiates its REDUCED same-family variant
+(2 layers, d_model <= 512, <= 4 experts) and runs one forward/train step
+plus one prefill+decode step on CPU, asserting output shapes and no
+NaNs.  Full configs are exercised only via the dry-run.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.steps import make_train_step
+from repro.models import ARCH_IDS, get_model
+from repro.models.config import InputShape
+from repro.training import optimizer as opt
+
+B, S = 2, 32
+
+
+def _batch(model):
+    cfg = model.cfg
+    batch = {
+        "tokens": jnp.ones((B, S), jnp.int32),
+        "labels": jnp.ones((B, S), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["frontend"] = jnp.ones(
+            (B, cfg.n_frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.ones(
+            (B, cfg.n_frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_config_limits(arch):
+    cfg = get_model(arch, smoke=True).cfg
+    assert cfg.n_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    model = get_model(arch, smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(model)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+
+    step, _, _ = make_train_step(
+        model, InputShape("t", S, B, "train"),
+        opt.AdamWConfig(warmup_steps=1, total_steps=10))
+    state = opt.init_state(params)
+    p2, s2, m = jax.jit(step)(params, state, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(m["grad_norm"]))
+    assert int(s2["step"]) == 1
+    # params actually moved
+    d0 = jax.tree.leaves(params)[0]
+    d1 = jax.tree.leaves(p2)[0]
+    assert d0.shape == d1.shape
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_step(arch):
+    model = get_model(arch, smoke=True)
+    cfg = model.cfg
+    params = model.init(jax.random.PRNGKey(1))
+    batch = _batch(model)
+    pf_batch = ({k: v for k, v in batch.items() if k != "labels"})
+    logits, cache = jax.jit(model.prefill)(params, pf_batch)
+    assert logits.shape[0] == B
+    assert logits.shape[-1] == cfg.vocab_padded
+    dbatch = {"token": jnp.ones((B, 1), jnp.int32),
+              "pos": jnp.full((B,), S - 1, jnp.int32)}
+    logits2, cache2 = jax.jit(model.decode_step)(params, cache, dbatch)
+    assert logits2.shape == (B, 1, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+    # cache pytree structure is stable under decode
+    assert (jax.tree.structure(cache) == jax.tree.structure(cache2))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_specs_match_prefill(arch):
+    model = get_model(arch, smoke=True)
+    sds, axes = model.cache_specs(B, S)
+    assert jax.tree.structure(sds, is_leaf=lambda x: hasattr(x, "shape")) \
+        is not None
+    flat = [s for s in jax.tree.leaves(sds)]
+    assert all(hasattr(s, "shape") and hasattr(s, "dtype") for s in flat)
