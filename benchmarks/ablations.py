@@ -5,6 +5,10 @@ Shows each of the paper's three techniques is load-bearing:
   no-affinity  -> random special routing: producer/consumer miss, ranking
                   falls back to full inference (the paper's Fig.12 point);
   no-singleflight -> rapid same-user bursts trigger redundant reloads.
+
+The first two now demonstrate the runtime's policy registry: the ablated
+variant is just a different ``trigger_policy`` / ``router_policy`` string
+in the ``ClusterConfig`` — no engine code changes.
 """
 
 from __future__ import annotations
@@ -13,7 +17,8 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.core import GRCostModel, RelayGRService, ServiceConfig, TriggerConfig
+from repro.core import (ClusterConfig, GRCostModel, RelayGRService,
+                        TriggerConfig, relay_config)
 from repro.core.types import HitKind, UserMeta
 from repro.models import get_config
 
@@ -27,25 +32,26 @@ def _metas(n=400, L=4096, seed=0):
 
 
 def ablation_affinity() -> List[Tuple]:
-    """Affinity on vs off (random special instance for ranking)."""
+    """Affinity on vs off (``router_policy="random"``: the pre-infer
+    producer and the ranking consumer land on independent random special
+    instances, so they rendezvous only by chance)."""
     rows = []
-    for mode in ("affinity", "random"):
-        svc = RelayGRService(ServiceConfig(
-            trigger=TriggerConfig(n_instances=10, r2=0.5)), COST)
-        rng = np.random.default_rng(1)
+    for policy in ("affinity", "random"):
+        svc = RelayGRService(
+            relay_config(trigger=TriggerConfig(n_instances=10, r2=0.5),
+                         cluster=ClusterConfig(router_policy=policy,
+                                               seed=1)),
+            COST)
         hits = 0
         metas = _metas()
         for i, meta in enumerate(metas):
             sig = svc.on_retrieval(meta, now=i * 0.01)
             if sig is not None:
-                if mode == "random":
-                    sig.body["target"] = svc.special_names[
-                        int(rng.integers(0, len(svc.special_names)))]
                 svc.deliver_pre_infer(sig, now=i * 0.01)
             r = svc.on_rank(meta, now=i * 0.01 + 1e-3)
             hits += r.hit in (HitKind.HBM_HIT, HitKind.DRAM_HIT)
         rate = hits / len(metas)
-        rows.append((f"ablation/{mode}-routing", rate * 1e6,
+        rows.append((f"ablation/{policy}-routing", rate * 1e6,
                      f"hit_rate={rate:.2f}"))
     return rows
 
@@ -54,37 +60,25 @@ def ablation_trigger() -> List[Tuple]:
     """Selective admission vs unconditional pre-inference (paper §2.4
     challenge 3: pre-inferring every request overloads the shared
     resources that ranking needs).  Realistic mixed-length traffic at
-    high QPS: the trigger pre-infers only the ~10% at-risk requests;
-    admit-all floods the special pool with pre-inference for *safe*
-    short-sequence users."""
+    high QPS: the ``sequence-aware`` trigger pre-infers only the ~10%
+    at-risk requests; ``admit-all`` floods the special pool with
+    pre-inference for *safe* short-sequence users.  Rank-stage routing
+    uses the true risk test in both variants (``route_trigger``), so
+    only the admission policy differs."""
+    from repro.core.trigger import SequenceAwareTrigger
     from repro.data.synthetic import UserBehaviorStore, request_stream
-    from repro.serving.simulator import ClusterSim, SimConfig
+    from repro.serving.simulator import ClusterSim
     rows = []
     store = UserBehaviorStore()
-    for label, risk_all in (("selective-trigger", False),
-                            ("admit-all", True)):
-        trig = TriggerConfig(n_instances=5, r2=0.4,
-                             rank_p99_budget_ms=0.1 if risk_all else 50.0,
-                             q_m=1e5 if risk_all else 30.0)
-        sim = ClusterSim(SimConfig(trigger=trig, hbm_cache_bytes=4e9), COST)
-        if risk_all:
-            # admit-all still *routes* ranking by the true risk test so
-            # only the pre-inference policy differs
-            real = TriggerConfig(n_instances=5, r2=0.4)
-            from repro.core.trigger import SequenceAwareTrigger
-            sim._route_trigger = SequenceAwareTrigger(real, COST)
-            orig = sim._on_rank_arrival
-
-            def routed(t, meta, rec, sim=sim):
-                if sim._route_trigger.assess(meta).at_risk:
-                    target = sim.router.ring.route(meta.user_id)
-                else:
-                    target = sim.normal[meta.user_id % len(sim.normal)]
-                rec.t_rank_arrival = t
-                sim.instances[target].enqueue(
-                    {"kind": "rank", "meta": meta, "rec": rec}, t)
-
-            sim._on_rank_arrival = routed
+    for label, policy in (("selective-trigger", "sequence-aware"),
+                          ("admit-all", "admit-all")):
+        trig = TriggerConfig(n_instances=5, r2=0.4)
+        sim = ClusterSim(
+            relay_config(trigger=trig,
+                         cluster=ClusterConfig(hbm_cache_bytes=4e9,
+                                               trigger_policy=policy)),
+            COST)
+        sim.runtime.route_trigger = SequenceAwareTrigger(trig, COST)
         s = sim.run(request_stream(store, 900, 12.0))
         rows.append((f"ablation/{label}", s["p99_ms"] * 1e3,
                      f"p99={s['p99_ms']:.0f}ms succ={s['success_rate']:.3f} "

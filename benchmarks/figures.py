@@ -27,11 +27,13 @@ from typing import Dict, Iterable, List, Tuple
 import numpy as np
 
 from repro.core.costmodel import GRCostModel, HardwareModel
+from repro.core.runtime import (ClusterConfig, PipelineConfig, RelayConfig,
+                                relay_config)
 from repro.core.trigger import TriggerConfig
 from repro.core.types import UserMeta
 from repro.data.synthetic import UserBehaviorStore, WorkloadConfig
 from repro.models import get_config
-from repro.serving.simulator import PipelineConfig, SimConfig, run_sim
+from repro.serving.simulator import run_sim
 
 HSTU = get_config("hstu_gr")
 COST = GRCostModel(HSTU)
@@ -56,19 +58,20 @@ def _fixed_stream(L, qps, dur, *, refresh=0.0, horizon=6000, seed=0,
                           n_items=n_items)
 
 
-def _cfg(mode: str, L: int, cost=None) -> SimConfig:
+def _cfg(mode: str, L: int, cost=None) -> RelayConfig:
     """mode: baseline | relay | relay_dram"""
     relay = mode != "baseline"
     r2 = 0.8 if relay else 0.2   # 4 active instances either way
     hbm_cache = 4e9
-    return SimConfig(
+    return relay_config(
         trigger=TriggerConfig(n_instances=N_INST, r2=r2,
                               kv_p99_len=max(L, 1024),
                               hbm_bytes=hbm_cache / 0.5, r1=0.5,
                               t_life_s=0.5),
-        relay_enabled=relay,
-        dram_budget_bytes=500e9 if mode == "relay_dram" else 0.0,
-        hbm_cache_bytes=hbm_cache,
+        cluster=ClusterConfig(
+            relay_enabled=relay,
+            dram_budget_bytes=500e9 if mode == "relay_dram" else 0.0,
+            hbm_cache_bytes=hbm_cache),
     )
 
 
@@ -400,6 +403,39 @@ def table1_kv_footprint() -> List[Tuple]:
     b = COST.kv_bytes(2048)
     return [("table1/kv_2k_8L_256d_fp32", b,
              f"{b / 2**20:.0f} MiB (paper: 32 MB)")]
+
+
+# ---------------------------------------------------------------------------
+# machine-readable perf headline (BENCH_relay.json)
+# ---------------------------------------------------------------------------
+
+
+def bench_relay_summary(quick: bool = False) -> Dict:
+    """Per-mode perf headline for the repo's perf trajectory: P99,
+    SLO-compliant throughput and hit rates at a fixed reference point
+    (L=2048, 60 offered QPS), plus the bisected max SLO-compliant QPS
+    when not in quick mode.  Written by ``benchmarks/run.py`` to
+    ``BENCH_relay.json`` so successive PRs can diff serving performance.
+    """
+    L, qps = 2048, 60
+    out: Dict[str, Dict] = {"meta": {
+        "L": L, "offered_qps": qps, "slo_ms": SLO_MS, "sim_s": SIM_S}}
+    for mode in ("baseline", "relay", "relay_dram"):
+        s = _run(mode, L, qps)
+        entry = {
+            "p50_ms": round(s["p50_ms"], 3),
+            "p99_ms": round(s["p99_ms"], 3),
+            "rank_p99_ms": round(s["rank_p99_ms"], 3),
+            "success_rate": round(s["success_rate"], 4),
+            "goodput_qps": round(s["goodput_qps"], 1),
+            "hbm_hit": round(s["hbm_hit"], 4),
+            "dram_hit": round(s["dram_hit"], 4),
+            "miss": round(s["miss"], 4),
+        }
+        if not quick:
+            entry["slo_qps"] = round(_max_qps(mode, L), 1)
+        out[mode] = entry
+    return out
 
 
 ALL_FIGURES = [

@@ -5,12 +5,19 @@ table/figure (benchmarks/figures.py), the live-compute microbenchmarks
 (benchmarks/microbench.py) and, when dry-run artifacts exist, the
 roofline summary (benchmarks/roofline.py).
 
+Full runs also write ``BENCH_relay.json`` (override with
+``--relay-json``): the machine-readable per-mode perf headline — P99,
+SLO-compliant throughput, hit rates — so successive PRs have a
+serving-perf trajectory to diff.  ``--quick`` skips the write unless a
+path is given, so reduced runs never clobber the committed trajectory.
+
 ``--quick`` runs a reduced subset (used by CI / test_benchmarks).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -20,7 +27,14 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="",
                     help="substring filter on benchmark function names")
+    ap.add_argument("--relay-json", default=None,
+                    help="perf-headline output path ('' disables; default "
+                         "BENCH_relay.json, or skipped under --quick so a "
+                         "reduced run never overwrites the committed "
+                         "full-run trajectory)")
     args = ap.parse_args(argv)
+    if args.relay_json is None:
+        args.relay_json = "" if args.quick else "BENCH_relay.json"
 
     from benchmarks import ablations, figures, microbench
 
@@ -46,6 +60,14 @@ def main(argv=None) -> None:
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
         print(f"# {fn.__name__} took {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+    if args.relay_json and not args.only:
+        t0 = time.time()
+        headline = figures.bench_relay_summary(quick=args.quick)
+        with open(args.relay_json, "w") as f:
+            json.dump(headline, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.relay_json} in {time.time() - t0:.1f}s",
               file=sys.stderr)
 
     # roofline summary (if the dry-run has produced artifacts)

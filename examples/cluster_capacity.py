@@ -7,10 +7,11 @@ discrete-event cluster simulator.
 
 Run:  PYTHONPATH=src python examples/cluster_capacity.py
 """
-from repro.core import GRCostModel, SequenceAwareTrigger, TriggerConfig
+from repro.core import (GRCostModel, SequenceAwareTrigger, TriggerConfig,
+                        relay_config)
 from repro.data.synthetic import UserBehaviorStore, request_stream
 from repro.models import get_config
-from repro.serving.simulator import SimConfig, run_sim
+from repro.serving.simulator import run_sim
 
 cost = GRCostModel(get_config("hstu-gr"))
 print("r1   M   T_life   L(cap)  Q_admit/inst  Q_max(pool)")
@@ -27,6 +28,6 @@ for r1 in (0.25, 0.5):
 print("\nvalidating r1=0.5, M=5 at 300 QPS in the cluster sim:")
 store = UserBehaviorStore()
 arr = request_stream(store, 300, 15.0)
-s = run_sim(SimConfig(trigger=TriggerConfig(n_instances=10)), cost, arr)
+s = run_sim(relay_config(trigger=TriggerConfig(n_instances=10)), cost, arr)
 print({k: round(v, 3) for k, v in s.items() if k in
        ("p99_ms", "success_rate", "goodput_qps", "hbm_hit", "miss")})

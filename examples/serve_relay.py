@@ -1,7 +1,8 @@
 """End-to-end driver (the paper's kind: serving): boots a live RelayGR
 service — sequence-aware trigger, affinity router, HBM window, DRAM
-expander — over a real jitted HSTU model and replays a batched synthetic
-request stream through the full retrieval->preprocess->rank relay.
+expander, all orchestrated by the shared event-driven RelayRuntime —
+over a real jitted HSTU model and replays a batched synthetic request
+stream through the full retrieval->preprocess->rank relay.
 
 Run:  PYTHONPATH=src python examples/serve_relay.py [--requests 100]
 Also: PYTHONPATH=src python -m repro.launch.serve --sim   (cluster sim)

@@ -1,192 +1,26 @@
-"""Ranking-instance engine: where pre-inference and ranking execute.
+"""Compatibility layer for the pre-runtime engine API.
 
-A special instance processes a mix of auxiliary pre-infer requests and
-ranking requests (paper Fig. 7).  The request-handling state machine is
-identical in live mode (real JAX HSTU compute — tests, examples) and in
-simulation mode (cost-model latencies — cluster-scale benchmarks); only
-the ``Executor`` differs.
+The ranking-instance state machine that used to live here is now the
+single source of truth in ``repro.core.runtime`` (``InstanceRuntime``),
+and the executors moved to ``repro.core.executors`` (protocol +
+registry).  This module keeps the historical import surface working:
 
-Latency components are reported per request as ``pre`` (pre-inference),
-``load`` (DRAM->HBM reload), ``rank`` (ranking compute) — matching the
-paper's Fig. 11c breakdown.
+    from repro.core.engine import RankingInstance, SimExecutor, ...
+
+``RankingInstance`` *is* ``InstanceRuntime`` — the same object the
+event-driven runtime schedules — so manually-driven instances (tests,
+ablations, churn experiments) and pipeline-driven ones share one
+implementation.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Any, Dict, List, Optional, Tuple
+from .executors import (Executor, LiveExecutor, SimExecutor, get_executor,
+                        register_executor)
+from .runtime import InstanceConfig, InstanceRuntime
 
-import numpy as np
+RankingInstance = InstanceRuntime
 
-from .cache import HBMCacheStore
-from .costmodel import GRCostModel
-from .expander import DRAMExpander, ExpanderConfig
-from .types import HitKind, RankResult, Request, Stage, UserMeta
-
-
-class SimExecutor:
-    """Latency-only executor driven by the analytic cost model."""
-
-    def __init__(self, cost: GRCostModel):
-        self.cost = cost
-
-    def pre_infer(self, meta: UserMeta) -> Tuple[Any, int, float]:
-        nbytes = self.cost.kv_bytes(meta.prefix_len)
-        ms = self.cost.pre_infer_ms(meta.prefix_len)
-        return ("psi", meta.user_id, meta.prefix_len), nbytes, ms
-
-    def rank_cached(self, meta: UserMeta, psi) -> Tuple[Any, float]:
-        return None, self.cost.rank_on_cache_ms(
-            meta.prefix_len, meta.incr_len, meta.n_items)
-
-    def rank_full(self, meta: UserMeta) -> Tuple[Any, float]:
-        return None, self.cost.full_rank_ms(
-            meta.prefix_len, meta.incr_len, meta.n_items)
-
-    def reload_ms(self, meta: UserMeta) -> float:
-        return self.cost.dram_load_ms(meta.prefix_len)
-
-
-class LiveExecutor:
-    """Runs the real HSTU backbone with jitted prefill / rank steps."""
-
-    def __init__(self, model, params, store,
-                 cost: Optional[GRCostModel] = None):
-        import jax
-        self._jax = jax
-        self.model = model
-        self.params = params
-        self.store = store
-        self.cost = cost or GRCostModel(model.cfg)
-        self._prefill = jax.jit(
-            lambda p, toks: model.prefill(p, {"tokens": toks}))
-        self._rank = jax.jit(
-            lambda p, kv, incr, items: model.rank_with_cache(
-                p, kv, incr, items))
-        self._rank_full = jax.jit(
-            lambda p, pref, incr, items: model.full_rank(
-                p, pref, incr, items))
-
-    def _round(self, n: int, m: int = 64) -> int:
-        return max(m, (n + m - 1) // m * m)  # bucketed shapes: few recompiles
-
-    def pre_infer(self, meta: UserMeta) -> Tuple[Any, int, float]:
-        jnp = self._jax.numpy
-        n = self._round(meta.prefix_len)
-        toks = jnp.asarray(
-            np.resize(self.store.long_term(meta.user_id), n)[None, :])
-        t0 = time.perf_counter()
-        _, kv = self._prefill(self.params, toks)
-        kv = self._jax.block_until_ready(kv)
-        ms = (time.perf_counter() - t0) * 1e3
-        nbytes = sum(int(np.prod(a.shape)) * a.dtype.itemsize
-                     for a in self._jax.tree.leaves(kv))
-        return kv, nbytes, ms
-
-    def rank_cached(self, meta: UserMeta, psi) -> Tuple[Any, float]:
-        jnp = self._jax.numpy
-        incr = jnp.asarray(self.store.short_term(meta.user_id)[None, :])
-        items = jnp.asarray(self.store.candidates(meta.user_id)[None, :])
-        t0 = time.perf_counter()
-        scores = self._rank(self.params, psi, incr, items)
-        scores.block_until_ready()
-        return scores, (time.perf_counter() - t0) * 1e3
-
-    def rank_full(self, meta: UserMeta) -> Tuple[Any, float]:
-        jnp = self._jax.numpy
-        n = self._round(meta.prefix_len)
-        pref = jnp.asarray(
-            np.resize(self.store.long_term(meta.user_id), n)[None, :])
-        incr = jnp.asarray(self.store.short_term(meta.user_id)[None, :])
-        items = jnp.asarray(self.store.candidates(meta.user_id)[None, :])
-        t0 = time.perf_counter()
-        scores = self._rank_full(self.params, pref, incr, items)
-        scores.block_until_ready()
-        return scores, (time.perf_counter() - t0) * 1e3
-
-    def reload_ms(self, meta: UserMeta) -> float:
-        return self.cost.dram_load_ms(meta.prefix_len)
-
-
-@dataclasses.dataclass
-class InstanceConfig:
-    name: str
-    hbm_cache_bytes: float = 16e9       # r1 * HBM
-    dram: ExpanderConfig = dataclasses.field(default_factory=ExpanderConfig)
-    special: bool = True
-    m_slots: int = 5
-
-
-class RankingInstance:
-    """One accelerator-backed ranking instance (normal or special)."""
-
-    def __init__(self, cfg: InstanceConfig, executor):
-        self.cfg = cfg
-        self.name = cfg.name
-        self.executor = executor
-        self.hbm = HBMCacheStore(int(cfg.hbm_cache_bytes))
-        self.expander = DRAMExpander(cfg.dram)
-        self.stats = {"pre_infers": 0, "ranks": 0, "hbm_hits": 0,
-                      "dram_hits": 0, "fallbacks": 0, "spills": 0}
-
-    # --- pre-infer (relay-race side path) -----------------------------------
-    def handle_pre_infer(self, req: Request, now: float) -> Dict[str, float]:
-        meta = req.user
-        self.stats["pre_infers"] += 1
-        psi, nbytes, pre_ms = self.executor.pre_infer(meta)
-        evicted = self.hbm.insert(meta.user_id, psi, nbytes, now,
-                                  prefix_len=meta.prefix_len)
-        for e in evicted:
-            if e.consumed:  # sliding-window exit -> DRAM reuse tier
-                self.expander.spill(e)
-                self.stats["spills"] += 1
-        return {"pre": pre_ms}
-
-    # --- ranking -------------------------------------------------------------
-    def handle_rank(self, req: Request, now: float) -> RankResult:
-        meta = req.user
-        self.stats["ranks"] += 1
-        comp: Dict[str, float] = {"pre": 0.0, "load": 0.0, "rank": 0.0}
-
-        action, entry = self.expander.pseudo_pre_infer(
-            meta.user_id, self.hbm, now)
-        single_flight_open = action in ("reload", "wait", "miss")
-
-        if action == "wait":
-            # Follower behind an in-flight op for the same user: the
-            # leader's reload lands psi in HBM; re-probe (at most once).
-            self.expander.finish(meta.user_id)
-            e2 = self.hbm.lookup(meta.user_id)
-            action, entry = ("hbm", e2) if e2 is not None else ("miss", None)
-            single_flight_open = False
-
-        if action == "reload":
-            comp["load"] = self.executor.reload_ms(meta)
-            self.expander.complete_reload(meta.user_id, self.hbm, now)
-            entry = self.hbm.lookup(meta.user_id)
-            action = "hbm" if entry is not None else "miss"
-
-        if action == "hbm" and entry is not None:
-            scores, rank_ms = self.executor.rank_cached(meta, entry.value)
-            comp["rank"] = rank_ms
-            self.hbm.consume(meta.user_id)
-            hit = (HitKind.DRAM_HIT if comp["load"] > 0
-                   else HitKind.HBM_HIT)
-            self.stats["dram_hits" if comp["load"] > 0
-                       else "hbm_hits"] += 1
-        else:
-            # I1: never a remote fetch — local miss falls back to full
-            # inference, preserving correctness at the cost of latency.
-            scores, rank_ms = self.executor.rank_full(meta)
-            comp["rank"] = rank_ms
-            hit = HitKind.MISS_FALLBACK
-            self.stats["fallbacks"] += 1
-
-        if single_flight_open:
-            self.expander.finish(meta.user_id)
-
-        return RankResult(
-            req_id=req.req_id, user_id=meta.user_id, hit=hit, scores=scores,
-            latency_ms=sum(comp.values()), components=comp,
-            instance=self.name)
+__all__ = ["Executor", "InstanceConfig", "InstanceRuntime", "LiveExecutor",
+           "RankingInstance", "SimExecutor", "get_executor",
+           "register_executor"]

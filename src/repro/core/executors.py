@@ -1,0 +1,162 @@
+"""Executor protocol + registry: how a ranking instance computes.
+
+The relay-race state machine never touches tensors directly — every
+compute step goes through an ``Executor``:
+
+  * ``SimExecutor``  — analytic cost-model latencies, no real compute
+    (cluster-scale simulation, capacity planning, paper figures);
+  * ``LiveExecutor`` — jitted JAX HSTU prefill / rank-with-cache /
+    full-rank on the local device, latencies measured.
+
+Both satisfy the same ``typing.Protocol``, so the runtime drives the
+identical state machine in either mode; new backends (e.g. a batched
+executor, a remote-NPU stub) register under a name and are selected per
+deployment via ``get_executor``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple, \
+    runtime_checkable
+
+import numpy as np
+
+from .costmodel import GRCostModel
+from .types import UserMeta
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """Compute backend for one ranking instance."""
+
+    def pre_infer(self, meta: UserMeta) -> Tuple[Any, int, float]:
+        """Pre-infer psi for the user's long-term prefix.
+        Returns (psi, nbytes, latency_ms)."""
+        ...
+
+    def rank_cached(self, meta: UserMeta, psi: Any) -> Tuple[Any, float]:
+        """Rank candidates reusing cached psi. Returns (scores, ms)."""
+        ...
+
+    def rank_full(self, meta: UserMeta) -> Tuple[Any, float]:
+        """Full inference on the critical path (miss fallback)."""
+        ...
+
+    def reload_ms(self, meta: UserMeta) -> float:
+        """DRAM -> HBM reload cost for this user's psi."""
+        ...
+
+
+# --- registry ----------------------------------------------------------------
+
+EXECUTORS: Dict[str, Callable[..., Executor]] = {}
+
+
+def register_executor(name: str):
+    def deco(cls):
+        EXECUTORS[name] = cls
+        return cls
+
+    return deco
+
+
+def get_executor(name: str) -> Callable[..., Executor]:
+    try:
+        return EXECUTORS[name]
+    except KeyError:
+        raise KeyError(f"unknown executor {name!r}; "
+                       f"registered: {sorted(EXECUTORS)}") from None
+
+
+def executor_names():
+    return sorted(EXECUTORS)
+
+
+# --- built-in executors --------------------------------------------------------
+
+
+@register_executor("sim")
+class SimExecutor:
+    """Latency-only executor driven by the analytic cost model."""
+
+    def __init__(self, cost: GRCostModel):
+        self.cost = cost
+
+    def pre_infer(self, meta: UserMeta) -> Tuple[Any, int, float]:
+        nbytes = self.cost.kv_bytes(meta.prefix_len)
+        ms = self.cost.pre_infer_ms(meta.prefix_len)
+        return ("psi", meta.user_id, meta.prefix_len), nbytes, ms
+
+    def rank_cached(self, meta: UserMeta, psi) -> Tuple[Any, float]:
+        return None, self.cost.rank_on_cache_ms(
+            meta.prefix_len, meta.incr_len, meta.n_items)
+
+    def rank_full(self, meta: UserMeta) -> Tuple[Any, float]:
+        return None, self.cost.full_rank_ms(
+            meta.prefix_len, meta.incr_len, meta.n_items)
+
+    def reload_ms(self, meta: UserMeta) -> float:
+        return self.cost.dram_load_ms(meta.prefix_len)
+
+
+@register_executor("live")
+class LiveExecutor:
+    """Runs the real HSTU backbone with jitted prefill / rank steps."""
+
+    def __init__(self, model, params, store,
+                 cost: Optional[GRCostModel] = None):
+        import jax
+        self._jax = jax
+        self.model = model
+        self.params = params
+        self.store = store
+        self.cost = cost or GRCostModel(model.cfg)
+        self._prefill = jax.jit(
+            lambda p, toks: model.prefill(p, {"tokens": toks}))
+        self._rank = jax.jit(
+            lambda p, kv, incr, items: model.rank_with_cache(
+                p, kv, incr, items))
+        self._rank_full = jax.jit(
+            lambda p, pref, incr, items: model.full_rank(
+                p, pref, incr, items))
+
+    def _round(self, n: int, m: int = 64) -> int:
+        return max(m, (n + m - 1) // m * m)  # bucketed shapes: few recompiles
+
+    def pre_infer(self, meta: UserMeta) -> Tuple[Any, int, float]:
+        jnp = self._jax.numpy
+        n = self._round(meta.prefix_len)
+        toks = jnp.asarray(
+            np.resize(self.store.long_term(meta.user_id), n)[None, :])
+        t0 = time.perf_counter()
+        _, kv = self._prefill(self.params, toks)
+        kv = self._jax.block_until_ready(kv)
+        ms = (time.perf_counter() - t0) * 1e3
+        nbytes = sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                     for a in self._jax.tree.leaves(kv))
+        return kv, nbytes, ms
+
+    def rank_cached(self, meta: UserMeta, psi) -> Tuple[Any, float]:
+        jnp = self._jax.numpy
+        incr = jnp.asarray(self.store.short_term(meta.user_id)[None, :])
+        items = jnp.asarray(self.store.candidates(meta.user_id)[None, :])
+        t0 = time.perf_counter()
+        scores = self._rank(self.params, psi, incr, items)
+        scores.block_until_ready()
+        return scores, (time.perf_counter() - t0) * 1e3
+
+    def rank_full(self, meta: UserMeta) -> Tuple[Any, float]:
+        jnp = self._jax.numpy
+        n = self._round(meta.prefix_len)
+        pref = jnp.asarray(
+            np.resize(self.store.long_term(meta.user_id), n)[None, :])
+        incr = jnp.asarray(self.store.short_term(meta.user_id)[None, :])
+        items = jnp.asarray(self.store.candidates(meta.user_id)[None, :])
+        t0 = time.perf_counter()
+        scores = self._rank_full(self.params, pref, incr, items)
+        scores.block_until_ready()
+        return scores, (time.perf_counter() - t0) * 1e3
+
+    def reload_ms(self, meta: UserMeta) -> float:
+        return self.cost.dram_load_ms(meta.prefix_len)

@@ -50,6 +50,10 @@ class SingleFlight:
         else:
             self._inflight[user_id] = n - 1
 
+    def active(self, user_id: int) -> bool:
+        """True while any op for this user is still in flight."""
+        return self._inflight.get(user_id, 0) > 0
+
     def waiters(self, user_id: int) -> int:
         return max(0, self._inflight.get(user_id, 0) - 1)
 
@@ -66,7 +70,9 @@ class DRAMExpander:
                       "reload_throttled": 0}
 
     # --- spill (after consumption, off the critical path) -------------------
-    def spill(self, entry: CacheEntry):
+    def spill(self, entry: CacheEntry) -> bool:
+        """Store ``entry`` in the DRAM tier; returns whether it fit
+        (callers use this for their own spill accounting)."""
         if entry.user_id in self.entries:
             self._remove(entry.user_id)
         while (self.used_bytes + entry.nbytes > self.cfg.dram_budget_bytes
@@ -79,6 +85,8 @@ class DRAMExpander:
             self.entries[entry.user_id] = entry
             self.used_bytes += entry.nbytes
             self.stats["spills"] += 1
+            return True
+        return False
 
     def lookup(self, user_id: int) -> Optional[CacheEntry]:
         e = self.entries.get(user_id)

@@ -59,7 +59,11 @@ class ConsistentHashRing:
 
 class AffinityRouter:
     """Two-tier routing: special pool via consistent hashing on the
-    user-keyed header; normal pool via round-robin/least-connections."""
+    user-keyed header; normal pool via a standard LB policy —
+    ``round_robin``, ``least_connections`` or ``user_hash`` (session
+    affinity: the same user keeps landing on the same normal instance,
+    which is what production gateways do for feature-cache locality and
+    what the cluster benchmarks are calibrated against)."""
 
     def __init__(self, special: List[str], normal: List[str],
                  policy: str = "round_robin", vnodes: int = 128):
@@ -76,6 +80,8 @@ class AffinityRouter:
             self.stats["special"] += 1
             return self.ring.route(key)
         self.stats["normal"] += 1
+        if self.policy == "user_hash":
+            return self.normal[request.user.user_id % len(self.normal)]
         if self.policy == "least_connections" and self._load:
             node = min(self._load, key=self._load.get)
             self._load[node] += 1

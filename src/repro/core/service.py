@@ -1,30 +1,36 @@
-"""RelayGR service: the full retrieval -> pre-processing -> ranking relay.
+"""RelayGR service: the live-mode adapter over the shared RelayRuntime.
 
-Wires the sequence-aware trigger (admission), the affinity-aware router
-(placement) and the ranking instances (execution + expander) into one
-request path.  This is the *functional* composition used by tests and the
-live examples; the discrete-event simulator (repro.serving.simulator)
-replays the same state machines under a virtual clock and concurrency to
-measure P99/throughput at cluster scale.
+The full retrieval -> pre-processing -> ranking relay for live serving:
+``submit()`` injects a request into the canonical event-driven state
+machine (repro.core.runtime) and drains its cascade synchronously, so
+live mode and the cluster simulator execute the *identical* lifecycle —
+only the clock and the executor differ (see tests/test_runtime_parity).
+
+The stage-level methods (``on_retrieval`` / ``deliver_pre_infer`` /
+``on_rank``) remain for tests and ablations that drive the relay out of
+band of the pipeline timing; they compose the same transition kernels.
+
+``ServiceConfig`` is a deprecation shim — new code should build a
+``RelayConfig`` via ``repro.core.runtime.relay_config``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from typing import Dict, List, Optional
+import warnings
+from typing import Dict, Optional
 
-from repro.serving.metrics import SLOTracker
-
+from .clock import Clock, WallClock
 from .costmodel import GRCostModel
-from .engine import InstanceConfig, RankingInstance, SimExecutor
-from .router import AffinityRouter
-from .trigger import Decision, SequenceAwareTrigger, TriggerConfig
-from .types import HitKind, RankResult, Request, Stage, UserMeta
+from .runtime import (ClusterConfig, RelayConfig, RelayRuntime,
+                      as_relay_config, relay_config)
+from .trigger import TriggerConfig
+from .types import RankResult, Request, UserMeta
 
 
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
+    """DEPRECATED: use ``relay_config(trigger=..., cluster=...)``."""
     trigger: TriggerConfig = TriggerConfig()
     n_normal: int = 0                  # 0 -> derived from trigger cfg
     hbm_cache_bytes: float = 16e9
@@ -32,40 +38,62 @@ class ServiceConfig:
     long_seq_threshold: int = 0        # 0 -> use the trigger's risk test
                                        # (pre-processing decides the service)
 
+    def __post_init__(self):
+        warnings.warn(
+            "ServiceConfig is deprecated; build a RelayConfig with "
+            "repro.core.runtime.relay_config(trigger=..., cluster=...)",
+            DeprecationWarning, stacklevel=3)
+
+    def to_relay(self) -> RelayConfig:
+        return relay_config(
+            trigger=self.trigger,
+            cluster=ClusterConfig(
+                n_normal=self.n_normal,
+                hbm_cache_bytes=self.hbm_cache_bytes,
+                dram_budget_bytes=self.dram_budget_bytes,
+                long_seq_threshold=self.long_seq_threshold))
+
 
 class RelayGRService:
-    def __init__(self, cfg: ServiceConfig, cost: GRCostModel,
-                 executor_factory=None):
-        self.cfg = cfg
+    def __init__(self, cfg, cost: GRCostModel, executor_factory=None,
+                 clock: Optional[Clock] = None):
+        self.cfg = as_relay_config(cfg)
         self.cost = cost
-        self.trigger = SequenceAwareTrigger(cfg.trigger, cost)
-        n_special = cfg.trigger.n_special
-        n_normal = cfg.n_normal or (cfg.trigger.n_instances - n_special)
-        self.special_names = [f"special-{i}" for i in range(n_special)]
-        self.normal_names = [f"normal-{i}" for i in range(max(n_normal, 1))]
-        self.router = AffinityRouter(self.special_names, self.normal_names)
-        factory = executor_factory or (lambda name: SimExecutor(cost))
-        self.instances: Dict[str, RankingInstance] = {}
-        for name in self.special_names + self.normal_names:
-            icfg = InstanceConfig(
-                name=name, hbm_cache_bytes=cfg.hbm_cache_bytes,
-                special=name.startswith("special"))
-            icfg.dram.dram_budget_bytes = cfg.dram_budget_bytes
-            self.instances[name] = RankingInstance(icfg, factory(name))
-        self._req_ids = itertools.count()
-        self.slo = SLOTracker()
+        self.runtime = RelayRuntime(self.cfg, cost, executor_factory,
+                                    clock=clock or WallClock())
+
+    # --- adapter surface (state lives on the shared runtime) -------------------
+
+    @property
+    def trigger(self):
+        return self.runtime.trigger
+
+    @property
+    def router(self):
+        return self.runtime.router
+
+    @property
+    def instances(self) -> Dict:
+        return self.runtime.instances
+
+    @property
+    def slo(self):
+        return self.runtime.slo
+
+    @property
+    def special_names(self):
+        return self.runtime.special
+
+    @property
+    def normal_names(self):
+        return self.runtime.normal
 
     # --- stage 1: retrieval side-path ----------------------------------------
     def on_retrieval(self, meta: UserMeta, now: float
                      ) -> Optional[Request]:
         """Trigger assessment; returns the auxiliary pre-infer signal if
         the request was admitted (caller/simulator delivers it)."""
-        signal = Request.pre_infer(next(self._req_ids), meta, now)
-        target = self.router.route(signal)  # consistent hash on user key
-        decision = self.trigger.admit(meta, target, now)
-        if not decision.admitted:
-            return None
-        signal.body["target"] = target
+        signal, _target = self.runtime.open_lifecycle(meta, now)
         return signal
 
     def deliver_pre_infer(self, signal: Request, now: float
@@ -75,13 +103,7 @@ class RelayGRService:
 
     # --- stage 3: fine-grained ranking ----------------------------------------
     def on_rank(self, meta: UserMeta, now: float) -> RankResult:
-        if self.cfg.long_seq_threshold:
-            long_seq = meta.prefix_len >= self.cfg.long_seq_threshold
-        else:
-            long_seq = self.trigger.assess(meta).at_risk
-        req = Request.rank(next(self._req_ids), meta, now=now,
-                           long_sequence=long_seq)
-        target = self.router.route(req)
+        req, target = self.runtime.bind_rank(meta, now)
         result = self.instances[target].handle_rank(req, now)
         self.slo.observe(now=now, e2e_ms=result.latency_ms,
                          hit=result.hit.value,
@@ -89,24 +111,14 @@ class RelayGRService:
         return result
 
     # --- synchronous end-to-end (live mode / tests) ----------------------------
-    def submit(self, meta: UserMeta, now: float = 0.0) -> RankResult:
-        signal = self.on_retrieval(meta, now)
-        pre = {}
-        if signal is not None:
-            pre = self.deliver_pre_infer(signal, now)
-        result = self.on_rank(meta, now + 1e-3)
-        if pre:
-            result.components["pre"] = pre["pre"]
-        return result
+    def submit(self, meta: UserMeta, now: Optional[float] = None
+               ) -> RankResult:
+        """Run one request through the full event-driven lifecycle
+        (admission at arrival, pre-infer on the side path, ranking after
+        the retrieval/preprocess slack).  ``latency_ms`` always equals
+        ``sum(components.values())``."""
+        return self.runtime.submit(meta, now)
 
     # --- observability -----------------------------------------------------------
     def stats(self) -> Dict[str, Dict]:
-        agg = {"trigger": dict(self.trigger.stats),
-               "router": dict(self.router.stats),
-               "slo": self.slo.summary(now=0.0)}
-        inst = {}
-        for name, i in self.instances.items():
-            inst[name] = {**i.stats, "hbm": dict(i.hbm.stats),
-                          "dram": dict(i.expander.stats)}
-        agg["instances"] = inst
-        return agg
+        return self.runtime.stats()

@@ -2,9 +2,12 @@
 
 ``python -m repro.launch.serve --requests 200`` boots a live RelayGR
 service (real HSTU compute on the local device), replays a synthetic
-request stream through retrieval -> trigger -> affinity routing ->
-ranking, and reports hit rates + latency components.  ``--sim`` switches
-to the discrete-event cluster simulation at production QPS.
+request stream through the shared event-driven relay runtime —
+retrieval -> trigger -> affinity routing -> ranking — and reports hit
+rates + latency components.  ``--sim`` switches to the virtual-clock
+cluster simulation at production QPS.  Both modes drive the identical
+``RelayRuntime`` state machine (repro.core.runtime); only the clock and
+the executor differ.
 """
 
 from __future__ import annotations
@@ -15,8 +18,8 @@ import json
 import jax
 import numpy as np
 
-from repro.core import (GRCostModel, LiveExecutor, RelayGRService,
-                        ServiceConfig, TriggerConfig)
+from repro.core import (ClusterConfig, GRCostModel, LiveExecutor,
+                        RelayGRService, TriggerConfig, relay_config)
 from repro.data.synthetic import (UserBehaviorStore, WorkloadConfig,
                                   request_stream)
 from repro.models import build_model, get_config
@@ -36,10 +39,10 @@ def main(argv=None):
     cost = GRCostModel(get_config(args.arch))
 
     if args.sim:
-        from repro.serving.simulator import SimConfig, run_sim
+        from repro.serving.simulator import run_sim
         store = UserBehaviorStore()
         arr = request_stream(store, args.qps, args.requests / args.qps)
-        s = run_sim(SimConfig(trigger=TriggerConfig(n_instances=10)),
+        s = run_sim(relay_config(trigger=TriggerConfig(n_instances=10)),
                     cost, arr)
         print(json.dumps(s, indent=1))
         return s
@@ -51,8 +54,9 @@ def main(argv=None):
         vocab=cfg.vocab, n_items=64, incr_len=16, len_mu=6.8, len_sigma=0.9,
         max_len=2048))
     svc = RelayGRService(
-        ServiceConfig(trigger=TriggerConfig(n_instances=4, r2=0.5,
-                                            rank_p99_budget_ms=20.0)),
+        relay_config(trigger=TriggerConfig(n_instances=4, r2=0.5,
+                                           rank_p99_budget_ms=20.0),
+                     cluster=ClusterConfig()),
         cost,
         executor_factory=lambda name: LiveExecutor(model, params, store))
     hits, lat = {}, []
@@ -61,6 +65,7 @@ def main(argv=None):
         if i >= args.requests:
             break
         r = svc.submit(meta, now=t)
+        assert abs(r.latency_ms - sum(r.components.values())) < 1e-6
         hits[r.hit.value] = hits.get(r.hit.value, 0) + 1
         lat.append(r.components["rank"])
     print(f"requests={args.requests} hits={hits}")

@@ -1,53 +1,40 @@
-"""Discrete-event cluster simulator for RelayGR.
+"""Discrete-event cluster simulator for RelayGR — runtime adapter.
 
-Replays the relay-race state machines (trigger admission, affinity
-routing, HBM window, expander single-flight) under a virtual clock with
-explicit resource contention:
+The simulator is now a thin virtual-clock adapter over the canonical
+event-driven state machine in ``repro.core.runtime`` (``RelayRuntime``):
+trigger admission, affinity routing, HBM window, expander single-flight,
+M model slots and the bounded-concurrency PCIe channel all execute in
+the runtime, identically to live mode — the simulator merely feeds it a
+timed arrival stream under a ``VirtualClock`` so cluster-scale P99 /
+throughput traces replay in milliseconds without real NPUs.  Per-
+operation latencies come from ``repro.core.costmodel`` via the ``sim``
+executor, calibrated against the paper's reported component numbers.
 
-  * each instance has M model slots (NPU concurrency) — pre-infer and
-    ranking jobs queue for slots FIFO;
-  * each instance has a bounded-concurrency H2D channel (PCIe) shared by
-    embedding uploads and DRAM->HBM cache reloads;
-  * out-of-order arrivals are exercised naturally: if ranking wins the
-    race against its own pre-infer signal, the pseudo-pre-infer step
-    parks the ranking job on the user's single-flight queue until psi
-    lands in HBM (at-most-one reload / compute per user per burst).
-
-This is how the paper-figure benchmarks measure P99 latency, SLO
--compliant throughput and maximum supported sequence length without real
-NPUs; the per-operation latencies come from repro.core.costmodel, which
-is calibrated against the paper's reported component numbers.
+``SimConfig`` and ``PipelineConfig`` remain importable here as
+deprecation shims; new code should build a ``RelayConfig`` via
+``repro.core.runtime.relay_config``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
-from collections import defaultdict, deque
-from typing import Callable, Dict, Iterable, List, Optional, Tuple
+import warnings
+from typing import Dict, Iterable, List, Tuple
 
-import numpy as np
-
-from repro.core.cache import HBMCacheStore
+from repro.core.clock import VirtualClock
 from repro.core.costmodel import GRCostModel
-from repro.core.expander import DRAMExpander, ExpanderConfig
-from repro.core.router import AffinityRouter
-from repro.core.trigger import SequenceAwareTrigger, TriggerConfig
-from repro.core.types import HitKind, UserMeta
+from repro.core.runtime import (ClusterConfig, PipelineConfig, Record,
+                                RelayConfig, RelayRuntime, as_relay_config,
+                                relay_config)
+from repro.core.trigger import TriggerConfig
+from repro.core.types import UserMeta
 
-
-@dataclasses.dataclass(frozen=True)
-class PipelineConfig:
-    retrieval_ms: float = 40.0
-    preprocess_ms: float = 25.0
-    trigger_signal_ms: float = 3.0       # retrieval-side-path delay
-    pipeline_slo_ms: float = 135.0       # end-to-end P99 SLO
-    rank_budget_ms: float = 50.0         # ranking-stage budget
+__all__ = ["ClusterSim", "PipelineConfig", "Record", "SimConfig", "run_sim"]
 
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
+    """DEPRECATED: use ``relay_config(trigger=..., cluster=...)``."""
     pipeline: PipelineConfig = PipelineConfig()
     trigger: TriggerConfig = TriggerConfig(n_instances=10)
     relay_enabled: bool = True           # False -> baseline
@@ -57,312 +44,71 @@ class SimConfig:
     pcie_concurrency: int = 4
     seed: int = 0
 
+    def __post_init__(self):
+        warnings.warn(
+            "SimConfig is deprecated; build a RelayConfig with "
+            "repro.core.runtime.relay_config(trigger=..., cluster=...)",
+            DeprecationWarning, stacklevel=3)
 
-@dataclasses.dataclass
-class Record:
-    user_id: int
-    t_arrival: float
-    prefix_len: int = 0
-    t_done: float = 0.0
-    rank_stage_ms: float = 0.0
-    pre_ms: float = 0.0
-    load_ms: float = 0.0
-    rank_ms: float = 0.0
-    queue_ms: float = 0.0
-    hit: str = "miss"
-
-    @property
-    def e2e_ms(self) -> float:
-        return (self.t_done - self.t_arrival) * 1e3
-
-
-class _Instance:
-    """Simulated ranking instance: slot queue + PCIe channel + caches."""
-
-    def __init__(self, name: str, sim: "ClusterSim", special: bool):
-        self.name = name
-        self.sim = sim
-        self.special = special
-        self.free_slots = sim.cfg.m_slots
-        self.queue: deque = deque()
-        self.pcie_free = sim.cfg.pcie_concurrency
-        self.pcie_queue: deque = deque()
-        self.hbm = HBMCacheStore(int(sim.cfg.hbm_cache_bytes))
-        self.expander = DRAMExpander(ExpanderConfig(
-            dram_budget_bytes=sim.cfg.dram_budget_bytes,
-            max_reload_concurrency=sim.cfg.pcie_concurrency))
-        self.inflight_pre: set = set()
-        self.user_waiters: Dict[int, List] = defaultdict(list)
-        self.busy_ms = 0.0
-
-    # --- slot scheduling ---------------------------------------------------
-    def enqueue(self, job: dict, now: float):
-        job.setdefault("t_enqueue", now)
-        self.queue.append(job)
-        self._maybe_start(now)
-
-    def _maybe_start(self, now: float):
-        while self.free_slots > 0 and self.queue:
-            job = self.queue.popleft()
-            self.free_slots -= 1
-            self.sim.schedule(now, "job_start", inst=self, job=job)
-
-    def release_slot(self, now: float):
-        self.free_slots += 1
-        self._maybe_start(now)
-
-    # --- pcie channel --------------------------------------------------------
-    def pcie_acquire(self, now: float, cb: Callable):
-        if self.pcie_free > 0:
-            self.pcie_free -= 1
-            cb(now)
-        else:
-            self.pcie_queue.append(cb)
-
-    def pcie_release(self, now: float):
-        if self.pcie_queue:
-            cb = self.pcie_queue.popleft()
-            cb(now)
-        else:
-            self.pcie_free += 1
+    def to_relay(self) -> RelayConfig:
+        return relay_config(
+            trigger=self.trigger, pipeline=self.pipeline,
+            cluster=ClusterConfig(
+                relay_enabled=self.relay_enabled,
+                dram_budget_bytes=self.dram_budget_bytes,
+                hbm_cache_bytes=self.hbm_cache_bytes,
+                m_slots=self.m_slots,
+                pcie_concurrency=self.pcie_concurrency,
+                seed=self.seed))
 
 
 class ClusterSim:
-    def __init__(self, cfg: SimConfig, cost: GRCostModel):
-        self.cfg = cfg
-        self.cost = cost
-        self.trigger = SequenceAwareTrigger(cfg.trigger, cost)
-        ns = cfg.trigger.n_special
-        nn = max(cfg.trigger.n_instances - ns, 1)
-        self.special = [f"special-{i}" for i in range(ns)]
-        self.normal = [f"normal-{i}" for i in range(nn)]
-        self.router = AffinityRouter(self.special, self.normal)
-        self.instances = {n: _Instance(n, self, n.startswith("special"))
-                          for n in self.special + self.normal}
-        self.events: list = []
-        self.records: List[Record] = []
-        self._seq = itertools.count()
-        self.now = 0.0
+    """Virtual-clock adapter: replay a timed arrival stream through the
+    shared relay-race runtime and report cluster-scale metrics."""
 
-    # --- event machinery --------------------------------------------------
-    def schedule(self, t: float, kind: str, **kw):
-        heapq.heappush(self.events, (t, next(self._seq), kind, kw))
+    def __init__(self, cfg, cost: GRCostModel, executor_factory=None):
+        self.cfg = as_relay_config(cfg)
+        self.runtime = RelayRuntime(self.cfg, cost, executor_factory,
+                                    clock=VirtualClock())
 
-    def run(self, arrivals: Iterable[Tuple[float, UserMeta]]):
-        for t, meta in arrivals:
-            self.schedule(t, "arrival", meta=meta)
-        while self.events:
-            t, _, kind, kw = heapq.heappop(self.events)
-            self.now = t
-            getattr(self, f"_on_{kind}")(t, **kw)
-        return self.summary()
+    # --- adapter surface ----------------------------------------------------
 
-    # --- pipeline stages -----------------------------------------------------
-    def _on_arrival(self, t: float, meta: UserMeta):
-        rec = Record(user_id=meta.user_id, t_arrival=t,
-                     prefix_len=meta.prefix_len)
-        pp = self.cfg.pipeline
-        if self.cfg.relay_enabled:
-            key_target = self.router.ring.route(meta.user_id)
-            d = self.trigger.admit(meta, key_target, t)
-            if d.admitted:
-                self.schedule(t + pp.trigger_signal_ms / 1e3, "pre_signal",
-                              meta=meta, target=key_target)
-        t_rank = t + (pp.retrieval_ms + pp.preprocess_ms) / 1e3
-        self.schedule(t_rank, "rank_arrival", meta=meta, rec=rec)
+    @property
+    def instances(self) -> Dict:
+        return self.runtime.instances
 
-    def _on_pre_signal(self, t: float, meta: UserMeta, target: str):
-        inst = self.instances[target]
-        inst.inflight_pre.add(meta.user_id)
-        inst.enqueue({"kind": "pre", "meta": meta}, t)
+    @property
+    def router(self):
+        return self.runtime.router
 
-    def _on_rank_arrival(self, t: float, meta: UserMeta, rec: Record):
-        if self.cfg.relay_enabled and self.trigger.assess(meta).at_risk:
-            target = self.router.ring.route(meta.user_id)
-        else:
-            target = self.normal[meta.user_id % len(self.normal)]
-        rec.t_rank_arrival = t
-        self.instances[target].enqueue(
-            {"kind": "rank", "meta": meta, "rec": rec}, t)
+    @property
+    def trigger(self):
+        return self.runtime.trigger
 
-    # --- job execution ----------------------------------------------------------
-    def _on_job_start(self, t: float, inst: _Instance, job: dict):
-        meta = job["meta"]
-        if job["kind"] == "pre":
-            # dedup: psi already local (HBM or DRAM) -> pseudo step only.
-            # Higher DRAM hit rates therefore reduce pre-inference work
-            # and NPU utilization (paper Fig. 14b).
-            if meta.user_id in inst.hbm:
-                self.schedule(t, "pre_done", inst=inst, meta=meta, ms=0.0)
-                return
-            if inst.expander.entries.get(meta.user_id) is not None:
-                ms = self.cost.dram_load_ms(meta.prefix_len)
+    @property
+    def special(self) -> List[str]:
+        return self.runtime.special
 
-                def start(t2, inst=inst, meta=meta, ms=ms):
-                    self.schedule(t2 + ms / 1e3, "pre_reload_done",
-                                  inst=inst, meta=meta, ms=ms)
+    @property
+    def normal(self) -> List[str]:
+        return self.runtime.normal
 
-                inst.pcie_acquire(t, start)
-                return
-            ms = self.cost.pre_infer_ms(meta.prefix_len)
-            inst.busy_ms += ms
-            self.schedule(t + ms / 1e3, "pre_done", inst=inst, meta=meta,
-                          ms=ms)
-            return
-        # ranking job
-        rec: Record = job["rec"]
-        rec.queue_ms += (t - job["t_enqueue"]) * 1e3
-        uid = meta.user_id
-        if not self.cfg.relay_enabled:
-            self._full_rank(t, inst, meta, rec)
-            return
-        action, entry = inst.expander.pseudo_pre_infer(uid, inst.hbm, t)
-        if action == "hbm":
-            self._rank_cached(t, inst, meta, rec, dram=False)
-        elif action == "wait":
-            inst.expander.finish(uid)
-            if uid in inst.inflight_pre or inst.expander.flight.waiters(uid):
-                # park on the user's single-flight queue; slot goes back
-                inst.user_waiters[uid].append((job, rec))
-                inst.release_slot(t)
-            else:
-                e = inst.hbm.lookup(uid)
-                if e is not None:
-                    self._rank_cached(t, inst, meta, rec, dram=False)
-                else:
-                    self._full_rank(t, inst, meta, rec)
-        elif action == "reload":
-            ms = self.cost.dram_load_ms(meta.prefix_len)
+    @property
+    def records(self) -> List[Record]:
+        return self.runtime.records
 
-            def start_reload(t2, inst=inst, meta=meta, rec=rec, ms=ms):
-                self.schedule(t2 + ms / 1e3, "reload_done", inst=inst,
-                              meta=meta, rec=rec, ms=ms)
+    @property
+    def now(self) -> float:
+        return self.runtime.now
 
-            inst.pcie_acquire(t, start_reload)
-        else:  # miss
-            if uid in inst.inflight_pre:
-                # out-of-order: rank arrived before its pre-infer finished
-                inst.user_waiters[uid].append((job, rec))
-                inst.expander.finish(uid)
-                inst.release_slot(t)
-            else:
-                inst.expander.finish(uid)
-                self._full_rank(t, inst, meta, rec)
+    def run(self, arrivals: Iterable[Tuple[float, UserMeta]]
+            ) -> Dict[str, float]:
+        return self.runtime.run(arrivals)
 
-    def _rank_cached(self, t: float, inst: _Instance, meta: UserMeta,
-                     rec: Record, dram: bool):
-        ms = self.cost.rank_on_cache_ms(meta.prefix_len, meta.incr_len,
-                                        meta.n_items)
-        rec.rank_ms = ms
-        rec.hit = HitKind.DRAM_HIT.value if dram else HitKind.HBM_HIT.value
-        inst.busy_ms += ms
-        self.schedule(t + ms / 1e3, "rank_done", inst=inst, meta=meta,
-                      rec=rec)
-
-    def _full_rank(self, t: float, inst: _Instance, meta: UserMeta,
-                   rec: Record):
-        ms = self.cost.full_rank_ms(meta.prefix_len, meta.incr_len,
-                                    meta.n_items)
-        rec.rank_ms = ms
-        rec.hit = HitKind.MISS_FALLBACK.value
-        inst.busy_ms += ms
-        self.schedule(t + ms / 1e3, "rank_done", inst=inst, meta=meta,
-                      rec=rec)
-
-    # --- completions -------------------------------------------------------------
-    def _on_pre_done(self, t: float, inst: _Instance, meta: UserMeta,
-                     ms: float):
-        uid = meta.user_id
-        inst.inflight_pre.discard(uid)
-        nbytes = self.cost.kv_bytes(meta.prefix_len)
-        evicted = inst.hbm.insert(uid, ("psi", uid), nbytes, t,
-                                  prefix_len=meta.prefix_len)
-        for e in evicted:
-            if e.consumed:
-                inst.expander.spill(e)
-        inst.release_slot(t)
-        self._wake_waiters(t, inst, uid, pre_ms=ms)
-
-    def _on_pre_reload_done(self, t: float, inst: _Instance, meta: UserMeta,
-                            ms: float):
-        uid = meta.user_id
-        inst.inflight_pre.discard(uid)
-        inst.pcie_release(t)
-        inst.expander.complete_reload(uid, inst.hbm, t)
-        inst.release_slot(t)
-        self._wake_waiters(t, inst, uid)
-
-    def _on_reload_done(self, t: float, inst: _Instance, meta: UserMeta,
-                        rec: Record, ms: float):
-        uid = meta.user_id
-        rec.load_ms = ms
-        inst.pcie_release(t)
-        inst.expander.complete_reload(uid, inst.hbm, t)
-        inst.expander.finish(uid)
-        self._rank_cached(t, inst, meta, rec, dram=True)
-        self._wake_waiters(t, inst, uid)
-
-    def _wake_waiters(self, t: float, inst: _Instance, uid: int,
-                      pre_ms: float = 0.0):
-        for job, rec in inst.user_waiters.pop(uid, []):
-            rec.pre_ms = max(rec.pre_ms, pre_ms)
-            inst.enqueue(job, t)
-
-    def _on_rank_done(self, t: float, inst: _Instance, meta: UserMeta,
-                      rec: Record):
-        uid = meta.user_id
-        e = inst.hbm.consume(uid)
-        if e is not None and self.cfg.dram_budget_bytes > 0:
-            # proactive spill copy for short-term cross-request reuse
-            snap = dataclasses.replace(e)
-            inst.expander.spill(snap)
-        rec.t_done = t
-        rec.rank_stage_ms = rec.queue_ms + rec.load_ms + rec.rank_ms
-        self.records.append(rec)
-        inst.release_slot(t)
-
-    # --- metrics -------------------------------------------------------------------
     def summary(self) -> Dict[str, float]:
-        if not self.records:
-            return {"n": 0}
-        pp = self.cfg.pipeline
-        e2e = np.array([r.e2e_ms for r in self.records])
-        rank_stage = np.array([r.rank_stage_ms for r in self.records])
-        ok = e2e <= pp.pipeline_slo_ms
-        dur = (max(r.t_done for r in self.records)
-               - min(r.t_arrival for r in self.records))
-        hits = defaultdict(int)
-        for r in self.records:
-            hits[r.hit] += 1
-        n = len(self.records)
-        return {
-            "n": n,
-            "p50_ms": float(np.percentile(e2e, 50)),
-            "p99_ms": float(np.percentile(e2e, 99)),
-            "rank_p99_ms": float(np.percentile(rank_stage, 99)),
-            "success_rate": float(ok.mean()),
-            "throughput_qps": n / max(dur, 1e-9),
-            "goodput_qps": int(ok.sum()) / max(dur, 1e-9),
-            "hbm_hit": hits[HitKind.HBM_HIT.value] / n,
-            "dram_hit": hits[HitKind.DRAM_HIT.value] / n,
-            "miss": hits[HitKind.MISS_FALLBACK.value] / n,
-            "pre_p99_ms": float(np.percentile(
-                [r.pre_ms for r in self.records], 99)),
-            "load_p99_ms": float(np.percentile(
-                [r.load_ms for r in self.records], 99)),
-            "rank_ms_p99": float(np.percentile(
-                [r.rank_ms for r in self.records], 99)),
-            "special_util": self._util(self.special, dur),
-            "normal_util": self._util(self.normal, dur),
-        }
-
-    def _util(self, names, dur) -> float:
-        if not names or dur <= 0:
-            return 0.0
-        busy = sum(self.instances[n].busy_ms for n in names) / 1e3
-        return busy / (dur * self.cfg.m_slots * len(names))
+        return self.runtime.summary()
 
 
-def run_sim(cfg: SimConfig, cost: GRCostModel,
+def run_sim(cfg, cost: GRCostModel,
             arrivals: Iterable[Tuple[float, UserMeta]]) -> Dict[str, float]:
     return ClusterSim(cfg, cost).run(arrivals)

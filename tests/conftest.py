@@ -6,10 +6,18 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import numpy as np
 import pytest
-from hypothesis import settings
 
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+# hypothesis is optional: register the CI profile only when present so
+# the suite still collects on minimal environments (the property-based
+# tests themselves skip via tests/_hyp.py).
+try:
+    from hypothesis import settings
+except ImportError:
+    settings = None
+
+if settings is not None:
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
 
 
 @pytest.fixture(scope="session")

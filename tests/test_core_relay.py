@@ -3,8 +3,7 @@ expander) — the paper's invariants I1/I2 as executable properties."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (AffinityRouter, ConsistentHashRing, DRAMExpander,
                         ExpanderConfig, GRCostModel, HBMCacheStore,
@@ -138,6 +137,54 @@ def test_churn_minimal_remap(n_nodes):
     ring.remove(nodes[0])
     for k, owner in before.items():
         if owner != nodes[0]:
+            assert ring.route(k) == owner
+
+
+def test_same_user_key_always_same_special_instance():
+    """Consistent-hash stability: the binding is a pure function of the
+    key and the node set — stable across repeated routes and across
+    independently constructed rings."""
+    specials = [f"s{i}" for i in range(7)]
+    r1 = AffinityRouter(specials, ["n0"])
+    r2 = AffinityRouter(list(specials), ["n0", "n1"])  # different normals
+    for uid in (0, 1, 42, 12345, 10**8, 987654321):
+        req = Request.pre_infer(0, UserMeta(user_id=uid, prefix_len=4096))
+        first = r1.route(req)
+        for _ in range(25):
+            assert r1.route(req) == first
+        assert r2.route(req) == first   # normal pool never perturbs it
+
+
+def test_ring_add_remaps_only_expected_fraction():
+    """Adding one instance to an N-node ring moves ~1/(N+1) of the keys
+    (vnode smoothing, 3x bound) and every moved key lands on the new
+    node; removing it restores the exact prior mapping."""
+    nodes = [f"s{i}" for i in range(5)]
+    ring = ConsistentHashRing(nodes, vnodes=256)
+    keys = range(2000)
+    before = {k: ring.route(k) for k in keys}
+    ring.add("s5")
+    after = {k: ring.route(k) for k in keys}
+    moved = [k for k in keys if after[k] != before[k]]
+    assert 0 < len(moved) <= 3 * len(before) / (len(nodes) + 1)
+    assert all(after[k] == "s5" for k in moved)
+    ring.remove("s5")
+    assert all(ring.route(k) == before[k] for k in keys)
+
+
+def test_ring_remove_remaps_only_owned_keys_and_spreads_them():
+    """Removing one node orphans only its keys, and the orphans spread
+    over the survivors instead of piling onto one neighbour."""
+    nodes = [f"s{i}" for i in range(6)]
+    ring = ConsistentHashRing(nodes, vnodes=256)
+    keys = range(2000)
+    before = {k: ring.route(k) for k in keys}
+    ring.remove(nodes[2])
+    orphan_owners = {ring.route(k) for k, o in before.items()
+                     if o == nodes[2]}
+    assert len(orphan_owners) >= 3          # vnodes scatter the orphans
+    for k, owner in before.items():
+        if owner != nodes[2]:
             assert ring.route(k) == owner
 
 

@@ -1,0 +1,247 @@
+"""Live-mode / sim-mode parity: both adapters drive ONE state machine.
+
+The acceptance contract for the RelayRuntime refactor: for a fixed
+seeded request stream, the live-path adapter (``RelayGRService.submit``,
+wall clock, per-request drain) and the virtual-clock adapter
+(``ClusterSim.run``, global drain) must produce identical per-request
+``HitKind`` sequences and identical latency-component breakdowns —
+proving the relay-race lifecycle exists exactly once in the codebase.
+
+Also covers: the ``submit`` latency-consistency regression
+(``latency_ms == sum(components.values())``), the legacy config shims,
+``relay_config`` field routing, and the executor/policy registries.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (ClusterConfig, Executor, GRCostModel, HitKind,
+                        RelayConfig, RelayGRService, SimExecutor,
+                        TriggerConfig, UserMeta, relay_config)
+from repro.core.engine import RankingInstance
+from repro.core.policies import make_trigger
+from repro.core.runtime import InstanceRuntime, as_relay_config
+from repro.models import get_config
+from repro.serving.simulator import ClusterSim
+
+COST = GRCostModel(get_config("hstu_gr"))
+
+# HBM window of ~2 psi entries per instance at L=4096 (~64 MiB each)
+# plus a throttled admission bucket (q_m=0.1): repeat visitors cycle
+# HBM -> DRAM, and rate-limited revisits take the rank-path DRAM reload,
+# so the trace exercises every HitKind, not just the easy HBM path.
+PARITY_CFG = relay_config(
+    trigger=TriggerConfig(n_instances=5, r2=0.4, kv_p99_len=4096, q_m=0.1),
+    cluster=ClusterConfig(hbm_cache_bytes=1.5e8, dram_budget_bytes=500e9))
+
+
+def _arrivals(n=60, seed=0):
+    """Seeded stream, spaced so each request's event cascade completes
+    before the next arrival — the regime where per-request drain (live)
+    and global drain (sim) must be indistinguishable."""
+    rng = np.random.default_rng(seed)
+    pool = [100 + i for i in range(4)]          # repeat visitors
+    out = []
+    for i in range(n):
+        t = 1.0 * (i + 1)
+        if rng.random() > 0.8:
+            meta = UserMeta(user_id=int(rng.integers(0, 50)), prefix_len=64)
+        else:
+            meta = UserMeta(user_id=pool[int(rng.integers(0, len(pool)))],
+                            prefix_len=4096)
+        out.append((t, meta))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the parity contract
+# ---------------------------------------------------------------------------
+
+
+def test_live_and_sim_traces_identical():
+    svc = RelayGRService(PARITY_CFG, COST)
+    live_results = [svc.submit(meta, now=t) for t, meta in _arrivals()]
+
+    sim = ClusterSim(PARITY_CFG, COST)
+    sim.run(iter(_arrivals()))
+
+    live_recs, sim_recs = svc.runtime.records, sim.runtime.records
+    assert len(live_recs) == len(sim_recs) == len(live_results)
+    for a, b, r in zip(live_recs, sim_recs, live_results):
+        assert a.user_id == b.user_id
+        assert a.hit == b.hit == r.hit.value
+        for f in ("pre_ms", "load_ms", "rank_ms", "queue_ms"):
+            assert getattr(a, f) == pytest.approx(getattr(b, f), abs=1e-9), \
+                f"component {f} diverged for user {a.user_id}"
+        assert a.e2e_ms == pytest.approx(b.e2e_ms, abs=1e-9)
+
+    kinds = {r.hit for r in live_recs}
+    assert {HitKind.HBM_HIT.value, HitKind.DRAM_HIT.value,
+            HitKind.MISS_FALLBACK.value} <= kinds, \
+        f"parity trivially true: workload only produced {kinds}"
+
+
+def test_latency_equals_component_sum_and_wall_time():
+    """Accounting invariant in both modes: latency_ms is exactly the
+    component sum, which is exactly the rank-stage wall time."""
+    svc = RelayGRService(PARITY_CFG, COST)
+    results = [svc.submit(meta, now=t) for t, meta in _arrivals()]
+    for r, rec in zip(results, svc.runtime.records):
+        assert r.latency_ms == pytest.approx(
+            sum(r.components.values()), abs=1e-9)
+        assert r.latency_ms == pytest.approx(
+            (rec.t_done - rec.t_rank_arrival) * 1e3, abs=1e-6)
+
+
+def test_submit_latency_includes_pre_component():
+    """Regression (former RelayGRService.submit bug): components['pre']
+    was bolted on after latency_ms had been summed.  Now the runtime
+    recomputes: an admitted long-sequence request whose pre-infer
+    outlives the retrieval slack reports pre > 0 AND a consistent sum."""
+    svc = RelayGRService(
+        relay_config(trigger=TriggerConfig(n_instances=5, r2=0.4)), COST)
+    meta = UserMeta(user_id=7, prefix_len=4096)
+    r = svc.submit(meta, now=0.0)
+    assert r.hit == HitKind.HBM_HIT          # relay worked
+    assert r.components["pre"] > 0.0         # rank parked on its psi
+    assert r.latency_ms == pytest.approx(sum(r.components.values()),
+                                         abs=1e-9)
+
+
+def test_manual_stage_api_unchanged():
+    """The stage-level API (tests/ablations drive) composes the same
+    kernels: pre-infer delivered out of band -> ranking hits HBM with a
+    zero pre component (psi was ready before ranking arrived)."""
+    svc = RelayGRService(
+        relay_config(trigger=TriggerConfig(n_instances=5, r2=0.4)), COST)
+    meta = UserMeta(user_id=11, prefix_len=4096)
+    sig = svc.on_retrieval(meta, now=0.0)
+    assert sig is not None
+    svc.deliver_pre_infer(sig, now=0.0)
+    r = svc.on_rank(meta, now=0.1)
+    assert r.hit == HitKind.HBM_HIT
+    assert r.components["pre"] == 0.0
+    assert r.latency_ms == pytest.approx(sum(r.components.values()))
+
+
+def test_rank_reload_followers_park_and_hit():
+    """Single-flight contract on the rank path: a second rank request
+    arriving while the same user's DRAM->HBM reload is in flight parks
+    and then hits HBM — it must not fall back to full inference."""
+    from repro.core.cache import CacheEntry
+    cfg = relay_config(trigger=TriggerConfig(n_instances=5, r2=0.4),
+                       cluster=ClusterConfig(trigger_policy="never"))
+    sim = ClusterSim(cfg, COST)
+    uid = 42
+    target = sim.runtime.router.ring.route(uid)
+    sim.instances[target].expander.spill(
+        CacheEntry(uid, "psi", COST.kv_bytes(4096), 0.0, consumed=True,
+                   prefix_len=4096))
+    meta = UserMeta(user_id=uid, prefix_len=4096)
+    sim.run([(0.0, meta), (0.001, meta)])     # 1ms apart, reload ~3.4ms
+    hits = [r.hit for r in sim.records]
+    assert hits == [HitKind.DRAM_HIT.value, HitKind.HBM_HIT.value]
+    reloads = sum(i.expander.stats["reloads"]
+                  for i in sim.instances.values())
+    assert reloads == 1
+
+
+def test_instances_share_one_implementation():
+    """Both adapters schedule the same InstanceRuntime objects — the
+    legacy RankingInstance name IS the runtime instance class."""
+    assert RankingInstance is InstanceRuntime
+    sim = ClusterSim(PARITY_CFG, COST)
+    svc = RelayGRService(PARITY_CFG, COST)
+    for pool in (sim.instances, svc.instances):
+        assert all(isinstance(i, InstanceRuntime) for i in pool.values())
+
+
+# ---------------------------------------------------------------------------
+# RelayConfig + deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_relay_config_routes_fields_to_subconfigs():
+    cfg = relay_config(relay_enabled=False, retrieval_ms=10.0, r2=0.3)
+    assert cfg.cluster.relay_enabled is False
+    assert cfg.pipeline.retrieval_ms == 10.0
+    assert cfg.trigger.r2 == 0.3
+    with pytest.raises(TypeError):
+        relay_config(definitely_not_a_field=1)
+    # a field declared by several sub-configs is set on ALL of them, so
+    # the trigger's Eq.3 capacity math always matches the real slots
+    cfg = relay_config(m_slots=2)
+    assert cfg.cluster.m_slots == 2
+    assert cfg.trigger.m_slots == 2
+
+
+def test_legacy_service_config_shim():
+    from repro.core.service import ServiceConfig
+    with pytest.warns(DeprecationWarning):
+        sc = ServiceConfig(hbm_cache_bytes=1e9, long_seq_threshold=2048)
+    rc = as_relay_config(sc)
+    assert isinstance(rc, RelayConfig)
+    assert rc.cluster.hbm_cache_bytes == 1e9
+    assert rc.cluster.long_seq_threshold == 2048
+    svc = RelayGRService(sc, COST)           # still accepted everywhere
+    assert svc.cfg.cluster.hbm_cache_bytes == 1e9
+
+
+def test_legacy_sim_config_shim():
+    from repro.serving.simulator import SimConfig
+    with pytest.warns(DeprecationWarning):
+        c = SimConfig(relay_enabled=False, m_slots=3)
+    rc = as_relay_config(c)
+    assert rc.cluster.relay_enabled is False
+    assert rc.cluster.m_slots == 3
+    assert rc.trigger.n_instances == 10      # legacy default preserved
+
+
+# ---------------------------------------------------------------------------
+# executor + policy registries
+# ---------------------------------------------------------------------------
+
+
+def test_executor_protocol_and_registry():
+    from repro.core.executors import executor_names, get_executor
+    assert {"sim", "live"} <= set(executor_names())
+    ex = get_executor("sim")(COST)
+    assert isinstance(ex, SimExecutor) and isinstance(ex, Executor)
+    with pytest.raises(KeyError):
+        get_executor("warp-drive")
+
+
+def test_trigger_policy_registry():
+    short = UserMeta(user_id=1, prefix_len=64)
+    seq = make_trigger("sequence-aware", TriggerConfig(), COST)
+    assert not seq.admit(short, "i0", 0.0).admitted
+    allp = make_trigger("admit-all", TriggerConfig(), COST)
+    assert allp.admit(short, "i0", 0.0).admitted
+    never = make_trigger("never", TriggerConfig(), COST)
+    assert not never.admit(UserMeta(user_id=2, prefix_len=8192),
+                           "i0", 0.0).admitted
+    with pytest.raises(KeyError):
+        make_trigger("nope", TriggerConfig(), COST)
+
+
+def test_random_router_policy_breaks_affinity():
+    """Pluggability proof: swapping one config string removes the
+    producer/consumer rendezvous and the relay degrades to fallbacks."""
+    cfg = relay_config(trigger=TriggerConfig(n_instances=10, r2=0.5),
+                       cluster=ClusterConfig(router_policy="random", seed=3))
+    svc = RelayGRService(cfg, COST)
+    rng = np.random.default_rng(0)
+    hits = 0
+    n = 120
+    for i in range(n):
+        meta = UserMeta(user_id=int(rng.integers(0, 10**9)),
+                        prefix_len=4096)
+        sig = svc.on_retrieval(meta, now=i * 0.05)
+        if sig is not None:
+            svc.deliver_pre_infer(sig, now=i * 0.05)
+        r = svc.on_rank(meta, now=i * 0.05 + 1e-3)
+        hits += r.hit in (HitKind.HBM_HIT, HitKind.DRAM_HIT)
+    # 5 special instances -> ~1/5 chance of accidental rendezvous
+    assert hits / n < 0.5

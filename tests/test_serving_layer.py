@@ -7,10 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
-from hypothesis.stateful import (RuleBasedStateMachine, initialize,
-                                 invariant, rule)
+from _hyp import (RuleBasedStateMachine, given, initialize, invariant, rule,
+                  settings, st)
 
 from repro.core.cache import HBMCacheStore
 from repro.core.expander import DRAMExpander, ExpanderConfig

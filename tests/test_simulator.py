@@ -3,8 +3,7 @@ in the discrete-event model before the benchmarks quantify them."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core.costmodel import GRCostModel
 from repro.core.trigger import TriggerConfig

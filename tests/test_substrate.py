@@ -7,8 +7,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core.costmodel import GRCostModel
 from repro.data.synthetic import UserBehaviorStore, WorkloadConfig
