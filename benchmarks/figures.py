@@ -59,7 +59,11 @@ def _fixed_stream(L, qps, dur, *, refresh=0.0, horizon=6000, seed=0,
 
 
 def _cfg(mode: str, L: int, cost=None) -> RelayConfig:
-    """mode: baseline | relay | relay_dram"""
+    """mode: baseline | relay | relay_dram | relay_batched
+
+    ``relay_batched`` is the ``relay`` deployment with continuous
+    micro-batching switched on (same trigger/cache -> equal hit rates);
+    the throughput delta is pure batching."""
     relay = mode != "baseline"
     r2 = 0.8 if relay else 0.2   # 4 active instances either way
     hbm_cache = 4e9
@@ -71,7 +75,9 @@ def _cfg(mode: str, L: int, cost=None) -> RelayConfig:
         cluster=ClusterConfig(
             relay_enabled=relay,
             dram_budget_bytes=500e9 if mode == "relay_dram" else 0.0,
-            hbm_cache_bytes=hbm_cache),
+            hbm_cache_bytes=hbm_cache,
+            max_batch=8 if mode == "relay_batched" else 0,
+            batch_wait_ms=2.0),
     )
 
 
@@ -107,18 +113,21 @@ def _meets_ext_budget(s) -> bool:
 
 
 def _max_qps(mode, L, *, cost=None, lo=5, hi=1200, pipeline=None,
-             criterion=_meets_slo, n_items=512, refresh=None) -> float:
+             criterion=_meets_slo, n_items=512, refresh=None,
+             dur=SIM_S, coarse=False) -> float:
     """Largest offered QPS meeting the SLO criterion.
 
     Under the pipeline-SLO criterion the value is goodput (SLO-compliant
     completions/s); under stage-budget criteria it is raw completed
-    throughput (the paper's Fig.13d/14 y-axes)."""
+    throughput (the paper's Fig.13d/14 y-axes).  ``coarse`` widens the
+    bisection tolerance (used by --quick CI smoke runs)."""
     key = "goodput_qps" if criterion is _meets_slo else "throughput_qps"
     best = 0.0
-    while hi - lo > max(4, lo * 0.08):
+    slack = 0.30 if coarse else 0.08
+    while hi - lo > max(4, lo * slack):
         mid = (lo + hi) / 2
         s = _run(mode, L, mid, cost=cost, pipeline=pipeline,
-                 n_items=n_items, refresh=refresh)
+                 n_items=n_items, refresh=refresh, dur=dur)
         if criterion(s):
             best, lo = s[key], mid
         else:
@@ -420,7 +429,7 @@ def bench_relay_summary(quick: bool = False) -> Dict:
     L, qps = 2048, 60
     out: Dict[str, Dict] = {"meta": {
         "L": L, "offered_qps": qps, "slo_ms": SLO_MS, "sim_s": SIM_S}}
-    for mode in ("baseline", "relay", "relay_dram"):
+    for mode in ("baseline", "relay", "relay_dram", "relay_batched"):
         s = _run(mode, L, qps)
         entry = {
             "p50_ms": round(s["p50_ms"], 3),
@@ -432,8 +441,12 @@ def bench_relay_summary(quick: bool = False) -> Dict:
             "dram_hit": round(s["dram_hit"], 4),
             "miss": round(s["miss"], 4),
         }
-        if not quick:
-            entry["slo_qps"] = round(_max_qps(mode, L), 1)
+        # quick (CI smoke) still reports slo_qps — shorter sims and a
+        # coarser bisection keep it cheap while preserving the fields
+        # the workflow gate checks
+        entry["slo_qps"] = round(
+            _max_qps(mode, L, dur=4.0 if quick else SIM_S, coarse=quick),
+            1)
         out[mode] = entry
     return out
 

@@ -21,6 +21,9 @@ import json
 import sys
 import time
 
+# every BENCH_relay.json must report these serving modes
+RELAY_MODES = ("baseline", "relay", "relay_dram", "relay_batched")
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
@@ -65,6 +68,12 @@ def main(argv=None) -> None:
     if args.relay_json and not args.only:
         t0 = time.time()
         headline = figures.bench_relay_summary(quick=args.quick)
+        missing = [f"{mode}.{field}"
+                   for mode in RELAY_MODES
+                   for field in ("slo_qps", "p99_ms")
+                   if field not in headline.get(mode, {})]
+        if missing:  # CI gates on the headline schema — fail loudly
+            raise SystemExit(f"BENCH_relay headline incomplete: {missing}")
         with open(args.relay_json, "w") as f:
             json.dump(headline, f, indent=1, sort_keys=True)
         print(f"# wrote {args.relay_json} in {time.time() - t0:.1f}s",

@@ -8,12 +8,16 @@ memory-aware expander (DRAM reuse tier), HBM sliding-window cache
 (``RelayGRService``) and the cluster simulator drive through pluggable
 clocks, executors and policies.
 """
-from .cache import CacheEntry, HBMCacheStore
+from repro.serving.batching import (BatchAggregator, BatchingConfig,
+                                    PendingRank, bucket_of)
+
+from .cache import CacheEntry, HBMCacheStore, kv_nbytes
 from .clock import Clock, VirtualClock, WallClock
 from .costmodel import GRCostModel, HardwareModel
 from .engine import InstanceConfig, RankingInstance
-from .executors import (EXECUTORS, Executor, LiveExecutor, SimExecutor,
-                        executor_names, get_executor, register_executor)
+from .executors import (EXECUTORS, BatchedLiveExecutor, Executor,
+                        LiveExecutor, SimExecutor, executor_names,
+                        get_executor, register_executor)
 from .expander import DRAMExpander, ExpanderConfig, SingleFlight
 from .policies import (make_expander, make_router, make_trigger,
                        policy_names, register_expander, register_router,

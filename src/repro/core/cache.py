@@ -8,6 +8,20 @@ the budget sufficient for survival — the store itself just implements
 the window and reports violations (an admitted-but-evicted-before-
 consumption cache counts as a ``premature_eviction``; under a correctly
 configured trigger this stays at zero, and the property tests assert it).
+
+Accounting is conserved: every entry that ever entered the window is
+either still live or counted in ``evictions`` (budget pressure,
+same-user refresh, or an explicit ``pop``), so
+
+    stats["inserts"] == live_count + stats["evictions"]
+
+holds after any interleaving (tests/test_cache_properties.py).
+
+In live mode ``CacheEntry.value`` holds the real per-layer KV pytree
+psi(u) — (K, V) arrays of shape (L, B, P, H, D) as produced by
+``HSTUModel.prefill`` — which the batched executor pads and stacks
+directly (``repro.serving.batching.pad_psi``); ``kv_nbytes`` sizes such
+a pytree for budget accounting.
 """
 
 from __future__ import annotations
@@ -16,7 +30,23 @@ import dataclasses
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from .types import CacheState
+
+
+def kv_nbytes(value: Any) -> int:
+    """Bytes held by a KV pytree (nested tuples/lists/dicts of arrays);
+    scalar/stub values (the sim executor's psi token) count as zero."""
+    if isinstance(value, (tuple, list)):
+        return sum(kv_nbytes(v) for v in value)
+    if isinstance(value, dict):
+        return sum(kv_nbytes(v) for v in value.values())
+    shape = getattr(value, "shape", None)
+    dtype = getattr(value, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    return int(np.prod(shape)) * np.dtype(dtype).itemsize
 
 
 @dataclasses.dataclass
@@ -53,15 +83,16 @@ class HBMCacheStore:
         """Insert psi(u); evicts oldest entries past the budget.
         Returns the evicted entries (candidates for DRAM spill)."""
         if user_id in self.entries:
-            self._remove(user_id)
+            # same-user refresh: the superseded psi leaves the window
+            # (counted as an eviction for conservation, never premature —
+            # the fresher psi serves this lifecycle)
+            self._evict(user_id)
         entry = CacheEntry(user_id, value, int(nbytes), now,
                            prefix_len=prefix_len)
         evicted = []
         while self.used_bytes + entry.nbytes > self.budget and self.entries:
             old_uid, old = next(iter(self.entries.items()))
-            self._remove(old_uid)
-            old.state = CacheState.EVICTED
-            self.stats["evictions"] += 1
+            self._evict(old_uid)
             if not old.consumed:
                 self.stats["premature_evictions"] += 1
             evicted.append(old)
@@ -93,9 +124,12 @@ class HBMCacheStore:
     def pop(self, user_id: int) -> Optional[CacheEntry]:
         e = self.entries.get(user_id)
         if e is not None:
-            self._remove(user_id)
+            self._evict(user_id)
         return e
 
-    def _remove(self, user_id: int):
+    def _evict(self, user_id: int) -> CacheEntry:
         e = self.entries.pop(user_id)
         self.used_bytes -= e.nbytes
+        e.state = CacheState.EVICTED
+        self.stats["evictions"] += 1
+        return e

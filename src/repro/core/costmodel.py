@@ -37,6 +37,12 @@ class HardwareModel:
 class GRCostModel:
     cfg: ModelConfig
     hw: HardwareModel = HardwareModel()
+    # Marginal cost of adding one request to a bucketed batched rank
+    # launch, as a fraction of the dominant member's solo latency: small
+    # GR matmuls leave most of the MXU idle, so co-scheduled requests
+    # ride largely on the same pass (calibrated so an 8-deep batch costs
+    # ~2.4x one request, mirroring the live ``batched`` executor).
+    batch_factor: float = 0.2
 
     # ---- model primitives -------------------------------------------------
     def layer_param_flops(self) -> int:
@@ -91,6 +97,16 @@ class GRCostModel:
         fl = self.forward_flops(n) * dim_scale
         return (fl / self.hw.eff_flops * 1e3
                 + self.h2d_ms(n) + self.hw.host_feature_ms)
+
+    def batched_rank_ms(self, per_request_ms) -> float:
+        """Wall time of one micro-batched rank launch whose members would
+        individually cost ``per_request_ms`` — the sim-side mirror of the
+        live ``batched`` executor (consumed by ``SimExecutor.rank_group``).
+        Dominant member at full cost, the rest at ``batch_factor``."""
+        per = list(per_request_ms)
+        if not per:
+            return 0.0
+        return max(per) * (1.0 + self.batch_factor * (len(per) - 1))
 
     def dram_load_ms(self, prefix_len: int) -> float:
         """DRAM -> HBM reload of psi (expander hit)."""

@@ -9,19 +9,36 @@ compute step goes through an ``Executor``:
     full-rank on the local device, latencies measured.
 
 Both satisfy the same ``typing.Protocol``, so the runtime drives the
-identical state machine in either mode; new backends (e.g. a batched
-executor, a remote-NPU stub) register under a name and are selected per
-deployment via ``get_executor``.
+identical state machine in either mode; new backends register under a
+name and are selected per deployment via ``get_executor``:
+
+  * ``BatchedLiveExecutor`` (name ``batched``) — ``LiveExecutor`` plus
+    continuous micro-batching: compatible rank requests grouped by the
+    per-instance ``BatchAggregator`` execute as ONE jitted call on
+    bucketed shapes (``rank_group``), and per-request shapes snap to
+    the same bucket grid so batched and per-request scores agree
+    bit-for-bit (tests/test_batching.py).
+
+An executor opts into runtime-driven batching by carrying a
+``batching: BatchingConfig`` attribute and a ``rank_group(group)``
+method; ``RelayRuntime`` then parks rank work in a ``BatchAggregator``
+and flushes groups through one model slot each.  ``SimExecutor``
+mirrors the same surface via ``GRCostModel.batched_rank_ms`` so the
+cluster simulator stays trace-comparable with the live engine.
 """
 
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, Optional, Protocol, Tuple, \
-    runtime_checkable
+from typing import Any, Callable, Dict, List, Optional, Protocol, \
+    Sequence, Tuple, runtime_checkable
 
 import numpy as np
 
+from repro.serving.batching import (BatchingConfig, PendingRank, bucket_of,
+                                    pad_psi, stack_psi)
+
+from .cache import kv_nbytes
 from .costmodel import GRCostModel
 from .types import UserMeta
 
@@ -78,10 +95,17 @@ def executor_names():
 
 @register_executor("sim")
 class SimExecutor:
-    """Latency-only executor driven by the analytic cost model."""
+    """Latency-only executor driven by the analytic cost model.
 
-    def __init__(self, cost: GRCostModel):
+    Passing a ``BatchingConfig`` opts the executor into runtime-driven
+    micro-batching: group launch cost comes from
+    ``GRCostModel.batched_rank_ms`` — the sim-side mirror of the live
+    ``batched`` executor, keeping ``ClusterSim`` trace-comparable."""
+
+    def __init__(self, cost: GRCostModel,
+                 batching: Optional[BatchingConfig] = None):
         self.cost = cost
+        self.batching = batching
 
     def pre_infer(self, meta: UserMeta) -> Tuple[Any, int, float]:
         nbytes = self.cost.kv_bytes(meta.prefix_len)
@@ -98,6 +122,22 @@ class SimExecutor:
 
     def reload_ms(self, meta: UserMeta) -> float:
         return self.cost.dram_load_ms(meta.prefix_len)
+
+    def rank_group(self, group: Sequence[PendingRank]
+                   ) -> Tuple[List[Any], float]:
+        """Rank a compatible group in one modelled launch.
+        Returns (per-member scores, group wall ms)."""
+        per = []
+        for w in group:
+            m = w.meta
+            plen = m.prefix_len if m is not None else w.prefix_len
+            if w.psi is not None:
+                per.append(self.cost.rank_on_cache_ms(
+                    plen, w.incr_len, w.n_items))
+            else:
+                per.append(self.cost.full_rank_ms(
+                    plen, w.incr_len, w.n_items))
+        return [None] * len(group), self.cost.batched_rank_ms(per)
 
 
 @register_executor("live")
@@ -133,9 +173,7 @@ class LiveExecutor:
         _, kv = self._prefill(self.params, toks)
         kv = self._jax.block_until_ready(kv)
         ms = (time.perf_counter() - t0) * 1e3
-        nbytes = sum(int(np.prod(a.shape)) * a.dtype.itemsize
-                     for a in self._jax.tree.leaves(kv))
-        return kv, nbytes, ms
+        return kv, kv_nbytes(kv), ms
 
     def rank_cached(self, meta: UserMeta, psi) -> Tuple[Any, float]:
         jnp = self._jax.numpy
@@ -148,7 +186,7 @@ class LiveExecutor:
 
     def rank_full(self, meta: UserMeta) -> Tuple[Any, float]:
         jnp = self._jax.numpy
-        n = self._round(meta.prefix_len)
+        n = self._full_pad(meta.prefix_len)
         pref = jnp.asarray(
             np.resize(self.store.long_term(meta.user_id), n)[None, :])
         incr = jnp.asarray(self.store.short_term(meta.user_id)[None, :])
@@ -158,5 +196,124 @@ class LiveExecutor:
         scores.block_until_ready()
         return scores, (time.perf_counter() - t0) * 1e3
 
+    def _full_pad(self, n: int) -> int:
+        """Padded prefix length for the full-inference fallback."""
+        return self._round(n)
+
     def reload_ms(self, meta: UserMeta) -> float:
         return self.cost.dram_load_ms(meta.prefix_len)
+
+
+@register_executor("batched")
+class BatchedLiveExecutor(LiveExecutor):
+    """LiveExecutor + continuous micro-batching on bucketed shapes.
+
+    Shape discipline is what makes batching correct AND cheap:
+
+      * pre-inference keeps the 64-token grid (psi stays compact);
+      * every rank launch — per-request or grouped — snaps the prefix
+        axis to the shared ``BUCKETS`` grid (psi zero-padded, which is
+        exact for HSTU's silu attention; full-rank prefix tokens tiled,
+        matching what the per-request call does after bucketing), so
+        batched scores equal per-request scores bit-for-bit;
+      * the batch axis snaps to a power-of-two grid by repeating the
+        first member (row-independent compute, sliced off afterwards),
+        bounding the jit cache to #buckets x log2(max_batch) entries —
+        all pre-compiled by ``warmup`` so compiles leave the P99 path.
+    """
+
+    def __init__(self, model, params, store,
+                 cost: Optional[GRCostModel] = None,
+                 batching: Optional[BatchingConfig] = None):
+        super().__init__(model, params, store, cost)
+        self.batching = batching or BatchingConfig()
+        self._warmed: set = set()
+
+    # --- per-request paths on the bucket grid -------------------------------
+
+    def rank_cached(self, meta: UserMeta, psi) -> Tuple[Any, float]:
+        psi = pad_psi(self._jax.numpy, psi, bucket_of(psi[0].shape[2]))
+        return super().rank_cached(meta, psi)
+
+    def _full_pad(self, n: int) -> int:
+        return bucket_of(n)
+
+    # --- group path ---------------------------------------------------------
+
+    def _batch_grid(self, n: int) -> int:
+        """Smallest power-of-two >= n, clamped to max_batch (so a
+        non-power-of-two max_batch tops the grid itself)."""
+        b = 1
+        while b < n and b < self.batching.max_batch:
+            b *= 2
+        return min(b, self.batching.max_batch)
+
+    def rank_group(self, group: Sequence[PendingRank]
+                   ) -> Tuple[List[Any], float]:
+        """Execute a compatible group as ONE jitted call.
+        Returns (per-member scores, measured group wall ms)."""
+        jnp = self._jax.numpy
+        n = len(group)
+        bucket = bucket_of(max(w.prefix_len for w in group))
+        pad_rows = self._batch_grid(n) - n
+        rows = list(group) + [group[0]] * pad_rows
+        incr = np.stack([w.incr if w.incr is not None
+                         else self.store.short_term(w.user_id)
+                         for w in rows])
+        items = np.stack([w.items if w.items is not None
+                          else self.store.candidates(w.user_id)
+                          for w in rows])
+        t0 = time.perf_counter()
+        incr, items = jnp.asarray(incr), jnp.asarray(items)
+        if group[0].psi is not None:          # homogeneous by aggregator key
+            kv = stack_psi(jnp, [w.psi for w in rows], bucket)
+            scores = self._rank(self.params, kv, incr, items)
+        else:
+            pref = jnp.asarray(np.stack([
+                np.resize(self.store.long_term(w.user_id), bucket)
+                for w in rows]))
+            scores = self._rank_full(self.params, pref, incr, items)
+        scores.block_until_ready()
+        ms = (time.perf_counter() - t0) * 1e3
+        return [scores[i] for i in range(n)], ms
+
+    # --- startup pre-warming -------------------------------------------------
+
+    def warmup(self, prefix_lens: Sequence[int],
+               batch_sizes: Sequence[int] = (1,),
+               incr_len: int = 64, n_items: int = 512) -> List[Tuple]:
+        """Compile the bucketed rank entry points ahead of traffic.
+
+        ``prefix_lens`` is the expected workload (e.g. the sampled
+        arrival stream); the jit-cache guard keeps the
+        ``batching.max_buckets_live`` *most frequent* buckets, so the
+        traffic-dominant shapes are the warm ones — any dropped bucket
+        still compiles lazily on first hit.  Returns the freshly
+        compiled (bucket, batch) keys (already-warm keys are skipped).
+        """
+        from collections import Counter
+        jax, jnp = self._jax, self._jax.numpy
+        cfg = self.model.cfg
+        freq = Counter(bucket_of(int(n)) for n in prefix_lens)
+        buckets = sorted(b for b, _ in
+                         freq.most_common(self.batching.max_buckets_live))
+        sizes = sorted({self._batch_grid(int(b)) for b in batch_sizes})
+        done = []
+        for bucket in buckets:
+            for nb in sizes:
+                key = (bucket, nb, incr_len, n_items)
+                if key in self._warmed:
+                    continue
+                z = jnp.zeros(
+                    (cfg.n_layers, nb, bucket, cfg.n_heads, cfg.head_dim),
+                    jnp.dtype(cfg.dtype))
+                incr = jnp.zeros((nb, incr_len), jnp.int32)
+                items = jnp.zeros((nb, n_items), jnp.int32)
+                jax.block_until_ready(
+                    self._rank(self.params, (z, z), incr, items))
+                pref = jnp.zeros((nb, bucket), jnp.int32)
+                jax.block_until_ready(
+                    self._rank_full(self.params, pref, incr, items))
+                self._warmed.add(key)
+                done.append(key)
+        return done

@@ -50,6 +50,8 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving.batching import BatchAggregator, BatchingConfig, \
+    PendingRank
 from repro.serving.metrics import SLOTracker
 
 from .cache import HBMCacheStore
@@ -85,6 +87,8 @@ class ClusterConfig:
     dram_budget_bytes: float = 500e9     # expander tier (0 disables)
     m_slots: int = 5                     # NPU model slots per instance
     pcie_concurrency: int = 4            # H2D channel width per instance
+    max_batch: int = 0                   # >0 -> continuous micro-batching
+    batch_wait_ms: float = 2.0           # aggregator flush deadline
     relay_enabled: bool = True           # False -> baseline (no side path)
     long_seq_threshold: int = 0          # 0 -> trigger's risk test routes
     trigger_policy: str = "sequence-aware"
@@ -198,6 +202,14 @@ class InstanceRuntime:
         self.executor = executor
         self.hbm = HBMCacheStore(int(cfg.hbm_cache_bytes))
         self.expander = make_expander(cfg.expander_policy, cfg.dram)
+        # continuous micro-batching: opted into by the executor carrying
+        # a BatchingConfig + rank_group (the `batched` live executor or
+        # a batching-enabled SimExecutor mirror)
+        bcfg = getattr(executor, "batching", None)
+        self.batcher: Optional[BatchAggregator] = (
+            BatchAggregator(bcfg)
+            if bcfg is not None and hasattr(executor, "rank_group")
+            else None)
         self.stats = {"pre_infers": 0, "ranks": 0, "hbm_hits": 0,
                       "dram_hits": 0, "fallbacks": 0, "spills": 0}
         # event-mode resource state (owned by the driving RelayRuntime)
@@ -240,26 +252,36 @@ class InstanceRuntime:
         e = self.hbm.lookup(user_id)
         return ("hbm", e) if e is not None else ("miss", None)
 
+    def classify_rank(self, user_id: int, action: str, entry,
+                      load_ms: float) -> Tuple[HitKind, Any]:
+        """THE hit classification + accounting for the rank step, shared
+        by the unbatched (``exec_rank``) and batched (``_batch_rank``)
+        paths so their traces can never desynchronize.  Returns
+        (hit kind, psi to rank with — None means full-inference
+        fallback) and consumes the HBM entry on a hit."""
+        self.stats["ranks"] += 1
+        if action == "hbm" and entry is not None:
+            self.hbm.consume(user_id)
+            hit = HitKind.DRAM_HIT if load_ms > 0 else HitKind.HBM_HIT
+            self.stats["dram_hits" if load_ms > 0 else "hbm_hits"] += 1
+            return hit, entry.value
+        # I1: never a remote fetch — local miss falls back to full
+        # inference, preserving correctness at the cost of latency.
+        self.stats["fallbacks"] += 1
+        return HitKind.MISS_FALLBACK, None
+
     def exec_rank(self, req: Request, action: str, entry, comp: Dict[str, float],
                   now: float) -> RankResult:
         """Execute ranking for the resolved cache action and classify the
         hit.  ``comp`` carries the already-accumulated critical-path
         components; ``latency_ms`` is always their sum (invariant)."""
         meta = req.user
-        self.stats["ranks"] += 1
-        if action == "hbm" and entry is not None:
-            scores, rank_ms = self.executor.rank_cached(meta, entry.value)
-            self.hbm.consume(meta.user_id)
-            hit = (HitKind.DRAM_HIT if comp.get("load", 0.0) > 0
-                   else HitKind.HBM_HIT)
-            self.stats["dram_hits" if comp.get("load", 0.0) > 0
-                       else "hbm_hits"] += 1
+        hit, psi = self.classify_rank(meta.user_id, action, entry,
+                                      comp.get("load", 0.0))
+        if psi is not None:
+            scores, rank_ms = self.executor.rank_cached(meta, psi)
         else:
-            # I1: never a remote fetch — local miss falls back to full
-            # inference, preserving correctness at the cost of latency.
             scores, rank_ms = self.executor.rank_full(meta)
-            hit = HitKind.MISS_FALLBACK
-            self.stats["fallbacks"] += 1
         comp["rank"] = rank_ms
         self.busy_ms += rank_ms
         return RankResult(
@@ -309,6 +331,12 @@ class InstanceRuntime:
     def release_slot(self, now: float) -> None:
         self.free_slots += 1
         self._maybe_start(now)
+        if (self.batcher is not None and self.loop is not None
+                and self.free_slots > 0 and not self.queue
+                and self.batcher.pending):
+            # work-conserving batching: an idle slot never waits out the
+            # flush deadline while ranked work sits in the aggregator
+            self.loop.schedule(now, "batch_drain", inst=self)
 
     def pcie_acquire(self, now: float, cb: Callable) -> None:
         if self.pcie_free > 0:
@@ -363,7 +391,14 @@ class RelayRuntime:
         self.normal = [f"normal-{i}" for i in range(nn)]
         self.router = make_router(cl.router_policy, self.special, self.normal,
                                   seed=cl.seed)
-        factory = executor_factory or (lambda name: get_executor("sim")(cost))
+        if executor_factory is not None:
+            factory = executor_factory
+        else:
+            batching = (BatchingConfig(max_batch=cl.max_batch,
+                                       max_wait_ms=cl.batch_wait_ms)
+                        if cl.max_batch > 0 else None)
+            factory = (lambda name, batching=batching:
+                       get_executor("sim")(cost, batching=batching))
         self.instances: Dict[str, InstanceRuntime] = {}
         for name in self.special + self.normal:
             icfg = InstanceConfig(
@@ -479,6 +514,9 @@ class RelayRuntime:
         if job["kind"] == "pre":
             self._start_pre(t, inst, job["meta"])
             return
+        if job["kind"] == "batch":
+            self._start_batch(t, inst, job["group"])
+            return
         req: Request = job["req"]
         rec: Record = job["rec"]
         meta = req.user
@@ -552,6 +590,9 @@ class RelayRuntime:
 
     def _finish_rank(self, t: float, inst: InstanceRuntime, job: dict,
                      action: str, entry) -> None:
+        if inst.batcher is not None:
+            self._batch_rank(t, inst, job, action, entry)
+            return
         rec: Record = job["rec"]
         comp = {"pre": rec.pre_ms, "load": rec.load_ms, "rank": 0.0,
                 "queue": rec.queue_ms}
@@ -560,6 +601,114 @@ class RelayRuntime:
         rec.hit = result.hit.value
         self.schedule(t + comp["rank"] / 1e3, "rank_done", inst=inst,
                       job=job, result=result)
+
+    # --- continuous micro-batching (batched executor) -------------------------
+
+    def _batch_rank(self, t: float, inst: InstanceRuntime, job: dict,
+                    action: str, entry) -> None:
+        """Rank step under batching: classify the hit, snapshot psi, park
+        the request in the aggregator and give the model slot back — a
+        group launch will re-acquire ONE slot for the whole batch."""
+        req: Request = job["req"]
+        rec: Record = job["rec"]
+        meta = req.user
+        hit, psi = inst.classify_rank(meta.user_id, action, entry,
+                                      rec.load_ms)
+        job["hit"] = hit
+        work = PendingRank(user_id=meta.user_id, psi=psi,
+                           prefix_len=meta.prefix_len, meta=meta,
+                           payload=job)
+        group = inst.batcher.add(work, t)
+        if group is None and not inst.queue:
+            # continuous batching: we still hold a model slot and nothing
+            # else is waiting for it — delaying for co-batchable arrivals
+            # buys nothing, so launch immediately with whatever has
+            # accumulated.  Batches deeper than one therefore only form
+            # while slots are contended, which is exactly when they pay.
+            group = inst.batcher.take_for(work)
+        if group is not None:
+            # reuse the slot this rank job already holds for the launch
+            self._start_batch(t, inst, group)
+            self._ensure_flush(t, inst)
+        else:
+            # contended: give the slot to the queued work and park; the
+            # flush deadline bounds how long the group can accumulate
+            inst.release_slot(t)
+            if inst.batcher.depth_for(work) == 1:
+                # one timer per queue head is enough: expired() keys off
+                # the oldest member, and every take re-arms via
+                # _ensure_flush for whatever it leaves behind
+                self.schedule(t + inst.batcher.cfg.max_wait_ms / 1e3,
+                              "batch_flush", inst=inst)
+
+    def _launch_batch(self, t: float, inst: InstanceRuntime,
+                      group: List[PendingRank]) -> None:
+        inst.enqueue({"kind": "batch", "group": group}, t)
+
+    def _ensure_flush(self, t: float, inst: InstanceRuntime) -> None:
+        """Re-arm the flush deadline for whatever is still parked (e.g.
+        overflow a full-batch take left queued without its own timer)."""
+        if inst.batcher.pending:
+            self.schedule(t + inst.batcher.cfg.max_wait_ms / 1e3,
+                          "batch_flush", inst=inst)
+
+    def _on_batch_flush(self, t: float, inst: InstanceRuntime) -> None:
+        for group in inst.batcher.expired(t):
+            self._launch_batch(t, inst, group)
+        self._ensure_flush(t, inst)
+
+    def _on_batch_drain(self, t: float, inst: InstanceRuntime) -> None:
+        # drain as many pending groups as there are idle slots, so no
+        # group waits out the flush deadline beside an unused slot
+        while inst.free_slots > 0 and not inst.queue:
+            group = inst.batcher.take_oldest()
+            if group is None:
+                return
+            self._launch_batch(t, inst, group)
+
+    def _start_batch(self, t: float, inst: InstanceRuntime,
+                     group: List[PendingRank]) -> None:
+        """Slot acquired: execute the group as one launch.  Aggregator +
+        slot wait is per-request queueing; the group wall time is every
+        member's rank component (they all ride the same call), keeping
+        latency_ms == sum(components) == rank-stage wall time."""
+        for w in group:
+            w.payload["rec"].queue_ms += (t - w.enqueued_at) * 1e3
+        scores, group_ms = inst.executor.rank_group(group)
+        inst.busy_ms += group_ms
+        results = []
+        for w, s in zip(group, scores):
+            job = w.payload
+            rec: Record = job["rec"]
+            comp = {"pre": rec.pre_ms, "load": rec.load_ms,
+                    "rank": group_ms, "queue": rec.queue_ms}
+            rec.rank_ms = group_ms
+            rec.hit = job["hit"].value
+            results.append(RankResult(
+                req_id=job["req"].req_id, user_id=w.user_id,
+                hit=job["hit"], scores=s, latency_ms=sum(comp.values()),
+                components=comp, instance=inst.name))
+        self.schedule(t + group_ms / 1e3, "batch_done", inst=inst,
+                      group=group, results=results)
+
+    def _on_batch_done(self, t: float, inst: InstanceRuntime,
+                       group: List[PendingRank],
+                       results: List[RankResult]) -> None:
+        for w, result in zip(group, results):
+            rec: Record = w.payload["rec"]
+            e = inst.hbm.consume(result.user_id)
+            if e is not None and inst.expander.cfg.dram_budget_bytes > 0:
+                if inst.expander.spill(dataclasses.replace(e)):
+                    inst.stats["spills"] += 1
+            rec.t_done = t
+            rec.rank_stage_ms = rec.queue_ms + rec.load_ms + rec.rank_ms
+            self.records.append(rec)
+            self.slo.observe(now=t, e2e_ms=rec.e2e_ms, hit=rec.hit,
+                             components=result.components)
+            sink = w.payload.get("sink")
+            if sink is not None:
+                sink(result)
+        inst.release_slot(t)
 
     # --- completions -------------------------------------------------------------
 
@@ -668,5 +817,7 @@ class RelayRuntime:
         for name, i in self.instances.items():
             inst[name] = {**i.stats, "hbm": dict(i.hbm.stats),
                           "dram": dict(i.expander.stats)}
+            if i.batcher is not None:
+                inst[name]["batch"] = dict(i.batcher.stats)
         agg["instances"] = inst
         return agg

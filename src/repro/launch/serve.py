@@ -5,7 +5,11 @@ service (real HSTU compute on the local device), replays a synthetic
 request stream through the shared event-driven relay runtime —
 retrieval -> trigger -> affinity routing -> ranking — and reports hit
 rates + latency components.  ``--sim`` switches to the virtual-clock
-cluster simulation at production QPS.  Both modes drive the identical
+cluster simulation at production QPS.  ``--batched`` swaps in the
+registered ``batched`` executor: rank requests micro-batch through the
+per-instance aggregator into single bucketed jitted launches, with the
+bucket x batch-size jit entries pre-warmed from the sampled arrival
+stream so compiles leave the P99 path.  All modes drive the identical
 ``RelayRuntime`` state machine (repro.core.runtime); only the clock and
 the executor differ.
 """
@@ -18,8 +22,9 @@ import json
 import jax
 import numpy as np
 
-from repro.core import (ClusterConfig, GRCostModel, LiveExecutor,
-                        RelayGRService, TriggerConfig, relay_config)
+from repro.core import (BatchingConfig, ClusterConfig, GRCostModel,
+                        LiveExecutor, RelayGRService, TriggerConfig,
+                        get_executor, relay_config)
 from repro.data.synthetic import (UserBehaviorStore, WorkloadConfig,
                                   request_stream)
 from repro.models import build_model, get_config
@@ -33,6 +38,11 @@ def main(argv=None):
     ap.add_argument("--qps", type=float, default=200.0)
     ap.add_argument("--sim", action="store_true",
                     help="cluster-scale discrete-event simulation")
+    ap.add_argument("--batched", action="store_true",
+                    help="live continuous micro-batching "
+                         "(registered 'batched' executor)")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--batch-wait-ms", type=float, default=2.0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke and not args.sim)
@@ -53,24 +63,65 @@ def main(argv=None):
     store = UserBehaviorStore(WorkloadConfig(
         vocab=cfg.vocab, n_items=64, incr_len=16, len_mu=6.8, len_sigma=0.9,
         max_len=2048))
+    relay_cfg = relay_config(
+        trigger=TriggerConfig(n_instances=4, r2=0.5,
+                              rank_p99_budget_ms=20.0),
+        cluster=ClusterConfig(max_batch=args.max_batch if args.batched
+                              else 0,
+                              batch_wait_ms=args.batch_wait_ms))
+
+    def report(results):
+        hits, lat = {}, []
+        for r in results:
+            assert abs(r.latency_ms - sum(r.components.values())) < 1e-6
+            hits[r.hit.value] = hits.get(r.hit.value, 0) + 1
+            lat.append(r.components["rank"])
+        print(f"requests={len(results)} hits={hits}")
+        print(f"rank compute ms: p50={np.percentile(lat, 50):.1f} "
+              f"p99={np.percentile(lat, 99):.1f}")
+        return hits
+
+    if args.batched:
+        # one shared executor across the pool -> one jit cache; pre-warm
+        # the (bucket, batch) grid the sampled stream will actually hit
+        ex = get_executor("batched")(
+            model, params, store, cost=cost,
+            batching=BatchingConfig(max_batch=args.max_batch,
+                                    max_wait_ms=args.batch_wait_ms))
+        arrivals = []
+        for i, (t, meta) in enumerate(request_stream(
+                store, args.qps, 1e9, refresh_prob=0.2)):
+            if i >= args.requests:
+                break
+            arrivals.append((t, meta))
+        warmed = ex.warmup([m.prefix_len for _, m in arrivals],
+                           batch_sizes=range(1, args.max_batch + 1),
+                           incr_len=store.cfg.incr_len,
+                           n_items=store.cfg.n_items)
+        print(f"warmed {len(warmed)} (bucket, batch) jit entries: "
+              f"{sorted({k[:2] for k in warmed})}")
+        svc = RelayGRService(relay_cfg, cost,
+                             executor_factory=lambda name: ex)
+        results = []
+        rt = svc.runtime
+        for t, meta in arrivals:
+            rt.schedule(t, "arrival", meta=meta, sink=results.append)
+        rt.drain()
+        hits = report(results)
+        batch = {n: i.batcher.stats for n, i in svc.instances.items()
+                 if i.batcher is not None and i.batcher.stats["requests"]}
+        print(json.dumps({"batch": batch}, indent=1))
+        return hits
     svc = RelayGRService(
-        relay_config(trigger=TriggerConfig(n_instances=4, r2=0.5,
-                                           rank_p99_budget_ms=20.0),
-                     cluster=ClusterConfig()),
-        cost,
+        relay_cfg, cost,
         executor_factory=lambda name: LiveExecutor(model, params, store))
-    hits, lat = {}, []
+    results = []
     for i, (t, meta) in enumerate(request_stream(
             store, args.qps, 1e9, refresh_prob=0.2)):
         if i >= args.requests:
             break
-        r = svc.submit(meta, now=t)
-        assert abs(r.latency_ms - sum(r.components.values())) < 1e-6
-        hits[r.hit.value] = hits.get(r.hit.value, 0) + 1
-        lat.append(r.components["rank"])
-    print(f"requests={args.requests} hits={hits}")
-    print(f"rank compute ms: p50={np.percentile(lat, 50):.1f} "
-          f"p99={np.percentile(lat, 99):.1f}")
+        results.append(svc.submit(meta, now=t))
+    hits = report(results)
     print(json.dumps(svc.stats()["trigger"], indent=1))
     return hits
 

@@ -3,19 +3,26 @@
 The paper's "M model slots" (§3.2, Fig. 7) abstracts NPU-side
 concurrency.  On a real accelerator the equivalent mechanism is
 *batched execution with bucketed shapes*: ranking requests that arrive
-within a short window are grouped by (prefix-bucket, item-count) and
-executed as one jitted call, amortizing dispatch and filling the MXU.
+within a short window are grouped by (kind, prefix-bucket, incr-len,
+item-count) and executed as one jitted call, amortizing dispatch and
+filling the MXU.
 
 This module implements that layer for the live engine:
 
   * shape bucketing — prefix lengths round up to power-of-two-ish
-    buckets so the jit cache stays small (a production system would
-    pre-warm these);
+    buckets so the jit cache stays small (``BatchedLiveExecutor.warmup``
+    pre-compiles them at startup);
   * a `BatchAggregator` that groups compatible requests up to
     ``max_batch`` or ``max_wait_ms``;
   * `BatchedRankExecutor` — drop-in for `LiveExecutor.rank_cached` that
     pads/stacks per-user psi caches and scores candidates for the whole
     group in one `rank_with_cache` call.
+
+The live relay path drives this layer through the registered ``batched``
+executor (``repro.core.executors.BatchedLiveExecutor``): ``RelayRuntime``
+enqueues ``PendingRank`` work into a per-instance ``BatchAggregator``
+and flushes groups through one model slot each (see
+``src/repro/core/README.md`` for the lifecycle).
 
 Correctness contract: batched scores equal per-request scores (same
 mask semantics; padding keys are masked by zero-length contribution) —
@@ -41,21 +48,71 @@ def bucket_of(n: int) -> int:
     return BUCKETS[-1]
 
 
+def pad_psi(xp, psi, target_len: int):
+    """Right-pad a per-layer (K, V) pytree — shapes (L, B, P, H, D) —
+    with zero keys/values up to ``target_len`` along the P axis.
+
+    Exact for HSTU's pointwise attention: zero K rows contribute
+    silu(q . 0) = silu(0) = 0, so padded keys add literally nothing to
+    the aggregation; only the 1/n_total normalizer must then use the
+    padded length consistently, which every caller in a bucket does."""
+    k, v = psi
+    pad = target_len - k.shape[2]
+    if pad <= 0:
+        return psi
+    widths = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+    return (xp.pad(k, widths), xp.pad(v, widths))
+
+
+def stack_psi(xp, psis, bucket: int):
+    """Pad each member's (K, V) to the shared prefix bucket and stack on
+    the batch axis — THE group-launch cache layout, shared by the raw
+    ``BatchedRankExecutor`` and ``BatchedLiveExecutor.rank_group``."""
+    ks, vs = zip(*(pad_psi(xp, psi, bucket) for psi in psis))
+    return (xp.concatenate(ks, axis=1), xp.concatenate(vs, axis=1))
+
+
 @dataclasses.dataclass
 class PendingRank:
+    """One ranking request parked in the aggregator.
+
+    ``psi`` is the cached per-layer (K, V) pytree for the rank-on-cache
+    path, or ``None`` for a miss-fallback (full inference) member —
+    the two kinds never share a batch.  ``incr``/``items`` carry the
+    token arrays when the caller has them (raw ``BatchedRankExecutor``
+    use); the runtime instead fills ``meta`` and the executor fetches
+    tokens from its behaviour store."""
     user_id: int
-    psi: Any                      # per-layer (K, V), (L, 1, P, H, D)
+    psi: Any                      # per-layer (K, V), (L, 1, P, H, D) | None
     prefix_len: int
-    incr: np.ndarray              # (n_incr,)
-    items: np.ndarray             # (n_items,)
+    incr: Optional[np.ndarray] = None     # (n_incr,)
+    items: Optional[np.ndarray] = None    # (n_items,)
+    incr_len: int = 0
+    n_items: int = 0
+    meta: Any = None              # UserMeta (runtime-driven path)
+    payload: Any = None           # opaque runtime job state rides along
     enqueued_at: float = 0.0
+
+    def __post_init__(self):
+        if self.incr is not None:
+            self.incr_len = len(self.incr)
+        elif self.meta is not None and not self.incr_len:
+            self.incr_len = self.meta.incr_len
+        if self.items is not None:
+            self.n_items = len(self.items)
+        elif self.meta is not None and not self.n_items:
+            self.n_items = self.meta.n_items
+
+    @property
+    def kind(self) -> str:
+        return "cached" if self.psi is not None else "full"
 
 
 @dataclasses.dataclass(frozen=True)
 class BatchingConfig:
     max_batch: int = 8
     max_wait_ms: float = 2.0
-    max_buckets_live: int = 4     # jit-cache pressure guard
+    max_buckets_live: int = 4     # jit-cache pressure guard (warmup)
 
 
 class BatchAggregator:
@@ -63,12 +120,19 @@ class BatchAggregator:
 
     def __init__(self, cfg: BatchingConfig = BatchingConfig()):
         self.cfg = cfg
-        self.queues: Dict[Tuple[int, int, int], List[PendingRank]] = \
-            defaultdict(list)
+        self.queues: Dict[Tuple, List[PendingRank]] = defaultdict(list)
         self.stats = {"batches": 0, "requests": 0, "max_seen_batch": 0}
 
-    def _key(self, p: PendingRank) -> Tuple[int, int, int]:
-        return (bucket_of(p.prefix_len), len(p.incr), len(p.items))
+    def _key(self, p: PendingRank) -> Tuple:
+        return (p.kind, bucket_of(p.prefix_len), p.incr_len, p.n_items)
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    def depth_for(self, p: PendingRank) -> int:
+        """Current queue depth of the group compatible with ``p``."""
+        return len(self.queues.get(self._key(p), ()))
 
     def add(self, p: PendingRank, now: float) -> Optional[List[PendingRank]]:
         """Enqueue; returns a full batch if one is ready."""
@@ -80,12 +144,31 @@ class BatchAggregator:
             return self._take(self._key(p))
         return None
 
+    def take_for(self, p: PendingRank) -> Optional[List[PendingRank]]:
+        """Flush the (possibly partial) batch compatible with ``p`` now —
+        the continuous-batching fast path: when a model slot is idle
+        there is nothing to gain by waiting for co-batchable arrivals."""
+        key = self._key(p)
+        if self.queues.get(key):
+            return self._take(key)
+        return None
+
+    def take_oldest(self) -> Optional[List[PendingRank]]:
+        """Flush the group whose head has waited longest (slot-idle
+        drain), regardless of deadline."""
+        if not self.queues:
+            return None
+        key = min(self.queues, key=lambda k: self.queues[k][0].enqueued_at)
+        return self._take(key)
+
     def expired(self, now: float) -> List[List[PendingRank]]:
-        """Batches whose oldest member exceeded max_wait_ms."""
+        """Batches whose oldest member exceeded max_wait_ms (with a tiny
+        epsilon so a flush timer scheduled at exactly +max_wait fires)."""
         out = []
         for key in list(self.queues):
             q = self.queues[key]
-            if q and (now - q[0].enqueued_at) * 1e3 >= self.cfg.max_wait_ms:
+            if q and (now - q[0].enqueued_at) * 1e3 \
+                    >= self.cfg.max_wait_ms - 1e-6:
                 out.append(self._take(key))
         return out
 
@@ -123,23 +206,12 @@ class BatchedRankExecutor:
                 p, kv, incr, items))
 
     def _pad_psi(self, psi, target_len: int):
-        jnp = self._jax.numpy
-        k, v = psi
-        pad = target_len - k.shape[2]
-        if pad <= 0:
-            return psi
-        widths = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
-        return (jnp.pad(k, widths), jnp.pad(v, widths))
+        return pad_psi(self._jax.numpy, psi, target_len)
 
     def run(self, batch: Sequence[PendingRank]):
         jnp = self._jax.numpy
         bucket = bucket_of(max(p.prefix_len for p in batch))
-        ks, vs = [], []
-        for p in batch:
-            k, v = self._pad_psi(p.psi, bucket)
-            ks.append(k)
-            vs.append(v)
-        kv = (jnp.concatenate(ks, axis=1), jnp.concatenate(vs, axis=1))
+        kv = stack_psi(jnp, [p.psi for p in batch], bucket)
         incr = jnp.asarray(np.stack([p.incr for p in batch]))
         items = jnp.asarray(np.stack([p.items for p in batch]))
         scores = self._rank(self.params, kv, incr, items)

@@ -1,0 +1,142 @@
+"""Property tests for the HBM sliding-window store (invariant I2).
+
+Hypothesis-driven (via the tests/_hyp.py shim — they skip cleanly on
+images without the wheel) over arbitrary insert/consume/pop/lookup
+interleavings:
+
+  * ``used_bytes`` never exceeds the budget and always equals the sum of
+    live entry sizes;
+  * ``peak_bytes`` is monotone non-decreasing;
+  * eviction accounting is conserved:
+    ``inserts == live_count + evictions`` after ANY interleaving
+    (budget-pressure evictions, same-user refreshes and explicit pops
+    all leave through the same turnstile);
+  * ``premature_evictions`` counts exactly the unconsumed
+    budget-pressure victims, and stays zero under a correctly sized
+    sequence-aware trigger driving the full relay.
+"""
+
+import numpy as np
+from _hyp import given, settings, st
+
+from repro.core import ClusterConfig, GRCostModel, TriggerConfig, \
+    UserMeta, relay_config
+from repro.core.cache import HBMCacheStore, kv_nbytes
+from repro.models import get_config
+from repro.serving.simulator import ClusterSim
+
+COST = GRCostModel(get_config("hstu_gr"))
+
+OPS = st.lists(
+    st.tuples(st.sampled_from(["insert", "consume", "pop", "lookup"]),
+              st.integers(0, 7), st.integers(1, 40)),
+    max_size=80)
+
+
+def _drive(store: HBMCacheStore, ops, check=None):
+    """Apply an op sequence, running ``check`` after every step."""
+    for t, (op, uid, nbytes) in enumerate(ops):
+        if op == "insert":
+            store.insert(uid, "psi", nbytes, float(t), prefix_len=uid)
+        elif op == "consume":
+            store.consume(uid)
+        elif op == "pop":
+            store.pop(uid)
+        else:
+            store.lookup(uid)
+        if check is not None:
+            check(store)
+    return store
+
+
+def _invariants(prev_peak):
+    def check(store):
+        assert 0 <= store.used_bytes <= store.budget
+        assert store.used_bytes == sum(
+            e.nbytes for e in store.entries.values())
+        assert store.stats["peak_bytes"] >= prev_peak[0]
+        prev_peak[0] = store.stats["peak_bytes"]
+        assert store.stats["inserts"] == \
+            store.live_count + store.stats["evictions"]
+        assert store.stats["premature_evictions"] <= store.stats["evictions"]
+    return check
+
+
+@given(OPS, st.integers(20, 120))
+@settings(max_examples=60, deadline=None)
+def test_budget_peak_and_conservation_under_any_interleaving(ops, budget):
+    _drive(HBMCacheStore(budget), ops, _invariants([0]))
+
+
+@given(OPS)
+@settings(max_examples=30, deadline=None)
+def test_oversized_inserts_never_land(ops):
+    """An entry larger than the whole budget must clear the window but
+    never enter it (and never count as an insert)."""
+    store = _drive(HBMCacheStore(25), ops)
+    evicted = store.insert(99, "psi", 26, 1e9)
+    assert 99 not in store
+    assert store.live_count == 0 and store.used_bytes == 0
+    assert all(e.user_id != 99 for e in evicted)
+    assert store.stats["inserts"] == store.stats["evictions"]
+
+
+def test_conservation_example_paths():
+    """Pin the three exit turnstiles without hypothesis: budget
+    eviction, same-user refresh, explicit pop."""
+    store = HBMCacheStore(10)
+    store.insert(1, "a", 6, 0.0)
+    store.insert(1, "a2", 6, 1.0)          # refresh: 1 eviction
+    assert store.stats["evictions"] == 1
+    assert store.stats["premature_evictions"] == 0
+    store.insert(2, "b", 6, 2.0)           # pressure: evicts unconsumed 1
+    assert store.stats["evictions"] == 2
+    assert store.stats["premature_evictions"] == 1
+    store.consume(2)
+    store.pop(2)                           # explicit exit, not premature
+    assert store.stats["evictions"] == 3
+    assert store.stats["premature_evictions"] == 1
+    assert store.stats["inserts"] == 3 == \
+        store.live_count + store.stats["evictions"]
+    assert store.used_bytes == 0
+
+
+def test_kv_nbytes_sizes_pytrees():
+    kv = (np.zeros((2, 1, 64, 2, 32), np.float32),
+          np.zeros((2, 1, 64, 2, 32), np.float32))
+    assert kv_nbytes(kv) == 2 * 2 * 64 * 2 * 32 * 4
+    assert kv_nbytes({"k": kv, "v": [kv]}) == 2 * kv_nbytes(kv)
+    assert kv_nbytes(("psi", 7, 2048)) == 0   # sim executor stub
+
+
+@given(st.integers(1500, 3500), st.integers(0, 3))
+@settings(max_examples=6, deadline=None)
+def test_premature_evictions_zero_under_sequence_aware_trigger(L, seed):
+    """I2 end-to-end: a *correctly sized* sequence-aware trigger —
+    kv_p99_len covering the workload, hbm_bytes matching the store
+    budget, q_m derived from the actual pre-infer cost, and slack-aware
+    admission so psi always lands before its ranking — never lets an
+    admitted cache die unconsumed, for any sequence length in the
+    admitting regime and any arrival seed."""
+    hbm = 2e9
+    cfg = relay_config(
+        trigger=TriggerConfig(n_instances=5, r2=0.8, t_life_s=0.5,
+                              kv_p99_len=max(L, 4096),
+                              hbm_bytes=hbm / 0.5, r1=0.5,
+                              q_m=1e3 / COST.pre_infer_ms(L),
+                              slack_budget_ms=65.0),
+        cluster=ClusterConfig(hbm_cache_bytes=hbm, dram_budget_bytes=0.0))
+    rng = np.random.default_rng(seed)
+    t, arr = 0.0, []
+    for _ in range(200):
+        t += rng.exponential(1.0 / 80.0)
+        arr.append((t, UserMeta(user_id=int(rng.integers(0, 10 ** 9)),
+                                prefix_len=L)))
+    sim = ClusterSim(cfg, COST)
+    sim.run(iter(arr))
+    assert any(i.hbm.stats["inserts"] > 0
+               for i in sim.instances.values()), "vacuous: nothing admitted"
+    for inst in sim.instances.values():
+        assert inst.hbm.stats["premature_evictions"] == 0
+        assert inst.hbm.stats["inserts"] == \
+            inst.hbm.live_count + inst.hbm.stats["evictions"]

@@ -12,6 +12,7 @@ Also covers: the ``submit`` latency-consistency regression
 ``relay_config`` field routing, and the executor/policy registries.
 """
 
+import dataclasses
 import warnings
 
 import numpy as np
@@ -159,6 +160,75 @@ def test_instances_share_one_implementation():
 
 
 # ---------------------------------------------------------------------------
+# the parity contract under the batched executor
+# ---------------------------------------------------------------------------
+
+
+def _batched_cfg(m_slots: int) -> RelayConfig:
+    return dataclasses.replace(
+        PARITY_CFG,
+        cluster=dataclasses.replace(PARITY_CFG.cluster, m_slots=m_slots,
+                                    max_batch=4, batch_wait_ms=2.0),
+        trigger=dataclasses.replace(PARITY_CFG.trigger, m_slots=m_slots))
+
+
+@pytest.mark.parametrize("m_slots", [1, 5])
+def test_batched_executor_live_and_sim_traces_identical(m_slots):
+    """The parity sweep extends to the batched executor: both adapters
+    default to a batching-enabled SimExecutor when max_batch is set, and
+    for the spaced stream the traces must stay identical — same hit/miss
+    sequence, finite components, latency_ms == sum(components)."""
+    cfg = _batched_cfg(m_slots)
+    svc = RelayGRService(cfg, COST)
+    live_results = [svc.submit(meta, now=t) for t, meta in _arrivals()]
+
+    sim = ClusterSim(cfg, COST)
+    sim.run(iter(_arrivals()))
+
+    live_recs, sim_recs = svc.runtime.records, sim.runtime.records
+    assert len(live_recs) == len(sim_recs) == len(live_results)
+    for a, b, r in zip(live_recs, sim_recs, live_results):
+        assert a.user_id == b.user_id
+        assert a.hit == b.hit == r.hit.value
+        for f in ("pre_ms", "load_ms", "rank_ms", "queue_ms"):
+            va, vb = getattr(a, f), getattr(b, f)
+            assert np.isfinite(va) and va >= 0.0
+            assert va == pytest.approx(vb, abs=1e-9), \
+                f"component {f} diverged for user {a.user_id}"
+        assert r.latency_ms == pytest.approx(
+            sum(r.components.values()), abs=1e-9)
+        assert r.latency_ms == pytest.approx(
+            (a.t_done - a.t_rank_arrival) * 1e3, abs=1e-6)
+    kinds = {r.hit for r in live_recs}
+    # m_slots=1 throttles admission (Eq. 3) below the DRAM-reuse rate,
+    # so only the 5-slot sweep must exercise every HitKind
+    want = ({HitKind.HBM_HIT.value, HitKind.MISS_FALLBACK.value}
+            if m_slots == 1 else
+            {HitKind.HBM_HIT.value, HitKind.DRAM_HIT.value,
+             HitKind.MISS_FALLBACK.value})
+    assert want <= kinds, \
+        f"parity trivially true: workload only produced {kinds}"
+    for rt in (svc.runtime, sim.runtime):
+        assert all(i.batcher is not None for i in rt.instances.values())
+
+
+def test_batched_matches_unbatched_trace_when_uncontended():
+    """Work-conserving batching: with free slots the group of one
+    launches immediately in the already-held slot, so the spaced-stream
+    trace is bit-identical to the unbatched executor's."""
+    plain = ClusterSim(PARITY_CFG, COST)
+    plain.run(iter(_arrivals()))
+    batched = ClusterSim(_batched_cfg(5), COST)
+    batched.run(iter(_arrivals()))
+    assert len(plain.records) == len(batched.records)
+    for a, b in zip(plain.records, batched.records):
+        assert (a.user_id, a.hit) == (b.user_id, b.hit)
+        for f in ("pre_ms", "load_ms", "rank_ms", "queue_ms"):
+            assert getattr(a, f) == pytest.approx(getattr(b, f), abs=1e-9)
+        assert a.e2e_ms == pytest.approx(b.e2e_ms, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
 # RelayConfig + deprecation shims
 # ---------------------------------------------------------------------------
 
@@ -205,10 +275,12 @@ def test_legacy_sim_config_shim():
 
 
 def test_executor_protocol_and_registry():
-    from repro.core.executors import executor_names, get_executor
-    assert {"sim", "live"} <= set(executor_names())
+    from repro.core.executors import (BatchedLiveExecutor, executor_names,
+                                      get_executor)
+    assert {"sim", "live", "batched"} <= set(executor_names())
     ex = get_executor("sim")(COST)
     assert isinstance(ex, SimExecutor) and isinstance(ex, Executor)
+    assert get_executor("batched") is BatchedLiveExecutor
     with pytest.raises(KeyError):
         get_executor("warp-drive")
 

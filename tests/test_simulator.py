@@ -6,11 +6,12 @@ import pytest
 from _hyp import given, settings, st
 
 from repro.core.costmodel import GRCostModel
+from repro.core.runtime import relay_config
 from repro.core.trigger import TriggerConfig
 from repro.core.types import UserMeta
 from repro.data.synthetic import UserBehaviorStore, request_stream
 from repro.models import get_config
-from repro.serving.simulator import SimConfig, run_sim
+from repro.serving.simulator import run_sim
 
 COST = GRCostModel(get_config("hstu_gr"))
 
@@ -29,10 +30,10 @@ def _fixed(L, qps, dur=8.0, seed=0, refresh=0.0, horizon=6000):
 
 
 def _cfg(relay, dram=0.0, r2=0.8):
-    return SimConfig(trigger=TriggerConfig(n_instances=5, r2=r2,
-                                           kv_p99_len=4096),
-                     relay_enabled=relay, dram_budget_bytes=dram,
-                     hbm_cache_bytes=2e9)
+    return relay_config(trigger=TriggerConfig(n_instances=5, r2=r2,
+                                              kv_p99_len=4096),
+                        relay_enabled=relay, dram_budget_bytes=dram,
+                        hbm_cache_bytes=2e9)
 
 
 def test_relay_beats_baseline_on_long_sequences():

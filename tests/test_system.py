@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import (GRCostModel, LiveExecutor, RelayGRService,
-                        ServiceConfig, TriggerConfig)
+                        TriggerConfig, relay_config)
 from repro.core.types import HitKind
 from repro.data.synthetic import (UserBehaviorStore, WorkloadConfig,
                                   request_stream)
@@ -16,7 +16,7 @@ COST = GRCostModel(get_config("hstu_gr"))
 
 def _svc(**kw):
     return RelayGRService(
-        ServiceConfig(trigger=TriggerConfig(n_instances=10, **kw)), COST)
+        relay_config(trigger=TriggerConfig(n_instances=10, **kw)), COST)
 
 
 def test_admitted_requests_always_hit_locally():
@@ -86,7 +86,7 @@ def test_live_service_end_to_end():
         vocab=cfg.vocab, n_items=32, incr_len=8, len_mu=7.2, len_sigma=0.6,
         max_len=2048))
     svc = RelayGRService(
-        ServiceConfig(trigger=TriggerConfig(
+        relay_config(trigger=TriggerConfig(
             n_instances=4, r2=0.5, rank_p99_budget_ms=10.0)),
         COST,
         executor_factory=lambda name: LiveExecutor(model, params, store))
