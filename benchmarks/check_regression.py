@@ -1,0 +1,132 @@
+"""Serving-perf regression gate: candidate run vs the committed headline.
+
+``python -m benchmarks.check_regression --candidate /tmp/bench.json``
+compares a fresh ``benchmarks.run`` headline against the committed
+``BENCH_relay.json`` per mode and FAILS (exit 1) with a readable
+per-mode diff when any metric regresses past its stated tolerance:
+
+  * latency  — ``p99_ms`` / ``rank_p99_ms`` may rise at most
+    ``--latency-tol`` (default 5%): the fixed-point run (L=2048,
+    60 QPS) is a seeded virtual-clock sim at full duration even under
+    ``--quick``, so this bound is tight;
+  * hit rates — ``hbm_hit`` / ``dram_hit`` / ``miss`` must stay within
+    ``--hit-tol`` (default 0.02) absolute of the committed values;
+  * throughput — ``slo_qps`` must reach ``--qps-floor`` of the
+    committed value.  The full-precision bisection warrants the default
+    0.85; ``--quick`` lowers it to 0.55 because the CI smoke bisects
+    coarsely (~30% tolerance) over 4 s sims;
+  * cross-mode — ``relay_paged`` must keep ``relay_batched``'s HBM hit
+    rate (same trigger, same byte budget: paging may not cost
+    admissions) and the COMMITTED file must hold their ``slo_qps``
+    within 5% of each other, the paged-window acceptance bound.
+
+Replaces the old sanity-only ``slo_qps >= 0.8 * relay`` check: every
+mode is now gated against its own committed trajectory, so a perf
+regression in any deployment flavour fails CI instead of rotting
+silently in an artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATED_LATENCY = ("p99_ms", "rank_p99_ms")
+GATED_HITS = ("hbm_hit", "dram_hit", "miss")
+
+
+def _fmt(v) -> str:
+    return f"{v:.4g}" if isinstance(v, float) else str(v)
+
+
+def compare(reference: dict, candidate: dict, *, latency_tol: float,
+            hit_tol: float, qps_floor: float) -> list:
+    """Return [(mode, field, ref, cand, limit_desc, ok), ...]."""
+    rows = []
+    for mode in sorted(k for k in reference if k != "meta"):
+        ref, cand = reference[mode], candidate.get(mode)
+        if cand is None:
+            rows.append((mode, "<mode>", "present", "MISSING", "required",
+                         False))
+            continue
+        for f in GATED_LATENCY:
+            lim = ref[f] * (1 + latency_tol)
+            rows.append((mode, f, ref[f], cand.get(f),
+                         f"<= {lim:.3f} (+{latency_tol:.0%})",
+                         cand.get(f) is not None and cand[f] <= lim))
+        for f in GATED_HITS:
+            rows.append((mode, f, ref[f], cand.get(f),
+                         f"± {hit_tol}",
+                         cand.get(f) is not None
+                         and abs(cand[f] - ref[f]) <= hit_tol))
+        lim = ref["slo_qps"] * qps_floor
+        rows.append((mode, "slo_qps", ref["slo_qps"], cand.get("slo_qps"),
+                     f">= {lim:.1f} ({qps_floor:.0%} of committed)",
+                     cand.get("slo_qps") is not None
+                     and cand["slo_qps"] >= lim))
+
+    # paged-window acceptance: relay_paged rides relay_batched's cache
+    if "relay_paged" in reference and "relay_batched" in reference:
+        rb, rp = candidate.get("relay_batched"), candidate.get("relay_paged")
+        if rb and rp:
+            rows.append(("relay_paged", "hbm_hit == relay_batched",
+                         rb["hbm_hit"], rp["hbm_hit"], "± 0.005",
+                         abs(rp["hbm_hit"] - rb["hbm_hit"]) <= 0.005))
+        rb, rp = reference["relay_batched"], reference["relay_paged"]
+        rows.append(("relay_paged", "slo_qps vs relay_batched (committed)",
+                     rb["slo_qps"], rp["slo_qps"], "within 5%",
+                     abs(rp["slo_qps"] - rb["slo_qps"])
+                     <= 0.05 * rb["slo_qps"]))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail CI when the serving perf headline regresses "
+                    "past tolerance vs the committed BENCH_relay.json")
+    ap.add_argument("--candidate", required=True,
+                    help="headline json from the fresh benchmarks.run")
+    ap.add_argument("--reference", default="BENCH_relay.json",
+                    help="committed trajectory to gate against")
+    ap.add_argument("--latency-tol", type=float, default=0.05)
+    ap.add_argument("--hit-tol", type=float, default=0.02)
+    ap.add_argument("--qps-floor", type=float, default=None,
+                    help="min fraction of committed slo_qps "
+                         "(default 0.85, or 0.55 with --quick)")
+    ap.add_argument("--quick", action="store_true",
+                    help="candidate came from a --quick run: coarse "
+                         "4 s-sim bisection, so widen the slo_qps floor")
+    args = ap.parse_args(argv)
+    if args.qps_floor is None:
+        args.qps_floor = 0.55 if args.quick else 0.85
+
+    with open(args.reference) as f:
+        reference = json.load(f)
+    with open(args.candidate) as f:
+        candidate = json.load(f)
+
+    rows = compare(reference, candidate, latency_tol=args.latency_tol,
+                   hit_tol=args.hit_tol, qps_floor=args.qps_floor)
+    width = max(len(r[0]) + len(r[1]) for r in rows) + 3
+    print(f"perf regression gate: candidate={args.candidate} "
+          f"vs committed={args.reference}"
+          f"{' [quick tolerances]' if args.quick else ''}")
+    failures = []
+    for mode, field, ref, cand, limit, ok in rows:
+        tag = "ok  " if ok else "FAIL"
+        print(f"  {tag} {(mode + '.' + field).ljust(width)} "
+              f"committed={_fmt(ref).ljust(9)} got={_fmt(cand).ljust(9)} "
+              f"limit: {limit}")
+        if not ok:
+            failures.append(f"{mode}.{field}")
+    if failures:
+        print(f"REGRESSION: {len(failures)} metric(s) out of tolerance: "
+              f"{', '.join(failures)}", file=sys.stderr)
+        return 1
+    print(f"all {len(rows)} gated metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

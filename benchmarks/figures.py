@@ -59,14 +59,19 @@ def _fixed_stream(L, qps, dur, *, refresh=0.0, horizon=6000, seed=0,
 
 
 def _cfg(mode: str, L: int, cost=None) -> RelayConfig:
-    """mode: baseline | relay | relay_dram | relay_batched
+    """mode: baseline | relay | relay_dram | relay_batched | relay_paged
 
     ``relay_batched`` is the ``relay`` deployment with continuous
     micro-batching switched on (same trigger/cache -> equal hit rates);
-    the throughput delta is pure batching."""
+    the throughput delta is pure batching.  ``relay_paged`` is
+    ``relay_batched`` over the paged HBM window (64-token pages): same
+    trigger and byte budget, psi block-granular — hit rates must match
+    ``relay_batched`` with slo_qps within tolerance (page-rounded load
+    times are the only modelled difference at page-aligned L)."""
     relay = mode != "baseline"
     r2 = 0.8 if relay else 0.2   # 4 active instances either way
     hbm_cache = 4e9
+    batched = mode in ("relay_batched", "relay_paged")
     return relay_config(
         trigger=TriggerConfig(n_instances=N_INST, r2=r2,
                               kv_p99_len=max(L, 1024),
@@ -76,8 +81,9 @@ def _cfg(mode: str, L: int, cost=None) -> RelayConfig:
             relay_enabled=relay,
             dram_budget_bytes=500e9 if mode == "relay_dram" else 0.0,
             hbm_cache_bytes=hbm_cache,
-            max_batch=8 if mode == "relay_batched" else 0,
-            batch_wait_ms=2.0),
+            max_batch=8 if batched else 0,
+            batch_wait_ms=2.0,
+            page_tokens=64 if mode == "relay_paged" else 0),
     )
 
 
@@ -429,7 +435,8 @@ def bench_relay_summary(quick: bool = False) -> Dict:
     L, qps = 2048, 60
     out: Dict[str, Dict] = {"meta": {
         "L": L, "offered_qps": qps, "slo_ms": SLO_MS, "sim_s": SIM_S}}
-    for mode in ("baseline", "relay", "relay_dram", "relay_batched"):
+    for mode in ("baseline", "relay", "relay_dram", "relay_batched",
+                 "relay_paged"):
         s = _run(mode, L, qps)
         entry = {
             "p50_ms": round(s["p50_ms"], 3),

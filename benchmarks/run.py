@@ -22,7 +22,8 @@ import sys
 import time
 
 # every BENCH_relay.json must report these serving modes
-RELAY_MODES = ("baseline", "relay", "relay_dram", "relay_batched")
+RELAY_MODES = ("baseline", "relay", "relay_dram", "relay_batched",
+               "relay_paged")
 
 
 def main(argv=None) -> None:

@@ -11,7 +11,9 @@ clocks, executors and policies.
 from repro.serving.batching import (BatchAggregator, BatchingConfig,
                                     PendingRank, bucket_of)
 
-from .cache import CacheEntry, HBMCacheStore, kv_nbytes
+from .cache import (CacheEntry, HBMCacheStore, PagedHBMStore, kv_nbytes,
+                    make_hbm_store)
+from .paging import PageLayout, PagePool, PagedPsi
 from .clock import Clock, VirtualClock, WallClock
 from .costmodel import GRCostModel, HardwareModel
 from .engine import InstanceConfig, RankingInstance

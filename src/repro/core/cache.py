@@ -22,6 +22,18 @@ psi(u) — (K, V) arrays of shape (L, B, P, H, D) as produced by
 ``HSTUModel.prefill`` — which the batched executor pads and stacks
 directly (``repro.serving.batching.pad_psi``); ``kv_nbytes`` sizes such
 a pytree for budget accounting.
+
+An insert that can never fit (``nbytes`` over the whole budget) is
+REJECTED up front: the window is left untouched, the rejection is
+counted in ``stats["rejected_inserts"]``, and the runtime observes the
+absence as a miss — it must never believe psi is resident.
+
+``PagedHBMStore`` is the block-granular variant (``ClusterConfig.
+page_tokens > 0``): same window semantics, but psi is stored in a
+fixed-size page pool (``repro.core.paging``) so mixed prefix lengths
+share the budget without fragmentation, eviction can free just the tail
+pages of a consumed DRAM-backed entry, and a later reload *resumes*
+from the still-resident head pages instead of restarting.
 """
 
 from __future__ import annotations
@@ -32,6 +44,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .paging import (PageLayout, PagePool, PagedPsi, ceil_div,
+                     slice_into_pages)
 from .types import CacheState
 
 
@@ -58,6 +72,13 @@ class CacheEntry:
     state: CacheState = CacheState.HBM
     consumed: bool = False
     prefix_len: int = 0
+    dram_backed: bool = False  # a DRAM spill copy exists (set by runtime)
+    # paged-store residency: tokens still page-resident (== prefix_len
+    # when fully resident; less after a partial tail eviction) and the
+    # tokens a pending DRAM->HBM reload must actually stream
+    tokens_resident: int = 0
+    reload_tokens: Optional[int] = None
+    page_table: Optional[np.ndarray] = None   # (slabs, n_pages) int32
 
 
 class HBMCacheStore:
@@ -69,7 +90,7 @@ class HBMCacheStore:
         self.used_bytes = 0
         self.stats = {"inserts": 0, "hits": 0, "misses": 0,
                       "evictions": 0, "premature_evictions": 0,
-                      "peak_bytes": 0}
+                      "rejected_inserts": 0, "peak_bytes": 0}
 
     def __contains__(self, user_id: int) -> bool:
         return user_id in self.entries
@@ -81,14 +102,28 @@ class HBMCacheStore:
     def insert(self, user_id: int, value: Any, nbytes: int, now: float,
                prefix_len: int = 0) -> List[CacheEntry]:
         """Insert psi(u); evicts oldest entries past the budget.
-        Returns the evicted entries (candidates for DRAM spill)."""
+        Returns the evicted entries (candidates for DRAM spill).
+
+        An entry larger than the whole budget can never land: it is
+        rejected WITHOUT disturbing other entries (evicting everything
+        for a doomed insert would only manufacture premature evictions)
+        and counted in ``stats["rejected_inserts"]`` so callers observe
+        the absence instead of believing psi is resident.  A rejected
+        same-user REFRESH still evicts the superseded psi — serving the
+        stale cache for the new lifecycle would be the silent-drop bug
+        this path exists to prevent."""
+        if int(nbytes) > self.budget:
+            evicted = ([self._evict(user_id)]
+                       if user_id in self.entries else [])
+            self.stats["rejected_inserts"] += 1
+            return evicted
         if user_id in self.entries:
             # same-user refresh: the superseded psi leaves the window
             # (counted as an eviction for conservation, never premature —
             # the fresher psi serves this lifecycle)
             self._evict(user_id)
         entry = CacheEntry(user_id, value, int(nbytes), now,
-                           prefix_len=prefix_len)
+                           prefix_len=prefix_len, tokens_resident=prefix_len)
         evicted = []
         while self.used_bytes + entry.nbytes > self.budget and self.entries:
             old_uid, old = next(iter(self.entries.items()))
@@ -96,12 +131,11 @@ class HBMCacheStore:
             if not old.consumed:
                 self.stats["premature_evictions"] += 1
             evicted.append(old)
-        if entry.nbytes <= self.budget:
-            self.entries[user_id] = entry
-            self.used_bytes += entry.nbytes
-            self.stats["inserts"] += 1
-            self.stats["peak_bytes"] = max(self.stats["peak_bytes"],
-                                           self.used_bytes)
+        self.entries[user_id] = entry
+        self.used_bytes += entry.nbytes
+        self.stats["inserts"] += 1
+        self.stats["peak_bytes"] = max(self.stats["peak_bytes"],
+                                       self.used_bytes)
         return evicted
 
     def lookup(self, user_id: int) -> Optional[CacheEntry]:
@@ -127,9 +161,306 @@ class HBMCacheStore:
             self._evict(user_id)
         return e
 
+    def fits(self, nbytes: int, prefix_len: int = 0) -> bool:
+        """Could an entry of this size EVER land in the window?  False
+        means permanently unpromotable (over the whole budget) — the
+        expander uses this to stop scheduling doomed reloads."""
+        return int(nbytes) <= self.budget
+
+    def missing_tokens(self, user_id: int, total: int) -> int:
+        """Tokens a DRAM->HBM reload must stream for this user.  The
+        dense store is all-or-nothing; the paged store subtracts the
+        still-resident head pages of a partially evicted entry."""
+        return int(total)
+
+    def resident(self, user_id: int) -> Optional[CacheEntry]:
+        """Entry if psi is FULLY resident (no hit/miss accounting) —
+        the pre-inference dedup probe."""
+        return self.entries.get(user_id)
+
+    def touch(self, user_id: int, now: float) -> None:
+        """Same-psi refresh without data movement: a deduped pre-infer
+        found psi already resident — renew its lifecycle (back of the
+        FIFO window, consumption re-armed)."""
+        e = self.entries.get(user_id)
+        if e is not None:
+            e.consumed = False
+            e.created_at = now
+            self.entries.move_to_end(user_id)
+
+    def acquire_value(self, entry: CacheEntry) -> Any:
+        """Snapshot psi for a rank launch.  Paired with
+        ``release_value`` after the launch; the paged store pins the
+        entry's pages across the (possibly deferred) batched launch so
+        window recycling can't free them mid-flight."""
+        return entry.value
+
+    def release_value(self, psi: Any) -> None:
+        pass
+
     def _evict(self, user_id: int) -> CacheEntry:
         e = self.entries.pop(user_id)
         self.used_bytes -= e.nbytes
         e.state = CacheState.EVICTED
         self.stats["evictions"] += 1
         return e
+
+
+def _is_kv_pytree(value: Any) -> bool:
+    """True for a real per-layer (K, V) psi — (L, B, P, H, D) arrays —
+    as opposed to the sim executor's scalar stub."""
+    return (isinstance(value, (tuple, list)) and len(value) == 2
+            and getattr(value[0], "ndim", 0) == 5
+            and getattr(value[1], "ndim", 0) == 5)
+
+
+class PagedHBMStore(HBMCacheStore):
+    """Block-granular HBM window: the ``r1 * HBM`` budget carved into a
+    fixed-size page pool (free-list allocator, ``repro.core.paging``).
+
+    Same external contract as the dense store — insert / lookup /
+    consume / pop, FIFO window, conserved entry accounting — plus:
+
+      * an entry holds a per-slab *page table* (one row per layer K/V
+        plane) instead of a dense pytree; ``used_bytes`` counts whole
+        pages, so the only waste is each slab's last-page padding;
+      * eviction under pressure can free just the TAIL pages of the
+        oldest consumed, DRAM-backed entry (``partial_evictions``) —
+        the head stays resident and a later reload *resumes*, streaming
+        only the missing pages (``resumed_reloads``);
+      * launches pin pages (``acquire_value``/``release_value``), so a
+        deferred batched launch never reads a recycled page;
+      * in live mode the pool owns a real ``(n_pages + 1, page_tokens,
+        H, D)`` buffer (lazily shaped from the first psi; the extra
+        last row is the all-zero null page used to pad page tables to a
+        bucket) and ``PagedPsi`` handles point into it.
+    """
+
+    def __init__(self, budget_bytes: int, layout: PageLayout):
+        super().__init__(budget_bytes)
+        self.layout = layout
+        self.pool = PagePool(
+            n_pages=int(budget_bytes) // layout.page_bytes,
+            page_bytes=layout.page_bytes)
+        self.buffer: Optional[np.ndarray] = None   # lazily shaped
+        # gather a dense host copy of psi when it leaves the pool, so
+        # the evictee can spill to DRAM; deployments without a DRAM
+        # tier turn this off (InstanceRuntime) — the copy would be
+        # discarded anyway
+        self.materialize_on_evict = True
+        self.stats.update({"partial_evictions": 0, "resumed_reloads": 0,
+                           "pages_reloaded": 0})
+
+    @property
+    def null_page(self) -> int:
+        return self.pool.n_pages                   # always-zero pad row
+
+    def _tokens_of(self, nbytes: int, prefix_len: int) -> int:
+        if prefix_len > 0:
+            return int(prefix_len)
+        per_token = self.layout.slabs * self.layout.token_bytes
+        return max(1, ceil_div(int(nbytes), per_token))
+
+    def _ensure_buffer(self, value: Any) -> None:
+        if self.buffer is not None or not _is_kv_pytree(value):
+            return
+        k = np.asarray(value[0])
+        H, D = k.shape[3], k.shape[4]
+        self.buffer = np.zeros(
+            (self.pool.n_pages + 1, self.layout.page_tokens, H, D), k.dtype)
+
+    # --- insert: fresh / refresh / resume -----------------------------------
+
+    def insert(self, user_id: int, value: Any, nbytes: int, now: float,
+               prefix_len: int = 0) -> List[CacheEntry]:
+        tokens = self._tokens_of(nbytes, prefix_len)
+        if _is_kv_pytree(value):
+            # live psi arrives on the executor's 64-token prefill grid,
+            # which can overhang the page grid — page the WHOLE value
+            # so paged and dense ranking see identical keys
+            tokens = max(tokens, int(value[0].shape[2]))
+        need = self.layout.entry_pages(tokens)
+        if need > self.pool.n_pages:
+            # doomed insert: reject, but never let a superseded psi
+            # serve the new lifecycle (same contract as the base store)
+            evicted = ([self._evict(user_id)]
+                       if user_id in self.entries else [])
+            self.stats["rejected_inserts"] += 1
+            return evicted
+        self._ensure_buffer(value)
+        existing = self.entries.get(user_id)
+        if (existing is not None and existing.prefix_len == tokens
+                and existing.tokens_resident < existing.prefix_len):
+            return self._resume(existing, value, now)
+        if existing is not None:
+            # same-user refresh: superseded psi leaves through the
+            # eviction turnstile, exactly like the dense store
+            self._evict(user_id)
+        evicted = self._make_room(need, exclude=user_id)
+        pages = self.pool.alloc(need)
+        if pages is None:
+            # pinned zombie pages of in-flight launches can transiently
+            # shrink the pool below the byte budget; reject, observed
+            # by the runtime as a miss
+            self.stats["rejected_inserts"] += 1
+            return evicted
+        pps = self.layout.pages_per_slab(tokens)
+        table = np.asarray(pages, np.int32).reshape(self.layout.slabs, pps)
+        entry = CacheEntry(
+            user_id, value, need * self.layout.page_bytes, now,
+            prefix_len=tokens, tokens_resident=tokens, page_table=table)
+        if self.buffer is not None and _is_kv_pytree(value):
+            slice_into_pages(self.buffer, table, value,
+                             self.layout.page_tokens)
+            entry.value = PagedPsi(table, tokens, self.layout, self.buffer)
+        self.entries[user_id] = entry
+        self.used_bytes += entry.nbytes
+        self.stats["inserts"] += 1
+        self.stats["peak_bytes"] = max(self.stats["peak_bytes"],
+                                       self.used_bytes)
+        return evicted
+
+    def _resume(self, entry: CacheEntry, value: Any, now: float
+                ) -> List[CacheEntry]:
+        """Partial-reload completion: top up the missing tail pages of a
+        partially resident entry instead of restarting from scratch."""
+        pps_full = self.layout.pages_per_slab(entry.prefix_len)
+        pps_res = self.layout.pages_per_slab(entry.tokens_resident) \
+            if entry.tokens_resident else 0
+        missing = (pps_full - pps_res) * self.layout.slabs
+        evicted = self._make_room(missing, exclude=entry.user_id)
+        pages = self.pool.alloc(missing)
+        if pages is None:                  # zombie-pinched pool: restart
+            evicted.append(self._evict(entry.user_id))
+            self.stats["rejected_inserts"] += 1
+            return evicted
+        fresh = np.asarray(pages, np.int32).reshape(
+            self.layout.slabs, pps_full - pps_res)
+        table = np.concatenate([entry.page_table[:, :pps_res], fresh],
+                               axis=1)
+        entry.page_table = table
+        if self.buffer is not None and _is_kv_pytree(value):
+            t0 = pps_res * self.layout.page_tokens
+            slice_into_pages(self.buffer, table, value,
+                             self.layout.page_tokens, t0=t0)
+            entry.value = PagedPsi(table, entry.prefix_len, self.layout,
+                                   self.buffer)
+        added = missing * self.layout.page_bytes
+        entry.tokens_resident = entry.prefix_len
+        entry.nbytes += added
+        entry.consumed = False             # re-armed for this lifecycle
+        entry.dram_backed = False          # the DRAM copy moved out
+        entry.created_at = now
+        self.entries.move_to_end(entry.user_id)
+        self.used_bytes += added
+        self.stats["resumed_reloads"] += 1
+        self.stats["pages_reloaded"] += missing
+        self.stats["peak_bytes"] = max(self.stats["peak_bytes"],
+                                       self.used_bytes)
+        return evicted
+
+    def _make_room(self, need: int, exclude: int) -> List[CacheEntry]:
+        """Free pages until ``need`` fit: partial tail eviction of the
+        oldest consumed DRAM-backed entry when that covers the deficit,
+        whole-entry FIFO eviction otherwise."""
+        evicted: List[CacheEntry] = []
+        while self.pool.free_pages < need:
+            victim = next((u for u in self.entries if u != exclude), None)
+            if victim is None:
+                break
+            old = self.entries[victim]
+            deficit = need - self.pool.free_pages
+            per_slab = ceil_div(deficit, self.layout.slabs)
+            pps_res = self.layout.pages_per_slab(old.tokens_resident) \
+                if old.tokens_resident else 0
+            if (old.consumed and old.dram_backed and 0 < per_slab < pps_res):
+                # free just the tail pages; the head stays resident and
+                # the next reload for this user resumes from it
+                keep = pps_res - per_slab
+                tail = old.page_table[:, keep:pps_res].reshape(-1)
+                self.pool.free([int(p) for p in tail])
+                freed = per_slab * self.layout.slabs
+                old.tokens_resident = keep * self.layout.page_tokens
+                old.nbytes -= freed * self.layout.page_bytes
+                self.used_bytes -= freed * self.layout.page_bytes
+                self.stats["partial_evictions"] += 1
+                continue
+            self._evict(victim)
+            if not old.consumed:
+                self.stats["premature_evictions"] += 1
+            evicted.append(old)
+        return evicted
+
+    # --- residency-aware lookups --------------------------------------------
+
+    def lookup(self, user_id: int) -> Optional[CacheEntry]:
+        e = self.entries.get(user_id)
+        if e is not None and e.tokens_resident < e.prefix_len:
+            self.stats["misses"] += 1      # partial: ranking needs all of psi
+            return None
+        return super().lookup(user_id)
+
+    def fits(self, nbytes: int, prefix_len: int = 0) -> bool:
+        tokens = self._tokens_of(nbytes, prefix_len)
+        return self.layout.entry_pages(tokens) <= self.pool.n_pages
+
+    def missing_tokens(self, user_id: int, total: int) -> int:
+        e = self.entries.get(user_id)
+        if e is None or e.prefix_len != int(total):
+            return int(total)
+        return max(int(total) - e.tokens_resident, 0)
+
+    def resident(self, user_id: int) -> Optional[CacheEntry]:
+        e = self.entries.get(user_id)
+        if e is None or e.tokens_resident < e.prefix_len:
+            return None
+        return e
+
+    # --- launch pinning ------------------------------------------------------
+
+    def acquire_value(self, entry: CacheEntry) -> Any:
+        if entry.page_table is None:
+            return entry.value
+        pps = self.layout.pages_per_slab(entry.tokens_resident)
+        psi = PagedPsi(entry.page_table[:, :pps].copy(),
+                       entry.tokens_resident, self.layout, self.buffer)
+        self.pool.pin(psi.pages)
+        return psi
+
+    def release_value(self, psi: Any) -> None:
+        if isinstance(psi, PagedPsi):
+            self.pool.unpin(psi.pages)
+
+    # --- eviction frees pages ------------------------------------------------
+
+    def _evict(self, user_id: int) -> CacheEntry:
+        e = self.entries[user_id]
+        if e.page_table is not None:
+            pps_res = self.layout.pages_per_slab(e.tokens_resident) \
+                if e.tokens_resident else 0
+            if isinstance(e.value, PagedPsi):
+                # psi leaves the pool: materialize the dense copy for a
+                # possible DRAM spill BEFORE the pages are recycled.
+                # Skipped when the copy could never be used — no DRAM
+                # tier, unconsumed victim (never spilled), or an entry
+                # whose byte-identical DRAM copy already exists (the
+                # consume-time spill or a partial entry's backing;
+                # value None makes the expander keep the existing copy)
+                spillable = (self.materialize_on_evict and e.consumed
+                             and not e.dram_backed
+                             and e.tokens_resident >= e.prefix_len)
+                e.value = e.value.materialize() if spillable else None
+            self.pool.free([int(p) for p in
+                            e.page_table[:, :pps_res].reshape(-1)])
+            e.page_table = None
+            e.tokens_resident = 0
+        return super()._evict(user_id)
+
+
+def make_hbm_store(budget_bytes: int, layout: Optional[PageLayout] = None
+                   ) -> HBMCacheStore:
+    """Window factory: dense store, or the paged pool when a layout is
+    given (``ClusterConfig.page_tokens > 0``)."""
+    if layout is None:
+        return HBMCacheStore(budget_bytes)
+    return PagedHBMStore(budget_bytes, layout)

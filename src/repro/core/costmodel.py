@@ -18,6 +18,8 @@ import dataclasses
 
 from repro.models.config import ModelConfig
 
+from .paging import ceil_div
+
 
 @dataclasses.dataclass(frozen=True)
 class HardwareModel:
@@ -111,6 +113,16 @@ class GRCostModel:
     def dram_load_ms(self, prefix_len: int) -> float:
         """DRAM -> HBM reload of psi (expander hit)."""
         return self.kv_bytes(prefix_len) / self.hw.h2d_bw * 1e3
+
+    def paged_load_ms(self, tokens: int, page_tokens: int) -> float:
+        """DRAM -> HBM reload at page granularity: only the missing
+        ``tokens`` move (a resumed partial reload passes the remainder,
+        not the whole prefix), rounded up to whole pages — the
+        last-page padding is the only over-transfer."""
+        if tokens <= 0:
+            return 0.0
+        pages = ceil_div(int(tokens), int(page_tokens))
+        return self.kv_bytes(pages * int(page_tokens)) / self.hw.h2d_bw * 1e3
 
     def remote_fetch_ms(self, prefix_len: int) -> float:
         """Cross-server cache fetch — the path RelayGR's invariant I1

@@ -40,6 +40,7 @@ from repro.serving.batching import (BatchingConfig, PendingRank, bucket_of,
 
 from .cache import kv_nbytes
 from .costmodel import GRCostModel
+from .paging import PageLayout, PagedPsi, ceil_div
 from .types import UserMeta
 
 
@@ -60,9 +61,56 @@ class Executor(Protocol):
         """Full inference on the critical path (miss fallback)."""
         ...
 
-    def reload_ms(self, meta: UserMeta) -> float:
-        """DRAM -> HBM reload cost for this user's psi."""
+    def reload_ms(self, meta: UserMeta, tokens: Optional[int] = None
+                  ) -> float:
+        """DRAM -> HBM reload cost for this user's psi.  ``tokens``
+        narrows the transfer to the missing suffix (paged stores resume
+        partial reloads); None means the whole prefix."""
         ...
+
+
+# --- paged psi launch helpers -------------------------------------------------
+
+
+def page_bucket(tokens: int, page_tokens: int) -> int:
+    """Page count a launch pads its tables to: the shared ``BUCKETS``
+    token grid expressed in pages — THE first key component of the
+    paged ``rank_with_pages`` jit cache (page-count bucket, batch)."""
+    return ceil_div(bucket_of(int(tokens)), int(page_tokens))
+
+
+def _pages_of(tokens: int, psi: PagedPsi) -> int:
+    return page_bucket(tokens, psi.layout.page_tokens)
+
+
+def _page_launch_args(jnp, psis: Sequence[PagedPsi], np_bucket: int):
+    """Stack per-member page tables — (slabs, n) int32 — into the
+    (B, L, 2, np_bucket) launch table, padding with the pool's null
+    (all-zero) page so padded tokens contribute silu(0) = 0 exactly,
+    matching the dense bucketed path's zero-padded psi."""
+    buf = psis[0].buffer
+    null = buf.shape[0] - 1
+    rows = []
+    for psi in psis:
+        slabs, n = psi.table.shape
+        t = np.full((slabs, np_bucket), null, np.int32)
+        t[:, :min(n, np_bucket)] = psi.table[:, :np_bucket]
+        rows.append(t.reshape(slabs // 2, 2, np_bucket))
+    return jnp.asarray(buf), jnp.asarray(np.stack(rows))
+
+
+def _gather_psi(jnp, buf, tables):
+    """Inside-jit gather: pool buffer (N + 1, pt, H, D) + launch tables
+    (B, L, 2, np) -> the (K, V) pytree of stacked (L, B, np * pt, H, D)
+    that ``rank_with_cache`` consumes.  On TPU the Pallas kernel
+    (``repro.kernels.paged_prefix_attn``) reads the pool through the
+    page-table BlockSpec index map instead."""
+    g = jnp.take(buf, tables, axis=0)      # (B, L, 2, np, pt, H, D)
+    B, L, _, npg, pt, H, D = g.shape
+    g = g.reshape(B, L, 2, npg * pt, H, D)
+    k = jnp.transpose(g[:, :, 0], (1, 0, 2, 3, 4))
+    v = jnp.transpose(g[:, :, 1], (1, 0, 2, 3, 4))
+    return (k, v)
 
 
 # --- registry ----------------------------------------------------------------
@@ -103,9 +151,11 @@ class SimExecutor:
     ``batched`` executor, keeping ``ClusterSim`` trace-comparable."""
 
     def __init__(self, cost: GRCostModel,
-                 batching: Optional[BatchingConfig] = None):
+                 batching: Optional[BatchingConfig] = None,
+                 page_tokens: int = 0):
         self.cost = cost
         self.batching = batching
+        self.page_tokens = int(page_tokens)
 
     def pre_infer(self, meta: UserMeta) -> Tuple[Any, int, float]:
         nbytes = self.cost.kv_bytes(meta.prefix_len)
@@ -120,8 +170,14 @@ class SimExecutor:
         return None, self.cost.full_rank_ms(
             meta.prefix_len, meta.incr_len, meta.n_items)
 
-    def reload_ms(self, meta: UserMeta) -> float:
-        return self.cost.dram_load_ms(meta.prefix_len)
+    def reload_ms(self, meta: UserMeta, tokens: Optional[int] = None
+                  ) -> float:
+        t = meta.prefix_len if tokens is None else tokens
+        if self.page_tokens:
+            # page-granular streaming: resumed reloads pay only for the
+            # missing pages — the sim mirror of the paged live store
+            return self.cost.paged_load_ms(t, self.page_tokens)
+        return self.cost.dram_load_ms(t)
 
     def rank_group(self, group: Sequence[PendingRank]
                    ) -> Tuple[List[Any], float]:
@@ -145,13 +201,18 @@ class LiveExecutor:
     """Runs the real HSTU backbone with jitted prefill / rank steps."""
 
     def __init__(self, model, params, store,
-                 cost: Optional[GRCostModel] = None):
+                 cost: Optional[GRCostModel] = None, page_tokens: int = 0):
         import jax
         self._jax = jax
         self.model = model
         self.params = params
         self.store = store
         self.cost = cost or GRCostModel(model.cfg)
+        self.page_tokens = int(page_tokens)
+        # the executor owns compute geometry: a paged window must page
+        # THIS model's psi, not the (possibly full-scale) cost model's
+        self.page_layout = (PageLayout.from_model_config(
+            model.cfg, page_tokens) if page_tokens else None)
         self._prefill = jax.jit(
             lambda p, toks: model.prefill(p, {"tokens": toks}))
         self._rank = jax.jit(
@@ -160,6 +221,11 @@ class LiveExecutor:
         self._rank_full = jax.jit(
             lambda p, pref, incr, items: model.full_rank(
                 p, pref, incr, items))
+        # paged consumption: psi gathered from the page pool inside the
+        # jitted launch (device-side gather; no host re-materialization)
+        self._rank_pages = jax.jit(
+            lambda p, buf, tables, incr, items: model.rank_with_cache(
+                p, _gather_psi(self._jax.numpy, buf, tables), incr, items))
 
     def _round(self, n: int, m: int = 64) -> int:
         return max(m, (n + m - 1) // m * m)  # bucketed shapes: few recompiles
@@ -180,7 +246,12 @@ class LiveExecutor:
         incr = jnp.asarray(self.store.short_term(meta.user_id)[None, :])
         items = jnp.asarray(self.store.candidates(meta.user_id)[None, :])
         t0 = time.perf_counter()
-        scores = self._rank(self.params, psi, incr, items)
+        if isinstance(psi, PagedPsi):
+            buf, tables = _page_launch_args(jnp, [psi],
+                                            _pages_of(psi.n_tokens, psi))
+            scores = self._rank_pages(self.params, buf, tables, incr, items)
+        else:
+            scores = self._rank(self.params, psi, incr, items)
         scores.block_until_ready()
         return scores, (time.perf_counter() - t0) * 1e3
 
@@ -200,8 +271,12 @@ class LiveExecutor:
         """Padded prefix length for the full-inference fallback."""
         return self._round(n)
 
-    def reload_ms(self, meta: UserMeta) -> float:
-        return self.cost.dram_load_ms(meta.prefix_len)
+    def reload_ms(self, meta: UserMeta, tokens: Optional[int] = None
+                  ) -> float:
+        t = meta.prefix_len if tokens is None else tokens
+        if self.page_tokens:
+            return self.cost.paged_load_ms(t, self.page_tokens)
+        return self.cost.dram_load_ms(t)
 
 
 @register_executor("batched")
@@ -219,19 +294,30 @@ class BatchedLiveExecutor(LiveExecutor):
       * the batch axis snaps to a power-of-two grid by repeating the
         first member (row-independent compute, sliced off afterwards),
         bounding the jit cache to #buckets x log2(max_batch) entries —
-        all pre-compiled by ``warmup`` so compiles leave the P99 path.
+        all pre-compiled by ``warmup`` so compiles leave the P99 path;
+      * over a paged HBM window (``page_tokens > 0``) the group path
+        becomes ``rank_with_pages``: members carry ``PagedPsi`` handles,
+        their page tables pad to the page-count bucket with the pool's
+        null page, and K/V are gathered from the pool INSIDE the one
+        jitted launch — same (bucket, batch) key discipline, scores
+        bit-identical to the dense path (tests/test_paging.py).
     """
 
     def __init__(self, model, params, store,
                  cost: Optional[GRCostModel] = None,
-                 batching: Optional[BatchingConfig] = None):
-        super().__init__(model, params, store, cost)
+                 batching: Optional[BatchingConfig] = None,
+                 page_tokens: int = 0):
+        super().__init__(model, params, store, cost,
+                         page_tokens=page_tokens)
         self.batching = batching or BatchingConfig()
         self._warmed: set = set()
 
     # --- per-request paths on the bucket grid -------------------------------
 
     def rank_cached(self, meta: UserMeta, psi) -> Tuple[Any, float]:
+        if isinstance(psi, PagedPsi):
+            # page tables already pad to the page-count bucket in super
+            return super().rank_cached(meta, psi)
         psi = pad_psi(self._jax.numpy, psi, bucket_of(psi[0].shape[2]))
         return super().rank_cached(meta, psi)
 
@@ -265,7 +351,15 @@ class BatchedLiveExecutor(LiveExecutor):
                           for w in rows])
         t0 = time.perf_counter()
         incr, items = jnp.asarray(incr), jnp.asarray(items)
-        if group[0].psi is not None:          # homogeneous by aggregator key
+        if isinstance(group[0].psi, PagedPsi):
+            # rank_with_pages: ONE launch keyed (page-count bucket,
+            # batch grid); K/V stay in the page pool and are gathered
+            # through the stacked page tables inside the jit
+            pt = group[0].psi.layout.page_tokens
+            buf, tables = _page_launch_args(
+                jnp, [w.psi for w in rows], page_bucket(bucket, pt))
+            scores = self._rank_pages(self.params, buf, tables, incr, items)
+        elif group[0].psi is not None:        # homogeneous by aggregator key
             kv = stack_psi(jnp, [w.psi for w in rows], bucket)
             scores = self._rank(self.params, kv, incr, items)
         else:
@@ -281,7 +375,8 @@ class BatchedLiveExecutor(LiveExecutor):
 
     def warmup(self, prefix_lens: Sequence[int],
                batch_sizes: Sequence[int] = (1,),
-               incr_len: int = 64, n_items: int = 512) -> List[Tuple]:
+               incr_len: int = 64, n_items: int = 512,
+               pool_pages: int = 0) -> List[Tuple]:
         """Compile the bucketed rank entry points ahead of traffic.
 
         ``prefix_lens`` is the expected workload (e.g. the sampled
@@ -290,7 +385,11 @@ class BatchedLiveExecutor(LiveExecutor):
         traffic-dominant shapes are the warm ones — any dropped bucket
         still compiles lazily on first hit.  Returns the freshly
         compiled (bucket, batch) keys (already-warm keys are skipped).
-        """
+
+        With ``page_tokens`` set, also pre-compiles the
+        ``rank_with_pages`` entries keyed (page-count bucket, batch) —
+        ``pool_pages`` must match the serving store's pool size (the
+        pool buffer shape is part of the jit key)."""
         from collections import Counter
         jax, jnp = self._jax, self._jax.numpy
         cfg = self.model.cfg
@@ -314,6 +413,14 @@ class BatchedLiveExecutor(LiveExecutor):
                 pref = jnp.zeros((nb, bucket), jnp.int32)
                 jax.block_until_ready(
                     self._rank_full(self.params, pref, incr, items))
+                if self.page_tokens and pool_pages:
+                    npb = page_bucket(bucket, self.page_tokens)
+                    buf = jnp.zeros(
+                        (pool_pages + 1, self.page_tokens,
+                         cfg.n_heads, cfg.head_dim), jnp.dtype(cfg.dtype))
+                    tables = jnp.zeros((nb, cfg.n_layers, 2, npb), jnp.int32)
+                    jax.block_until_ready(self._rank_pages(
+                        self.params, buf, tables, incr, items))
                 self._warmed.add(key)
                 done.append(key)
         return done

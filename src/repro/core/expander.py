@@ -13,6 +13,14 @@ cost.  Three mechanisms:
 
 Reloads are additionally rate-limited with a bounded-concurrency gate so
 the expander cannot become a new PCIe bottleneck.
+
+With a paged HBM window (``repro.core.cache.PagedHBMStore``) both
+directions go block-granular: a spill materializes psi out of the page
+pool into a dense host copy, and a reload streams only the pages the
+window is missing — a partially evicted entry (tail pages freed under
+pressure) RESUMES from its resident head instead of restarting, with
+``CacheEntry.reload_tokens`` carrying the remaining transfer so the
+executor prices exactly the missing pages.
 """
 
 from __future__ import annotations
@@ -22,6 +30,7 @@ from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
 
 from .cache import CacheEntry, HBMCacheStore
+from .paging import PagedPsi
 from .types import CacheState
 
 
@@ -67,12 +76,29 @@ class DRAMExpander:
         self.active_reloads = 0
         self.stats = {"spills": 0, "reloads": 0, "redundant_avoided": 0,
                       "dram_hits": 0, "dram_misses": 0, "lru_evictions": 0,
-                      "reload_throttled": 0}
+                      "reload_throttled": 0, "unfit_dropped": 0}
 
     # --- spill (after consumption, off the critical path) -------------------
     def spill(self, entry: CacheEntry) -> bool:
         """Store ``entry`` in the DRAM tier; returns whether it fit
         (callers use this for their own spill accounting)."""
+        if entry.value is None:
+            # a partially evicted paged entry finally left the window:
+            # its stale head is worthless, but the full DRAM copy made
+            # at consume time already lives here — keep it fresh
+            if entry.user_id in self.entries:
+                self.entries.move_to_end(entry.user_id)
+                return True
+            return False
+        if isinstance(entry.value, PagedPsi):
+            # psi leaves the pool: the DRAM copy is a dense host pytree,
+            # detached from page ids the window is free to recycle
+            entry = dataclasses.replace(
+                entry, value=entry.value.materialize(), page_table=None,
+                tokens_resident=entry.prefix_len)
+        elif entry.page_table is not None:
+            entry = dataclasses.replace(entry, page_table=None,
+                                        tokens_resident=entry.prefix_len)
         if entry.user_id in self.entries:
             self._remove(entry.user_id)
         while (self.used_bytes + entry.nbytes > self.cfg.dram_budget_bytes
@@ -124,21 +150,48 @@ class DRAMExpander:
         d = self.lookup(user_id)
         if d is None:
             return "miss", None
+        if not hbm.fits(d.nbytes, d.prefix_len):
+            # permanently unpromotable (psi over the whole window
+            # budget): drop the copy so we stop scheduling doomed
+            # reloads — otherwise every request for this user would pay
+            # a full H2D transfer just to be rejected and fall back
+            self._remove(user_id)
+            self.stats["unfit_dropped"] += 1
+            return "miss", None
         if self.active_reloads >= self.cfg.max_reload_concurrency:
             self.stats["reload_throttled"] += 1
             return "miss", None
+        # page-granular streaming: a partially resident window entry
+        # resumes — only the missing suffix rides the H2D channel
+        d.reload_tokens = hbm.missing_tokens(user_id, d.prefix_len)
         return "reload", d
 
     def complete_reload(self, user_id: int, hbm: HBMCacheStore, now: float
                         ) -> List[CacheEntry]:
-        """Leader finished the H2D copy: promote DRAM entry into HBM."""
+        """Leader finished the H2D copy: promote DRAM entry into HBM.
+        A paged window with a partially resident entry tops up just the
+        missing tail pages (``PagedHBMStore._resume``)."""
         e = self.entries.get(user_id)
         evicted: List[CacheEntry] = []
         if e is not None:
-            self._remove(user_id)
-            e.state = CacheState.HBM
+            e.reload_tokens = None
             evicted = hbm.insert(user_id, e.value, e.nbytes, now,
                                  prefix_len=e.prefix_len)
+            if hbm.resident(user_id) is None:
+                # the window rejected the promotion: the reload is
+                # wasted, but a TRANSIENTLY rejected copy (zombie-
+                # pinched paged pool) must survive — dropping it would
+                # turn every future request for this user into a cold
+                # full-inference miss although psi still exists
+                # locally.  A permanently unfit psi is dropped so no
+                # further reloads get scheduled for it.
+                if not hbm.fits(e.nbytes, e.prefix_len):
+                    self._remove(user_id)
+                    self.stats["unfit_dropped"] += 1
+                return evicted
+            self._remove(user_id)
+            e.state = CacheState.HBM
+            hbm.entries[user_id].dram_backed = False  # the copy moved out
             self.stats["reloads"] += 1
         return evicted
 

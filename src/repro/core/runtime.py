@@ -54,11 +54,12 @@ from repro.serving.batching import BatchAggregator, BatchingConfig, \
     PendingRank
 from repro.serving.metrics import SLOTracker
 
-from .cache import HBMCacheStore
+from .cache import HBMCacheStore, make_hbm_store
 from .clock import Clock, VirtualClock, WallClock
 from .costmodel import GRCostModel
 from .executors import Executor, get_executor
 from .expander import ExpanderConfig
+from .paging import PageLayout
 from .policies import make_expander, make_router, make_trigger
 from .trigger import TriggerConfig
 from .types import HitKind, RankResult, Request, UserMeta
@@ -89,6 +90,7 @@ class ClusterConfig:
     pcie_concurrency: int = 4            # H2D channel width per instance
     max_batch: int = 0                   # >0 -> continuous micro-batching
     batch_wait_ms: float = 2.0           # aggregator flush deadline
+    page_tokens: int = 0                 # >0 -> paged HBM window (pool pages)
     relay_enabled: bool = True           # False -> baseline (no side path)
     long_seq_threshold: int = 0          # 0 -> trigger's risk test routes
     trigger_policy: str = "sequence-aware"
@@ -182,6 +184,7 @@ class InstanceConfig:
     m_slots: int = 5
     pcie_concurrency: int = 4
     expander_policy: str = "dram"
+    page_layout: Optional[PageLayout] = None   # paged HBM window geometry
 
 
 class InstanceRuntime:
@@ -200,7 +203,14 @@ class InstanceRuntime:
         self.name = cfg.name
         self.special = cfg.special
         self.executor = executor
-        self.hbm = HBMCacheStore(int(cfg.hbm_cache_bytes))
+        # a live executor declares the page geometry of ITS model; the
+        # cluster-level layout (from the cost model) covers sim mode
+        layout = getattr(executor, "page_layout", None) or cfg.page_layout
+        self.hbm = make_hbm_store(int(cfg.hbm_cache_bytes), layout)
+        if hasattr(self.hbm, "materialize_on_evict"):
+            # no DRAM tier -> evictees are discarded, never spilled:
+            # skip the dense gather on the eviction path
+            self.hbm.materialize_on_evict = cfg.dram.dram_budget_bytes > 0
         self.expander = make_expander(cfg.expander_policy, cfg.dram)
         # continuous micro-batching: opted into by the executor carrying
         # a BatchingConfig + rank_group (the `batched` live executor or
@@ -211,7 +221,8 @@ class InstanceRuntime:
             if bcfg is not None and hasattr(executor, "rank_group")
             else None)
         self.stats = {"pre_infers": 0, "ranks": 0, "hbm_hits": 0,
-                      "dram_hits": 0, "fallbacks": 0, "spills": 0}
+                      "dram_hits": 0, "fallbacks": 0, "spills": 0,
+                      "rejected_inserts": 0}
         # event-mode resource state (owned by the driving RelayRuntime)
         self.loop: Optional["RelayRuntime"] = None
         self.free_slots = cfg.m_slots
@@ -227,9 +238,20 @@ class InstanceRuntime:
     def complete_pre(self, meta: UserMeta, psi: Any, nbytes: int,
                      now: float) -> None:
         """psi landed: insert into the HBM sliding window; evictees that
-        already served their lifecycle spill to the DRAM reuse tier."""
+        already served their lifecycle spill to the DRAM reuse tier.
+        ``psi is None`` marks a deduped pre-infer (psi already fully
+        resident): renew the entry's lifecycle in place."""
+        if psi is None:
+            self.hbm.touch(meta.user_id, now)
+            return
         evicted = self.hbm.insert(meta.user_id, psi, nbytes, now,
                                   prefix_len=meta.prefix_len)
+        if meta.user_id not in self.hbm:
+            # oversized psi rejected by the window (surfaced via
+            # hbm.stats["rejected_inserts"]): the runtime must treat
+            # this user as a miss — parked rankers wake, re-probe HBM,
+            # and take the full-inference fallback
+            self.stats["rejected_inserts"] += 1
         for e in evicted:
             if e.consumed:  # sliding-window exit -> DRAM reuse tier
                 if self.expander.spill(e):
@@ -264,7 +286,10 @@ class InstanceRuntime:
             self.hbm.consume(user_id)
             hit = HitKind.DRAM_HIT if load_ms > 0 else HitKind.HBM_HIT
             self.stats["dram_hits" if load_ms > 0 else "hbm_hits"] += 1
-            return hit, entry.value
+            # paged store: pins the entry's pages until the launch
+            # releases them, so a deferred batched group can never read
+            # a page the sliding window recycled under it
+            return hit, self.hbm.acquire_value(entry)
         # I1: never a remote fetch — local miss falls back to full
         # inference, preserving correctness at the cost of latency.
         self.stats["fallbacks"] += 1
@@ -280,6 +305,7 @@ class InstanceRuntime:
                                       comp.get("load", 0.0))
         if psi is not None:
             scores, rank_ms = self.executor.rank_cached(meta, psi)
+            self.hbm.release_value(psi)
         else:
             scores, rank_ms = self.executor.rank_full(meta)
         comp["rank"] = rank_ms
@@ -308,7 +334,8 @@ class InstanceRuntime:
         if action == "wait":
             action, entry = self.resolve_wait(meta.user_id)
         if action == "reload":
-            comp["load"] = self.executor.reload_ms(meta)
+            comp["load"] = self.executor.reload_ms(
+                meta, tokens=entry.reload_tokens)
             action, entry = self.apply_reload(meta.user_id, now)
         result = self.exec_rank(req, action, entry, comp, now)
         if single_flight_open:
@@ -398,14 +425,17 @@ class RelayRuntime:
                                        max_wait_ms=cl.batch_wait_ms)
                         if cl.max_batch > 0 else None)
             factory = (lambda name, batching=batching:
-                       get_executor("sim")(cost, batching=batching))
+                       get_executor("sim")(cost, batching=batching,
+                                           page_tokens=cl.page_tokens))
+        layout = (PageLayout.from_model_config(cost.cfg, cl.page_tokens)
+                  if cl.page_tokens > 0 else None)
         self.instances: Dict[str, InstanceRuntime] = {}
         for name in self.special + self.normal:
             icfg = InstanceConfig(
                 name=name, hbm_cache_bytes=cl.hbm_cache_bytes,
                 special=name.startswith("special"), m_slots=cl.m_slots,
                 pcie_concurrency=cl.pcie_concurrency,
-                expander_policy=cl.expander_policy)
+                expander_policy=cl.expander_policy, page_layout=layout)
             icfg.dram.dram_budget_bytes = cl.dram_budget_bytes
             icfg.dram.max_reload_concurrency = cl.pcie_concurrency
             inst = InstanceRuntime(icfg, factory(name))
@@ -537,7 +567,9 @@ class RelayRuntime:
             inst.expander.finish(uid)
             self._park(t, inst, uid, job)
         elif action == "reload":
-            ms = inst.executor.reload_ms(meta)
+            # page-granular: a partially resident entry resumes — only
+            # the missing pages ride the H2D channel
+            ms = inst.executor.reload_ms(meta, tokens=entry.reload_tokens)
 
             def start_reload(t2, inst=inst, job=job, ms=ms, t_req=t):
                 # PCIe channel wait shows up as queueing, not load
@@ -561,13 +593,15 @@ class RelayRuntime:
         # dedup: psi already local (HBM or DRAM) -> pseudo step only.
         # Higher DRAM hit rates therefore reduce pre-inference work and
         # NPU utilization (paper Fig. 14b).
-        e = inst.hbm.entries.get(uid)
-        if e is not None:
+        if inst.hbm.resident(uid) is not None:
+            # psi=None marks the in-place lifecycle renewal (touch)
             self.schedule(t, "pre_done", inst=inst, meta=meta,
-                          psi=e.value, nbytes=e.nbytes)
+                          psi=None, nbytes=0)
             return
-        if inst.expander.entries.get(uid) is not None:
-            ms = inst.executor.reload_ms(meta)
+        d = inst.expander.entries.get(uid)
+        if d is not None:
+            d.reload_tokens = inst.hbm.missing_tokens(uid, d.prefix_len)
+            ms = inst.executor.reload_ms(meta, tokens=d.reload_tokens)
 
             def start(t2, inst=inst, meta=meta, ms=ms):
                 self.schedule(t2 + ms / 1e3, "pre_reload_done",
@@ -675,6 +709,8 @@ class RelayRuntime:
         for w in group:
             w.payload["rec"].queue_ms += (t - w.enqueued_at) * 1e3
         scores, group_ms = inst.executor.rank_group(group)
+        for w in group:
+            inst.hbm.release_value(w.psi)  # unpin pages held since classify
         inst.busy_ms += group_ms
         results = []
         for w, s in zip(group, scores):
@@ -700,6 +736,7 @@ class RelayRuntime:
             if e is not None and inst.expander.cfg.dram_budget_bytes > 0:
                 if inst.expander.spill(dataclasses.replace(e)):
                     inst.stats["spills"] += 1
+                    e.dram_backed = True   # eligible for partial eviction
             rec.t_done = t
             rec.rank_stage_ms = rec.queue_ms + rec.load_ms + rec.rank_ms
             self.records.append(rec)
@@ -756,6 +793,7 @@ class RelayRuntime:
             # proactive spill copy for short-term cross-request reuse
             if inst.expander.spill(dataclasses.replace(e)):
                 inst.stats["spills"] += 1
+                e.dram_backed = True       # eligible for partial eviction
         rec.t_done = t
         rec.rank_stage_ms = rec.queue_ms + rec.load_ms + rec.rank_ms
         self.records.append(rec)

@@ -43,6 +43,9 @@ def main(argv=None):
                          "(registered 'batched' executor)")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--batch-wait-ms", type=float, default=2.0)
+    ap.add_argument("--page-tokens", type=int, default=0,
+                    help=">0 stores psi in a paged HBM pool and ranks "
+                         "through the rank_with_pages path")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke and not args.sim)
@@ -63,12 +66,18 @@ def main(argv=None):
     store = UserBehaviorStore(WorkloadConfig(
         vocab=cfg.vocab, n_items=64, incr_len=16, len_mu=6.8, len_sigma=0.9,
         max_len=2048))
+    # a paged window preallocates its pool buffer up front (that is the
+    # point: fixed pages, zero fragmentation) — bound it to a host-
+    # friendly size for the local smoke instead of the 16 GB default
+    hbm_bytes = 128e6 if args.page_tokens else 16e9
     relay_cfg = relay_config(
         trigger=TriggerConfig(n_instances=4, r2=0.5,
                               rank_p99_budget_ms=20.0),
         cluster=ClusterConfig(max_batch=args.max_batch if args.batched
                               else 0,
-                              batch_wait_ms=args.batch_wait_ms))
+                              batch_wait_ms=args.batch_wait_ms,
+                              page_tokens=args.page_tokens,
+                              hbm_cache_bytes=hbm_bytes))
 
     def report(results):
         hits, lat = {}, []
@@ -87,17 +96,26 @@ def main(argv=None):
         ex = get_executor("batched")(
             model, params, store, cost=cost,
             batching=BatchingConfig(max_batch=args.max_batch,
-                                    max_wait_ms=args.batch_wait_ms))
+                                    max_wait_ms=args.batch_wait_ms),
+            page_tokens=args.page_tokens)
         arrivals = []
         for i, (t, meta) in enumerate(request_stream(
                 store, args.qps, 1e9, refresh_prob=0.2)):
             if i >= args.requests:
                 break
             arrivals.append((t, meta))
+        pool_pages = 0
+        if args.page_tokens:
+            # the executor owns the page geometry; deriving the pool
+            # size from ITS layout keeps the warmed rank_with_pages jit
+            # key (pool-buffer shape) identical to the serving store's
+            pool_pages = (int(relay_cfg.cluster.hbm_cache_bytes)
+                          // ex.page_layout.page_bytes)
         warmed = ex.warmup([m.prefix_len for _, m in arrivals],
                            batch_sizes=range(1, args.max_batch + 1),
                            incr_len=store.cfg.incr_len,
-                           n_items=store.cfg.n_items)
+                           n_items=store.cfg.n_items,
+                           pool_pages=pool_pages)
         print(f"warmed {len(warmed)} (bucket, batch) jit entries: "
               f"{sorted({k[:2] for k in warmed})}")
         svc = RelayGRService(relay_cfg, cost,

@@ -9,6 +9,8 @@ import pytest
 from repro.kernels import ops, ref
 from repro.kernels.decode_attn import decode_attn
 from repro.kernels.hstu_attn import hstu_attn
+from repro.kernels.paged_prefix_attn import (pack_pages,
+                                             paged_prefix_rank_attn)
 from repro.kernels.prefix_rank_attn import prefix_rank_attn
 
 RNG = np.random.default_rng(7)
@@ -53,6 +55,89 @@ def test_prefix_rank_attn_sweep(n_prefix, n_incr, n_items, dtype):
         v.astype(jnp.float32), n_prefix=n_prefix, n_incr=n_incr)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32), **TOL[dtype])
+
+
+def _paged_case(plens, bucket, pt, n_incr, n_items, dtype, seed=3):
+    """Build matched dense/paged inputs: dense psi zero-padded to the
+    bucket (what the bucketed batched path feeds prefix_rank_attn) and
+    the same prefixes sliced into pool pages + page tables."""
+    rng = np.random.default_rng(seed)
+    B, H, D = len(plens), 2, 64
+    Sq = n_incr + n_items
+    mk = lambda *s: rng.normal(size=s).astype(np.float32)
+    q, kn, vn = (jnp.asarray(mk(B, H, Sq, D), dtype) for _ in range(3))
+    kp = np.zeros((B, H, bucket, D), np.float32)
+    vp = np.zeros_like(kp)
+    for b, p in enumerate(plens):
+        kp[b, :, :p], vp[b, :, :p] = mk(H, p, D), mk(H, p, D)
+    kp, vp = jnp.asarray(kp, dtype), jnp.asarray(vp, dtype)
+    kpg, vpg, table, pl_ = pack_pages(kp, vp, plens, pt,
+                                      n_pages=bucket // pt)
+    return q, kp, vp, kn, vn, (jnp.asarray(kpg), jnp.asarray(vpg),
+                               jnp.asarray(table), jnp.asarray(pl_))
+
+
+@pytest.mark.parametrize("n_prefix,pt,n_incr,n_items",
+                         [(128, 64, 32, 32), (256, 64, 32, 32),
+                          (256, 128, 64, 64)])
+def test_paged_rank_attn_bitwise_aligned(n_prefix, pt, n_incr, n_items):
+    """Page-aligned prefixes: the paged kernel's two-phase accumulation
+    chain reproduces the dense kernel (bk = page_tokens) BIT FOR BIT."""
+    q, kp, vp, kn, vn, paged = _paged_case(
+        [n_prefix, n_prefix], n_prefix, pt, n_incr, n_items, jnp.float32)
+    k = jnp.concatenate([kp, kn], axis=2)
+    v = jnp.concatenate([vp, vn], axis=2)
+    want = prefix_rank_attn(q, k, v, n_prefix=n_prefix, n_incr=n_incr,
+                            bq=32, bk=pt, interpret=True)
+    got = paged_prefix_rank_attn(q, *paged, kn, vn, n_incr=n_incr,
+                                 bq=32, bk=pt, interpret=True)
+    assert np.asarray(got).tobytes() == np.asarray(want).tobytes()
+
+
+@pytest.mark.parametrize("plens,bucket", [([100, 37, 128], 128),
+                                          ([1, 200, 64], 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_rank_attn_mixed_lengths(plens, bucket, dtype):
+    """Mixed per-row prefix lengths in ONE launch — the occupancy win
+    paging buys — match the dense kernel on zero-padded psi to fp32
+    tolerance (and still bitwise for f32: silu(0) pad keys contribute
+    exactly nothing on both sides)."""
+    pt, n_incr, n_items = 64, 32, 32
+    Sq = n_incr + n_items
+    q, kp, vp, kn, vn, paged = _paged_case(
+        plens, bucket, pt, n_incr, n_items, dtype)
+    k = jnp.concatenate([kp, kn], axis=2)
+    v = jnp.concatenate([vp, vn], axis=2)
+    want = prefix_rank_attn(q, k, v, n_prefix=bucket, n_incr=n_incr,
+                            bq=32, bk=pt, n_total=bucket + Sq,
+                            interpret=True)
+    got = paged_prefix_rank_attn(q, *paged, kn, vn, n_incr=n_incr,
+                                 bq=32, bk=pt, n_total=bucket + Sq,
+                                 interpret=True)
+    if dtype == jnp.float32:
+        assert np.asarray(got).tobytes() == np.asarray(want).tobytes()
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_paged_rank_attn_matches_oracle():
+    """Independent of the dense kernel: gather pages back to dense and
+    check against the pure-numpy reference oracle."""
+    pt, n_incr, n_items = 64, 16, 48
+    plens, bucket = [90, 128], 128
+    q, kp, vp, kn, vn, paged = _paged_case(
+        plens, bucket, pt, n_incr, n_items, jnp.float32)
+    Sq = n_incr + n_items
+    k = jnp.concatenate([kp, kn], axis=2)
+    v = jnp.concatenate([vp, vn], axis=2)
+    want = ref.prefix_rank_attn_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), n_prefix=bucket, n_incr=n_incr)
+    got = paged_prefix_rank_attn(q, *paged, kn, vn, n_incr=n_incr,
+                                 bq=32, bk=pt, n_total=bucket + Sq,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **TOL[jnp.float32])
 
 
 def test_rank_mask_matches_model():

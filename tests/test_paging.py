@@ -1,0 +1,324 @@
+"""Paged HBM window — runtime integration contract.
+
+The paged pool must be a drop-in behind the relay lifecycle:
+
+  * sim traces with ``page_tokens > 0`` keep the hit rates of the dense
+    window at the same byte budget (page padding is the only waste);
+  * an oversized psi is REJECTED, surfaced via ``rejected_inserts`` at
+    both store and instance level, and the runtime serves the request
+    as a full-inference miss — it never believes psi is resident;
+  * partial tail eviction + resumed reload flows through the event
+    loop: the resumed DRAM hit pays only the missing pages on the H2D
+    channel (``load`` component < a cold reload's);
+  * the live ``rank_with_pages`` path — batched executor over a paged
+    store, end to end through ``RelayRuntime`` — scores bit-for-bit
+    with the dense batched deployment on the same stream.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (BatchingConfig, ClusterConfig, GRCostModel,
+                        HitKind, PageLayout, TriggerConfig, UserMeta,
+                        get_executor, relay_config)
+from repro.core.cache import PagedHBMStore
+from repro.core.runtime import RelayRuntime
+from repro.models import get_config
+
+COST = GRCostModel(get_config("hstu_gr"))
+
+
+def _stream(n, qps, L, seed=0, refresh=0.0):
+    rng = np.random.default_rng(seed)
+    t, out, recent = 0.0, [], []
+    while len(out) < n:
+        t += rng.exponential(1.0 / qps)
+        if recent and rng.random() < refresh:
+            uid = int(rng.choice(recent[-500:]))
+        else:
+            uid = int(rng.integers(0, 10 ** 9))
+        recent.append(uid)
+        out.append((t, UserMeta(user_id=uid, prefix_len=L)))
+    return out
+
+
+def _cfg(page_tokens, *, hbm=4e9, dram=0.0, max_batch=0, L=2048):
+    return relay_config(
+        trigger=TriggerConfig(n_instances=5, r2=0.8,
+                              kv_p99_len=max(L, 1024), hbm_bytes=hbm / 0.5,
+                              r1=0.5, t_life_s=0.5),
+        cluster=ClusterConfig(hbm_cache_bytes=hbm, dram_budget_bytes=dram,
+                              page_tokens=page_tokens, max_batch=max_batch))
+
+
+# ---------------------------------------------------------------------------
+# sim parity: paged window == dense window traces
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("max_batch", [0, 8])
+def test_paged_sim_matches_dense_hit_sequence(max_batch):
+    """L = 2048 is page-aligned at 64-token pages, so the paged pool
+    admits exactly the entries the dense window does: the per-request
+    hit sequence is identical and only load times may differ."""
+    arr = _stream(300, 80, 2048, seed=2, refresh=0.4)
+    outs = {}
+    for pt in (0, 64):
+        rt = RelayRuntime(_cfg(pt, max_batch=max_batch), COST)
+        rt.run(list(arr))
+        outs[pt] = [(r.user_id, r.hit) for r in rt.records]
+    assert outs[0] == outs[64]
+
+
+def test_paged_store_selected_and_conserved():
+    cfg = _cfg(64, dram=500e9)
+    rt = RelayRuntime(cfg, COST)
+    rt.run(_stream(200, 120, 1777, seed=1, refresh=0.5))  # unaligned L
+    for inst in rt.instances.values():
+        assert isinstance(inst.hbm, PagedHBMStore)
+        pool = inst.hbm.pool
+        assert pool.stats["pages_allocated"] == \
+            pool.pages_live + pool.stats["pages_freed"]
+        assert inst.hbm.stats["inserts"] == \
+            inst.hbm.live_count + inst.hbm.stats["evictions"]
+
+
+# ---------------------------------------------------------------------------
+# oversized psi -> rejection surfaced, served as a miss
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("page_tokens", [0, 64])
+def test_oversized_psi_rejected_and_served_as_miss(page_tokens):
+    """A window smaller than one psi: the insert is rejected (store +
+    instance counters), the pre-parked ranker wakes into a miss, and
+    the request completes as a full-inference fallback — the bugfix for
+    the silent drop."""
+    L = 2048
+    tiny = COST.kv_bytes(L) // 2              # half of one psi
+    cfg = relay_config(
+        trigger=TriggerConfig(n_instances=5, r2=0.8,
+                              kv_p99_len=L, hbm_bytes=tiny / 0.5, r1=0.5,
+                              t_life_s=0.5, q_m=1e4),
+        cluster=ClusterConfig(hbm_cache_bytes=tiny, dram_budget_bytes=0.0,
+                              page_tokens=page_tokens,
+                              trigger_policy="admit-all"))
+    rt = RelayRuntime(cfg, COST)
+    res = rt.submit(UserMeta(user_id=5, prefix_len=L), now=0.0)
+    assert res.hit == HitKind.MISS_FALLBACK
+    rejected = sum(i.hbm.stats["rejected_inserts"]
+                   for i in rt.instances.values())
+    assert rejected >= 1
+    assert sum(i.stats["rejected_inserts"]
+               for i in rt.instances.values()) == rejected
+    # and nothing pretends to be resident
+    assert all(i.hbm.live_count == 0 for i in rt.instances.values())
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_rejected_refresh_evicts_stale_entry(paged):
+    """An oversized same-user REFRESH must not leave the superseded psi
+    resident: the stale entry leaves through the eviction turnstile and
+    the rejection is still counted (code-review regression)."""
+    from repro.core.cache import HBMCacheStore
+    layout = PageLayout(page_tokens=8, slabs=4, token_bytes=1)
+    store = PagedHBMStore(10 * layout.page_bytes, layout) if paged \
+        else HBMCacheStore(10 * layout.page_bytes)
+    small = layout.entry_bytes(8)
+    store.insert(5, "psi_old", small, 0.0, prefix_len=8)
+    store.consume(5)
+    huge_tokens = 100 * layout.page_tokens
+    evicted = store.insert(5, "psi_new", layout.entry_bytes(huge_tokens),
+                           1.0, prefix_len=huge_tokens)
+    assert 5 not in store
+    assert store.stats["rejected_inserts"] == 1
+    assert [e.user_id for e in evicted] == [5]   # stale copy may spill
+    assert store.stats["inserts"] == \
+        store.live_count + store.stats["evictions"]
+
+
+def test_unfit_dram_copy_dropped_instead_of_reload_looping():
+    """A psi over the WHOLE window budget must never be promoted: the
+    expander drops the copy at the cache-check step (one miss, no H2D
+    transfer) instead of scheduling a doomed reload per request
+    (code-review regression)."""
+    from repro.core.cache import CacheEntry, HBMCacheStore
+    from repro.core.expander import DRAMExpander, ExpanderConfig
+    hbm = HBMCacheStore(10)
+    exp = DRAMExpander(ExpanderConfig())
+    big = CacheEntry(1, "psi", 20, 0.0, prefix_len=20, consumed=True)
+    exp.spill(big)                              # fits DRAM, not HBM
+    action, d = exp.pseudo_pre_infer(1, hbm, 1.0)
+    exp.finish(1)
+    assert action == "miss"
+    assert exp.stats["unfit_dropped"] == 1
+    assert exp.entries.get(1) is None           # no reload loop possible
+    assert exp.stats["reloads"] == 0
+
+
+def test_transient_reload_rejection_keeps_dram_copy():
+    """A promotion rejected only because in-flight launches pin the
+    pool (zombie pinch) keeps its DRAM copy — the reload is wasted, psi
+    is not — and succeeds once the launch releases its pages
+    (code-review regression)."""
+    from repro.core.expander import DRAMExpander, ExpanderConfig
+    layout = PageLayout(page_tokens=8, slabs=4, token_bytes=1)
+    hbm = PagedHBMStore(layout.entry_bytes(16), layout)  # 1-entry pool
+    exp = DRAMExpander(ExpanderConfig())
+    nbytes = layout.entry_bytes(16)
+    hbm.insert(1, "psi", nbytes, 0.0, prefix_len=16)
+    hbm.consume(1)
+    pinned = hbm.acquire_value(hbm.entries[1])  # in-flight launch
+    exp.spill(dataclasses.replace(hbm.entries[1]))
+    hbm.pop(1)                                  # whole pool -> zombies
+    action, d = exp.pseudo_pre_infer(1, hbm, 2.0)
+    assert action == "reload"                   # fits() is about budget
+    exp.complete_reload(1, hbm, 3.0)
+    exp.finish(1)
+    assert hbm.resident(1) is None              # transiently rejected
+    assert exp.entries.get(1) is not None       # copy retained
+    assert exp.stats["reloads"] == 0            # promotion never landed
+    hbm.release_value(pinned)                   # launch completes
+    action, d = exp.pseudo_pre_infer(1, hbm, 4.0)
+    assert action == "reload"
+    exp.complete_reload(1, hbm, 5.0)
+    exp.finish(1)
+    assert hbm.resident(1) is not None          # retry lands
+    assert exp.stats["reloads"] == 1
+
+
+# ---------------------------------------------------------------------------
+# partial eviction -> resumed reload through the event loop
+# ---------------------------------------------------------------------------
+
+
+def test_partial_reload_resumes_through_runtime():
+    """Squeeze the window so the oldest consumed DRAM-backed psi loses
+    tail pages; its user returns and the DRAM hit's ``load`` component
+    prices only the missing pages (cheaper than a cold full reload)."""
+    L = 2048
+    layout = PageLayout.from_model_config(COST.cfg, 64)
+    budget = int(2.5 * layout.entry_bytes(L))  # 2 full psi + change
+    cfg = relay_config(
+        trigger=TriggerConfig(n_instances=2, r2=0.5,
+                              kv_p99_len=L, hbm_bytes=budget / 0.5,
+                              r1=0.5, t_life_s=10.0, q_m=1e4),
+        cluster=ClusterConfig(hbm_cache_bytes=budget,
+                              dram_budget_bytes=500e9, page_tokens=64,
+                              trigger_policy="admit-all"))
+    rt = RelayRuntime(cfg, COST)
+    t = 0.0
+    for uid in (1, 2, 3):                      # 3rd insert -> pressure
+        rt.submit(UserMeta(user_id=uid, prefix_len=L), now=t)
+        t += 1.0
+    special = rt.instances["special-0"]
+    partial = [e for e in special.hbm.entries.values()
+               if e.tokens_resident < e.prefix_len]
+    assert special.hbm.stats["partial_evictions"] >= 1
+    assert len(partial) == 1
+    victim = partial[0]
+    missing = victim.prefix_len - victim.tokens_resident
+    assert 0 < missing < L
+    # rank-path resume (synchronous stage API — no side path to win the
+    # race): the DRAM hit's load prices ONLY the missing pages
+    from repro.core.types import Request
+    res = special.handle_rank(
+        Request.rank(999, UserMeta(user_id=victim.user_id, prefix_len=L),
+                     now=t), now=t)
+    assert res.hit == HitKind.DRAM_HIT
+    want = COST.paged_load_ms(missing, 64)
+    assert res.components["load"] == pytest.approx(want)
+    assert res.components["load"] < COST.paged_load_ms(L, 64)
+    assert special.hbm.stats["resumed_reloads"] == 1
+    assert special.hbm.entries[victim.user_id].tokens_resident == L
+    # event-loop flavour: squeeze again, then let the relay side path
+    # resume it ahead of ranking (the race the lifecycle is built for)
+    rt.submit(UserMeta(user_id=4, prefix_len=L), now=t + 1.0)
+    again = [e for e in special.hbm.entries.values()
+             if e.tokens_resident < e.prefix_len]
+    if again:                                  # FIFO picked a backed entry
+        res2 = rt.submit(UserMeta(user_id=again[0].user_id, prefix_len=L),
+                         now=t + 2.0)
+        assert res2.hit == HitKind.HBM_HIT     # side path resumed in time
+        assert special.hbm.stats["resumed_reloads"] == 2
+
+
+# ---------------------------------------------------------------------------
+# live rank_with_pages == dense batched scores (end to end)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def live():
+    import jax
+    from repro.data.synthetic import UserBehaviorStore, WorkloadConfig
+    from repro.models import build_model
+    cfg = get_config("hstu_gr", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    store = UserBehaviorStore(WorkloadConfig(
+        vocab=cfg.vocab, n_items=16, incr_len=8, max_len=512))
+    return cfg, model, params, store
+
+
+def _live_runtime(live, page_tokens):
+    cfg, model, params, store = live
+    cost = GRCostModel(cfg)
+    layout = PageLayout.from_model_config(cfg, page_tokens or 64)
+    budget = 64 * layout.entry_bytes(512)
+    ex = get_executor("batched")(
+        model, params, store, cost=cost,
+        batching=BatchingConfig(max_batch=4, max_wait_ms=2.0),
+        page_tokens=page_tokens)
+    rcfg = relay_config(
+        trigger=TriggerConfig(n_instances=2, r2=0.5,
+                              kv_p99_len=512, hbm_bytes=budget / 0.5,
+                              r1=0.5, t_life_s=5.0, q_m=1e4),
+        cluster=ClusterConfig(hbm_cache_bytes=budget,
+                              dram_budget_bytes=0.0, max_batch=4,
+                              page_tokens=page_tokens,
+                              trigger_policy="admit-all",
+                              long_seq_threshold=1))
+    return RelayRuntime(rcfg, cost, executor_factory=lambda name: ex)
+
+
+def test_live_rank_with_pages_matches_dense_batched(live):
+    """THE live acceptance: the same request stream through (a) the
+    dense batched deployment and (b) the paged pool + rank_with_pages
+    path produces bit-identical scores and hit kinds."""
+    _, _, _, store = live
+    metas = [UserMeta(user_id=100 + i,
+                      prefix_len=int(store.long_term(100 + i).shape[0]),
+                      incr_len=8, n_items=16)
+             for i in range(6)]
+    results = {}
+    for pt in (0, 32):
+        rt = _live_runtime(live, pt)
+        out = []
+        t = 0.0
+        for m in metas:
+            out.append(rt.submit(m, now=t))
+            t += 0.3
+        results[pt] = out
+    for dense, paged in zip(results[0], results[32]):
+        assert dense.hit == paged.hit
+        assert dense.hit == HitKind.HBM_HIT
+        assert np.asarray(dense.scores).tobytes() == \
+            np.asarray(paged.scores).tobytes()
+
+
+def test_live_paged_warmup_precompiles_rank_with_pages(live):
+    cfg, model, params, store = live
+    cost = GRCostModel(cfg)
+    ex = get_executor("batched")(
+        model, params, store, cost=cost,
+        batching=BatchingConfig(max_batch=4), page_tokens=32)
+    done = ex.warmup([100, 120], batch_sizes=[1, 4], incr_len=8,
+                     n_items=16, pool_pages=64)
+    assert done, "nothing compiled"
+    # the paged entry compiled without error alongside the dense ones;
+    # a second warmup is a no-op (keys cached)
+    assert ex.warmup([100, 120], batch_sizes=[1, 4], incr_len=8,
+                     n_items=16, pool_pages=64) == []
