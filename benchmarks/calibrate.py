@@ -1,0 +1,122 @@
+"""Calibrate ``GRCostModel.batch_factor`` from measured group launches.
+
+``PYTHONPATH=src python -m benchmarks.calibrate`` times
+``BatchedLiveExecutor.rank_group`` on this host per (prefix-bucket,
+batch-depth), derives the *marginal* cost of each non-dominant batch
+member as a fraction of the dominant member's solo latency
+
+    factor(bucket, n) = (group_ms / solo_ms - 1) / (n - 1)
+
+and writes a table (default ``BENCH_batch_factors.json``) the cost
+model loads via ``repro.core.costmodel.load_batch_calibration`` /
+``GRCostModel.with_calibration`` — replacing the fixed 0.2 with the
+measured per-shape numbers so the simulator's ``relay_batched`` /
+``relay_multihost`` traces price batching the way THIS hardware does.
+
+A TPU deployment re-runs this at its real model scale; the CPU smoke
+numbers exist so the calibration path itself stays exercised in CI
+(``--quick``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+def measure(buckets: Sequence[int], batches: Sequence[int],
+            repeats: int = 3, incr_len: int = 16, n_items: int = 64
+            ) -> Tuple[Dict, List[Tuple]]:
+    """Measure rank_group wall times and derive the factor table.
+    Returns (calibration table, CSV rows)."""
+    import jax
+
+    from repro.core import BatchingConfig, GRCostModel, UserMeta, \
+        get_executor
+    from repro.data.synthetic import UserBehaviorStore, WorkloadConfig
+    from repro.models import build_model, get_config
+    from repro.serving.batching import PendingRank
+
+    cfg = get_config("hstu_gr", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    store = UserBehaviorStore(WorkloadConfig(
+        vocab=cfg.vocab, n_items=n_items, incr_len=incr_len, max_len=2048))
+    max_batch = max(batches)
+    ex = get_executor("batched")(
+        model, params, store, cost=GRCostModel(cfg),
+        batching=BatchingConfig(max_batch=max_batch))
+
+    def group_for(bucket: int, n: int) -> List[PendingRank]:
+        group = []
+        for i in range(n):
+            meta = UserMeta(user_id=1000 * bucket + i, prefix_len=bucket,
+                            incr_len=incr_len, n_items=n_items)
+            psi, _, _ = ex.pre_infer(meta)
+            group.append(PendingRank(user_id=meta.user_id, psi=psi,
+                                     prefix_len=bucket, meta=meta))
+        return group
+
+    def timed(group) -> float:
+        ex.rank_group(group)                      # compile/warm
+        return float(np.median([ex.rank_group(group)[1]
+                                for _ in range(repeats)]))
+
+    rows, table = [], {}
+    for bucket in buckets:
+        solo_ms = timed(group_for(bucket, 1))
+        per_bucket = {}
+        for n in batches:
+            if n <= 1:
+                continue
+            group_ms = timed(group_for(bucket, n))
+            factor = max(0.0, (group_ms / solo_ms - 1.0) / (n - 1))
+            per_bucket[str(n)] = round(factor, 4)
+            rows.append((f"calibrate/bucket{bucket}/batch{n}",
+                         group_ms * 1e3,
+                         f"solo={solo_ms:.2f}ms group={group_ms:.2f}ms "
+                         f"factor={factor:.3f}"))
+        table[str(bucket)] = per_bucket
+    factors = [v for row in table.values() for v in row.values()]
+    cal = {"default": round(float(np.mean(factors)), 4) if factors else 0.2,
+           "meta": {"model": "hstu_gr-smoke", "repeats": repeats,
+                    "incr_len": incr_len, "n_items": n_items},
+           "buckets": table}
+    return cal, rows
+
+
+def main(argv=None) -> Dict:
+    ap = argparse.ArgumentParser(
+        description="measure rank_group wall times per (bucket, batch) "
+                    "and emit a batch-factor table for GRCostModel")
+    ap.add_argument("--out", default="BENCH_batch_factors.json")
+    ap.add_argument("--buckets", default="64,128,256",
+                    help="comma-separated prefix buckets to measure")
+    ap.add_argument("--batches", default="1,2,4,8")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--quick", action="store_true",
+                    help="one bucket, depths (1,2), single repeat "
+                         "(CI smoke: exercises the path, not the numbers)")
+    args = ap.parse_args(argv)
+    buckets = [int(b) for b in args.buckets.split(",")]
+    batches = [int(b) for b in args.batches.split(",")]
+    if args.quick:
+        buckets, batches, args.repeats = buckets[:1], [1, 2], 1
+
+    cal, rows = measure(buckets, batches, repeats=args.repeats)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    with open(args.out, "w") as f:
+        json.dump(cal, f, indent=1, sort_keys=True)
+    print(f"# wrote {args.out} (default factor {cal['default']}, "
+          f"fixed model default 0.2)")
+    return cal
+
+
+if __name__ == "__main__":
+    main()

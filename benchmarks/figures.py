@@ -60,6 +60,7 @@ def _fixed_stream(L, qps, dur, *, refresh=0.0, horizon=6000, seed=0,
 
 def _cfg(mode: str, L: int, cost=None) -> RelayConfig:
     """mode: baseline | relay | relay_dram | relay_batched | relay_paged
+    | relay_multihost
 
     ``relay_batched`` is the ``relay`` deployment with continuous
     micro-batching switched on (same trigger/cache -> equal hit rates);
@@ -67,11 +68,16 @@ def _cfg(mode: str, L: int, cost=None) -> RelayConfig:
     ``relay_batched`` over the paged HBM window (64-token pages): same
     trigger and byte budget, psi block-granular — hit rates must match
     ``relay_batched`` with slo_qps within tolerance (page-rounded load
-    times are the only modelled difference at page-aligned L)."""
+    times are the only modelled difference at page-aligned L).
+    ``relay_multihost`` is ``relay_batched`` striped over two hosts
+    (owner-map -> per-host ring routing, per-host DRAM tiers): affinity
+    hit rates must stay within 2% of the single-host deployment — the
+    two-level rendezvous changes WHERE producer and consumer meet, not
+    whether they do."""
     relay = mode != "baseline"
     r2 = 0.8 if relay else 0.2   # 4 active instances either way
     hbm_cache = 4e9
-    batched = mode in ("relay_batched", "relay_paged")
+    batched = mode in ("relay_batched", "relay_paged", "relay_multihost")
     return relay_config(
         trigger=TriggerConfig(n_instances=N_INST, r2=r2,
                               kv_p99_len=max(L, 1024),
@@ -83,6 +89,7 @@ def _cfg(mode: str, L: int, cost=None) -> RelayConfig:
             hbm_cache_bytes=hbm_cache,
             max_batch=8 if batched else 0,
             batch_wait_ms=2.0,
+            hosts=2 if mode == "relay_multihost" else 1,
             page_tokens=64 if mode == "relay_paged" else 0),
     )
 
@@ -436,7 +443,7 @@ def bench_relay_summary(quick: bool = False) -> Dict:
     out: Dict[str, Dict] = {"meta": {
         "L": L, "offered_qps": qps, "slo_ms": SLO_MS, "sim_s": SIM_S}}
     for mode in ("baseline", "relay", "relay_dram", "relay_batched",
-                 "relay_paged"):
+                 "relay_paged", "relay_multihost"):
         s = _run(mode, L, qps)
         entry = {
             "p50_ms": round(s["p50_ms"], 3),

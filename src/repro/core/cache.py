@@ -90,7 +90,8 @@ class HBMCacheStore:
         self.used_bytes = 0
         self.stats = {"inserts": 0, "hits": 0, "misses": 0,
                       "evictions": 0, "premature_evictions": 0,
-                      "rejected_inserts": 0, "peak_bytes": 0}
+                      "rejected_inserts": 0, "peak_bytes": 0,
+                      "handoffs": 0}
 
     def __contains__(self, user_id: int) -> bool:
         return user_id in self.entries
@@ -159,6 +160,22 @@ class HBMCacheStore:
         e = self.entries.get(user_id)
         if e is not None:
             self._evict(user_id)
+        return e
+
+    def extract(self, user_id: int) -> Optional[CacheEntry]:
+        """Remove an entry for ownership HANDOFF during rebalancing —
+        not an eviction: the entry continues its lifecycle on another
+        instance, so it bypasses the eviction/premature accounting and
+        is counted in ``stats["handoffs"]`` instead.  Conservation
+        across churn is therefore
+
+            inserts == live_count + evictions + handoffs
+        """
+        e = self.entries.pop(user_id, None)
+        if e is None:
+            return None
+        self.used_bytes -= e.nbytes
+        self.stats["handoffs"] += 1
         return e
 
     def fits(self, nbytes: int, prefix_len: int = 0) -> bool:
@@ -415,6 +432,27 @@ class PagedHBMStore(HBMCacheStore):
         if e is None or e.tokens_resident < e.prefix_len:
             return None
         return e
+
+    def extract(self, user_id: int) -> Optional[CacheEntry]:
+        """Handoff removal, page-pool flavour: the travelling copy must
+        be detached from this pool, so a fully resident PagedPsi is
+        materialized to a dense host pytree before its pages are freed.
+        A partially resident entry's stale head is worthless off-host —
+        its full DRAM backing copy (it is dram_backed by construction)
+        migrates instead, and the value travels as ``None``."""
+        e = self.entries.get(user_id)
+        if e is None:
+            return None
+        if e.page_table is not None:
+            pps_res = self.layout.pages_per_slab(e.tokens_resident) \
+                if e.tokens_resident else 0
+            if isinstance(e.value, PagedPsi):
+                full = e.tokens_resident >= e.prefix_len
+                e.value = e.value.materialize() if full else None
+            self.pool.free([int(p) for p in
+                            e.page_table[:, :pps_res].reshape(-1)])
+            e.page_table = None
+        return super().extract(user_id)
 
     # --- launch pinning ------------------------------------------------------
 

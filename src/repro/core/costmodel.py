@@ -15,10 +15,31 @@ All returned latencies are in milliseconds.
 from __future__ import annotations
 
 import dataclasses
+import json
+from typing import Any, Dict, Optional, Sequence
 
 from repro.models.config import ModelConfig
 
 from .paging import ceil_div
+
+
+def load_batch_calibration(path: str) -> Dict:
+    """Load a measured batching-cost table written by
+    ``benchmarks/calibrate.py``: per-(prefix-bucket, batch-depth)
+    marginal-cost factors replacing the fixed ``batch_factor``.  Format:
+
+        {"default": 0.2,
+         "buckets": {"256": {"2": 0.18, "4": 0.21, "8": 0.24}, ...}}
+
+    Keys are strings (JSON); values are the marginal cost of each
+    non-dominant member as a fraction of the dominant member's solo
+    latency.  Feed the result to ``GRCostModel.with_calibration``."""
+    with open(path) as f:
+        table = json.load(f)
+    if "buckets" not in table:
+        raise ValueError(f"{path}: not a batch-calibration table "
+                         "(missing 'buckets')")
+    return table
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +66,17 @@ class GRCostModel:
     # ride largely on the same pass (calibrated so an 8-deep batch costs
     # ~2.4x one request, mirroring the live ``batched`` executor).
     batch_factor: float = 0.2
+    # Measured per-(bucket, batch) factor table from benchmarks/
+    # calibrate.py (load_batch_calibration); None -> the fixed
+    # batch_factor above.
+    batch_calibration: Optional[Dict[str, Any]] = None
+
+    def with_calibration(self, table) -> "GRCostModel":
+        """Return a copy whose batched launch costs come from a measured
+        table (``load_batch_calibration`` result or a path to one)."""
+        if isinstance(table, str):
+            table = load_batch_calibration(table)
+        return dataclasses.replace(self, batch_calibration=table)
 
     # ---- model primitives -------------------------------------------------
     def layer_param_flops(self) -> int:
@@ -100,15 +132,42 @@ class GRCostModel:
         return (fl / self.hw.eff_flops * 1e3
                 + self.h2d_ms(n) + self.hw.host_feature_ms)
 
-    def batched_rank_ms(self, per_request_ms) -> float:
-        """Wall time of one micro-batched rank launch whose members would
+    def _marginal_factor(self, bucket: Optional[int], n: int) -> float:
+        """Per-member marginal batching cost: the measured table when
+        one is loaded (nearest bucket at or above, deepest measured
+        batch at or below), else the fixed ``batch_factor``."""
+        cal = self.batch_calibration
+        if cal is None or n <= 1:
+            return self.batch_factor
+        default = float(cal.get("default", self.batch_factor))
+        buckets = cal.get("buckets") or {}
+        if not buckets:
+            return default
+        keys = sorted(int(b) for b in buckets if buckets[b])
+        if not keys:
+            return default
+        if bucket is None:
+            bucket = keys[-1]
+        b = next((k for k in keys if k >= int(bucket)), keys[-1])
+        row = buckets[str(b)]
+        depths = sorted(int(d) for d in row if int(d) <= n) or \
+            [min(int(d) for d in row)]
+        return float(row[str(depths[-1])])
+
+    def batched_rank_ms(self, per_request_ms,
+                        bucket: Optional[int] = None) -> float:
+        """Wall time of one micro-batched launch whose members would
         individually cost ``per_request_ms`` — the sim-side mirror of the
-        live ``batched`` executor (consumed by ``SimExecutor.rank_group``).
-        Dominant member at full cost, the rest at ``batch_factor``."""
+        live ``batched`` executor (consumed by ``SimExecutor.rank_group``
+        and ``pre_infer_group``).  Dominant member at full cost, the
+        rest at the marginal factor (measured per (bucket, batch) when
+        a calibration table is loaded, fixed ``batch_factor`` otherwise).
+        """
         per = list(per_request_ms)
         if not per:
             return 0.0
-        return max(per) * (1.0 + self.batch_factor * (len(per) - 1))
+        factor = self._marginal_factor(bucket, len(per))
+        return max(per) * (1.0 + factor * (len(per) - 1))
 
     def dram_load_ms(self, prefix_len: int) -> float:
         """DRAM -> HBM reload of psi (expander hit)."""
@@ -129,3 +188,13 @@ class GRCostModel:
         forbids on the ranking critical path."""
         return (self.hw.net_rtt_ms
                 + self.kv_bytes(prefix_len) / self.hw.net_bw * 1e3)
+
+    def handoff_ms(self, prefix_len: int, cross_host: bool = True) -> float:
+        """Ownership-handoff transfer of one psi during rebalancing
+        churn — the remote-fetch penalty paid OFF the critical path
+        (background migration), never per-request.  An intra-host move
+        (ring change within one server) only re-crosses the local
+        H2D/DRAM path."""
+        if cross_host:
+            return self.remote_fetch_ms(prefix_len)
+        return self.dram_load_ms(prefix_len)

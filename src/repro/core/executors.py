@@ -36,7 +36,7 @@ from typing import Any, Callable, Dict, List, Optional, Protocol, \
 import numpy as np
 
 from repro.serving.batching import (BatchingConfig, PendingRank, bucket_of,
-                                    pad_psi, stack_psi)
+                                    pad_psi, prefill_grid, stack_psi)
 
 from .cache import kv_nbytes
 from .costmodel import GRCostModel
@@ -193,7 +193,24 @@ class SimExecutor:
             else:
                 per.append(self.cost.full_rank_ms(
                     plen, w.incr_len, w.n_items))
-        return [None] * len(group), self.cost.batched_rank_ms(per)
+        bucket = bucket_of(max(w.prefix_len for w in group))
+        return ([None] * len(group),
+                self.cost.batched_rank_ms(per, bucket=bucket))
+
+    def pre_infer_group(self, metas: Sequence[UserMeta]
+                        ) -> Tuple[List[Tuple[Any, int]], float]:
+        """Pre-infer a prefill-grid-compatible group as one modelled
+        launch (the batched side path).  Returns
+        ([(psi, nbytes), ...], group wall ms) — single-member groups
+        cost exactly the per-request ``pre_infer``, keeping uncontended
+        traces bit-identical to the unbatched side path."""
+        outs, per = [], []
+        for m in metas:
+            psi, nbytes, ms = self.pre_infer(m)
+            outs.append((psi, nbytes))
+            per.append(ms)
+        bucket = prefill_grid(max(m.prefix_len for m in metas))
+        return outs, self.cost.batched_rank_ms(per, bucket=bucket)
 
 
 @register_executor("live")
@@ -370,6 +387,31 @@ class BatchedLiveExecutor(LiveExecutor):
         scores.block_until_ready()
         ms = (time.perf_counter() - t0) * 1e3
         return [scores[i] for i in range(n)], ms
+
+    def pre_infer_group(self, metas: Sequence[UserMeta]
+                        ) -> Tuple[List[Tuple[Any, int]], float]:
+        """Batched pre-inference: ONE jitted prefill for a group sharing
+        the 64-token prefill grid (the aggregator keys pre work by
+        ``prefill_grid``, so every member's padded length is identical).
+        The batch axis snaps to the power-of-two grid by repeating the
+        first member, and each member's psi slice — rows are
+        independent under batched compute — is bit-identical to the psi
+        its own per-request ``pre_infer`` call would have produced."""
+        jnp = self._jax.numpy
+        n = self._round(max(m.prefix_len for m in metas))
+        rows = list(metas)
+        rows += [metas[0]] * (self._batch_grid(len(metas)) - len(metas))
+        toks = np.stack([np.resize(self.store.long_term(m.user_id), n)
+                         for m in rows])
+        t0 = time.perf_counter()
+        _, kv = self._prefill(self.params, jnp.asarray(toks))
+        kv = self._jax.block_until_ready(kv)
+        ms = (time.perf_counter() - t0) * 1e3
+        outs = []
+        for i in range(len(metas)):
+            psi = tuple(a[:, i:i + 1] for a in kv)   # (L, 1, n, H, D)
+            outs.append((psi, kv_nbytes(psi)))
+        return outs, ms
 
     # --- startup pre-warming -------------------------------------------------
 

@@ -76,7 +76,8 @@ class DRAMExpander:
         self.active_reloads = 0
         self.stats = {"spills": 0, "reloads": 0, "redundant_avoided": 0,
                       "dram_hits": 0, "dram_misses": 0, "lru_evictions": 0,
-                      "reload_throttled": 0, "unfit_dropped": 0}
+                      "reload_throttled": 0, "unfit_dropped": 0,
+                      "handoffs": 0}
 
     # --- spill (after consumption, off the critical path) -------------------
     def spill(self, entry: CacheEntry) -> bool:
@@ -126,6 +127,17 @@ class DRAMExpander:
     def _remove(self, user_id: int):
         e = self.entries.pop(user_id)
         self.used_bytes -= e.nbytes
+
+    def take(self, user_id: int) -> Optional[CacheEntry]:
+        """Remove an entry for ownership handoff (rebalancing churn):
+        the DRAM copy migrates to the new owning host's tier instead of
+        being dropped.  No hit/miss accounting — this is background
+        migration, not a lookup."""
+        e = self.entries.get(user_id)
+        if e is not None:
+            self._remove(user_id)
+            self.stats["handoffs"] = self.stats.get("handoffs", 0) + 1
+        return e
 
     # --- pseudo-pre-infer --------------------------------------------------
     def pseudo_pre_infer(self, user_id: int, hbm: HBMCacheStore,

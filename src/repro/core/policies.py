@@ -24,13 +24,12 @@ Registering a policy is one decorator; selection is one string in
 
 from __future__ import annotations
 
-from typing import Callable, Dict, List
-
-import numpy as np
+from typing import Callable, Dict, List, Optional
 
 from .costmodel import GRCostModel
 from .expander import DRAMExpander, ExpanderConfig
-from .router import AffinityRouter
+from .router import AffinityRouter, _h
+from .topology import ClusterTopology
 from .trigger import Decision, SequenceAwareTrigger, TriggerConfig
 from .types import HASH_KEY, UserMeta
 
@@ -72,8 +71,10 @@ def make_trigger(name: str, cfg: TriggerConfig, cost: GRCostModel):
 
 
 def make_router(name: str, special: List[str], normal: List[str], *,
-                seed: int = 0):
-    return _get(ROUTER_POLICIES, "router", name)(special, normal, seed=seed)
+                seed: int = 0,
+                topology: Optional[ClusterTopology] = None):
+    return _get(ROUTER_POLICIES, "router", name)(special, normal, seed=seed,
+                                                 topology=topology)
 
 
 def make_expander(name: str, cfg: ExpanderConfig):
@@ -118,17 +119,22 @@ class NeverTrigger(SequenceAwareTrigger):
 
 
 @register_router("affinity")
-def _affinity_router(special: List[str], normal: List[str], *, seed: int = 0
+def _affinity_router(special: List[str], normal: List[str], *, seed: int = 0,
+                     topology: Optional[ClusterTopology] = None
                      ) -> AffinityRouter:
     # user_hash on the normal pool = session affinity for unkeyed
     # traffic (the behaviour the cluster benchmarks are calibrated to)
-    return AffinityRouter(special, normal, policy="user_hash")
+    return AffinityRouter(special, normal, policy="user_hash",
+                          topology=topology)
 
 
 @register_router("affinity-rr")
 def _affinity_rr_router(special: List[str], normal: List[str], *,
-                        seed: int = 0) -> AffinityRouter:
-    return AffinityRouter(special, normal, policy="round_robin")
+                        seed: int = 0,
+                        topology: Optional[ClusterTopology] = None
+                        ) -> AffinityRouter:
+    return AffinityRouter(special, normal, policy="round_robin",
+                          topology=topology)
 
 
 @register_router("random")
@@ -136,22 +142,33 @@ class RandomSpecialRouter(AffinityRouter):
     """Placement ablation (paper Fig. 12 argument): keyed requests go to
     a *random* special instance, so the pre-infer producer and the
     ranking consumer rendezvous only by chance and ranking mostly falls
-    back to full inference."""
+    back to full inference.
+
+    Placement is a pure hash of (seed, stage, key) — NOT a stateful RNG
+    re-rolled per call — so two processes replaying the same stream
+    (or the live and sim adapters in a parity sweep) pick identical
+    "random" instances, while the pre-infer and rank stages of one user
+    still hash independently and rendezvous only with probability
+    1/n_special."""
 
     def __init__(self, special: List[str], normal: List[str], *,
-                 seed: int = 0, **kw):
+                 seed: int = 0,
+                 topology: Optional[ClusterTopology] = None, **kw):
         # same normal-pool policy as "affinity" so the ablation varies
         # ONLY the special-pool placement
         kw.setdefault("policy", "user_hash")
-        super().__init__(special, normal, **kw)
-        self._specials = list(special)
-        self._rng = np.random.default_rng(seed)
+        super().__init__(special, normal, topology=topology, **kw)
+        self._seed = int(seed)
 
     def route(self, request) -> str:
-        if request.header.get(HASH_KEY) is not None:
+        key = request.header.get(HASH_KEY)
+        if key is not None:
+            # the live topology, not a construction-time snapshot: host
+            # churn must never leave departed instances routable
+            specials = self.topology.all_special()
             self.stats["special"] += 1
-            return self._specials[
-                int(self._rng.integers(0, len(self._specials)))]
+            hv = _h(f"random:{self._seed}:{request.stage.value}:{key}")
+            return specials[hv % len(specials)]
         return super().route(request)
 
 

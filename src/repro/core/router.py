@@ -1,26 +1,34 @@
-"""Affinity-aware router (paper §3.3).
+"""Affinity-aware router (paper §3.3), fleet-scale (two-level).
 
 Converts late-binding placement into an early-binding contract: the
 auxiliary pre-infer signal and the eventual ranking request for the same
-user both carry ``consistency-hash-key: userID``; the load balancer and
-gateway apply consistent hashing on that key, so producer and consumer
-rendezvous at the same special instance with no coordination.
+user both carry ``consistency-hash-key: userID``.  Routing resolves the
+key in two levels:
+
+  1. **host** — the owner map (rendezvous hashing over the host set,
+     ``repro.core.topology``) names the one server that owns this
+     user's cache lifecycle;
+  2. **instance** — the owning host's consistent-hash ring over *its*
+     special instances picks the rendezvous instance.
+
+Producer and consumer therefore meet at the same instance on the same
+host with no coordination, across however many servers the fleet spans.
+With a single host the owner map is constant and the per-host ring is
+byte-identical to the historical flat ring, so ``hosts=1`` reproduces
+the single-process router exactly.
 
 Requests without the key (normal, short-sequence traffic) fall back to
-standard policies (round-robin / least-connections).
+standard policies (round-robin / least-connections / user-hash) inside
+the owning host's normal pool.
 """
 
 from __future__ import annotations
 
 import bisect
-import hashlib
 from typing import Dict, List, Optional
 
+from .topology import ClusterTopology, Host, _h, stripe_hosts
 from .types import HASH_KEY, Request
-
-
-def _h(data: str) -> int:
-    return int.from_bytes(hashlib.sha256(data.encode()).digest()[:8], "big")
 
 
 class ConsistentHashRing:
@@ -58,45 +66,128 @@ class ConsistentHashRing:
 
 
 class AffinityRouter:
-    """Two-tier routing: special pool via consistent hashing on the
-    user-keyed header; normal pool via a standard LB policy —
-    ``round_robin``, ``least_connections`` or ``user_hash`` (session
-    affinity: the same user keeps landing on the same normal instance,
-    which is what production gateways do for feature-cache locality and
-    what the cluster benchmarks are calibrated against)."""
+    """Two-tier, two-level routing.
+
+    Keyed (special-pool) traffic: owner map -> owning host -> that
+    host's consistent-hash ring over its special instances.  Unkeyed
+    (normal-pool) traffic: owner map -> owning host -> a standard LB
+    policy over the host's normal pool — ``round_robin``,
+    ``least_connections`` or ``user_hash`` (session affinity: the same
+    user keeps landing on the same normal instance, which is what
+    production gateways do for feature-cache locality and what the
+    cluster benchmarks are calibrated against).
+
+    Construct from flat pools (a single implicit host — the historical
+    deployment) or pass an explicit ``topology``."""
 
     def __init__(self, special: List[str], normal: List[str],
-                 policy: str = "round_robin", vnodes: int = 128):
-        self.ring = ConsistentHashRing(special, vnodes=vnodes)
-        self.normal = list(normal)
+                 policy: str = "round_robin", vnodes: int = 128,
+                 topology: Optional[ClusterTopology] = None):
+        if topology is None:
+            topology = ClusterTopology(
+                stripe_hosts(list(special), list(normal), 1))
+        self.topology = topology
+        self.vnodes = vnodes
         self.policy = policy
-        self._rr = 0
-        self._load: Dict[str, int] = {n: 0 for n in normal}
+        self.rings: Dict[str, ConsistentHashRing] = {
+            name: ConsistentHashRing(host.special, vnodes=vnodes)
+            for name, host in topology.hosts.items()}
+        self._rr: Dict[str, int] = {name: 0 for name in topology.hosts}
+        self._load: Dict[str, int] = {n: 0 for n in topology.all_normal()}
         self.stats = {"special": 0, "normal": 0}
+
+    # --- single-host compatibility surface -----------------------------------
+
+    @property
+    def ring(self) -> ConsistentHashRing:
+        """THE ring of the historical flat deployment.  Only meaningful
+        with one host; multi-host callers must go through
+        ``route_key`` / ``rings``."""
+        if self.topology.n_hosts != 1:
+            raise AttributeError(
+                "router spans multiple hosts; use route_key()/rings")
+        return next(iter(self.rings.values()))
+
+    @property
+    def normal(self) -> List[str]:
+        return self.topology.all_normal()
+
+    # --- routing -------------------------------------------------------------
+
+    def route_key(self, key) -> str:
+        """Resolve a user key: owning host, then that host's ring.  A
+        host with no special instances (possible when the special pool
+        is smaller than the host count) never owns keys — rendezvous
+        re-runs over the special-bearing hosts, deterministically."""
+        host = self.topology.owner(key)
+        ring = self.rings.get(host.name)
+        if ring is None or not ring.nodes:
+            candidates = [n for n in self.topology.hosts
+                          if self.rings[n].nodes]
+            if not candidates:
+                raise RuntimeError("no special instances on any host")
+            name = max(candidates, key=lambda h: _h(f"{h}|{key}"))
+            ring = self.rings[name]
+        return ring.route(key)
 
     def route(self, request: Request) -> str:
         key = request.header.get(HASH_KEY)
         if key is not None:
             self.stats["special"] += 1
-            return self.ring.route(key)
+            return self.route_key(key)
         self.stats["normal"] += 1
+        host = self.topology.owner(request.user.user_id)
+        pool = host.normal or self.topology.all_normal()
         if self.policy == "user_hash":
-            return self.normal[request.user.user_id % len(self.normal)]
+            return pool[request.user.user_id % len(pool)]
         if self.policy == "least_connections" and self._load:
-            node = min(self._load, key=self._load.get)
-            self._load[node] += 1
+            node = min(pool, key=lambda n: self._load.get(n, 0))
+            self._load[node] = self._load.get(node, 0) + 1
             return node
-        node = self.normal[self._rr % len(self.normal)]
-        self._rr += 1
+        node = pool[self._rr[host.name] % len(pool)]
+        self._rr[host.name] += 1
         return node
 
     def release(self, node: str):
         if node in self._load:
             self._load[node] = max(0, self._load[node] - 1)
 
-    # deployment churn (affinity disruption -> fallback path, not an error)
-    def add_special(self, node: str):
-        self.ring.add(node)
+    # --- instance churn (affinity disruption -> fallback, not an error) -------
+
+    def add_special(self, node: str, host: Optional[str] = None):
+        """Hot-add a special instance.  Without an explicit host it
+        joins the host with the fewest specials (deterministic
+        tie-break: topology order) — the single-host case degenerates
+        to the historical flat-ring add."""
+        if host is None:
+            host = min(self.topology.hosts,
+                       key=lambda n: len(self.topology.hosts[n].special))
+        if node not in self.topology.hosts[host].special:
+            self.topology.register_instance(node, host, special=True)
+        self.rings[host].add(node)
 
     def remove_special(self, node: str):
-        self.ring.remove(node)
+        host = self.topology.host_of(node)
+        if host is None:
+            return
+        self.topology.unregister_instance(node)
+        if host in self.rings:
+            self.rings[host].remove(node)
+
+    # --- host churn (owner-map epoch bumps; runtime performs the handoff) -----
+
+    def add_host(self, host: Host) -> None:
+        self.topology.join(host)
+        self.rings[host.name] = ConsistentHashRing(host.special,
+                                                   vnodes=self.vnodes)
+        self._rr[host.name] = 0
+        for n in host.normal:
+            self._load.setdefault(n, 0)
+
+    def remove_host(self, name: str) -> Host:
+        host = self.topology.leave(name)
+        self.rings.pop(name, None)
+        self._rr.pop(name, None)
+        for n in host.normal:
+            self._load.pop(n, None)
+        return host

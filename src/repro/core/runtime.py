@@ -51,16 +51,17 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 import numpy as np
 
 from repro.serving.batching import BatchAggregator, BatchingConfig, \
-    PendingRank
+    PendingRank, prefill_grid
 from repro.serving.metrics import SLOTracker
 
 from .cache import HBMCacheStore, make_hbm_store
 from .clock import Clock, VirtualClock, WallClock
 from .costmodel import GRCostModel
 from .executors import Executor, get_executor
-from .expander import ExpanderConfig
+from .expander import DRAMExpander, ExpanderConfig
 from .paging import PageLayout
 from .policies import make_expander, make_router, make_trigger
+from .topology import ClusterTopology, Host, stripe_hosts
 from .trigger import TriggerConfig
 from .types import HitKind, RankResult, Request, UserMeta
 
@@ -91,6 +92,8 @@ class ClusterConfig:
     max_batch: int = 0                   # >0 -> continuous micro-batching
     batch_wait_ms: float = 2.0           # aggregator flush deadline
     page_tokens: int = 0                 # >0 -> paged HBM window (pool pages)
+    hosts: int = 1                       # servers the pools stripe over
+    rebalance: str = "handoff"           # churn policy: handoff | none
     relay_enabled: bool = True           # False -> baseline (no side path)
     long_seq_threshold: int = 0          # 0 -> trigger's risk test routes
     trigger_policy: str = "sequence-aware"
@@ -198,7 +201,8 @@ class InstanceRuntime:
     the event loop compose them.
     """
 
-    def __init__(self, cfg: InstanceConfig, executor: Executor):
+    def __init__(self, cfg: InstanceConfig, executor: Executor,
+                 expander=None):
         self.cfg = cfg
         self.name = cfg.name
         self.special = cfg.special
@@ -211,7 +215,12 @@ class InstanceRuntime:
             # no DRAM tier -> evictees are discarded, never spilled:
             # skip the dense gather on the eviction path
             self.hbm.materialize_on_evict = cfg.dram.dram_budget_bytes > 0
-        self.expander = make_expander(cfg.expander_policy, cfg.dram)
+        # DRAM is host memory: a multi-host runtime passes the server's
+        # shared expander; standalone instances (and the hosts=1
+        # deployment, where affinity makes per-instance and per-host
+        # tiers equivalent) own a private one
+        self.expander = expander if expander is not None \
+            else make_expander(cfg.expander_policy, cfg.dram)
         # continuous micro-batching: opted into by the executor carrying
         # a BatchingConfig + rank_group (the `batched` live executor or
         # a batching-enabled SimExecutor mirror)
@@ -219,6 +228,13 @@ class InstanceRuntime:
         self.batcher: Optional[BatchAggregator] = (
             BatchAggregator(bcfg)
             if bcfg is not None and hasattr(executor, "rank_group")
+            else None)
+        # batched pre-inference (the side path): admitted prefills group
+        # by the 64-token prefill grid and run as ONE jitted prefill
+        self.pre_batcher: Optional[BatchAggregator] = (
+            BatchAggregator(bcfg, key=lambda p:
+                            ("pre", prefill_grid(p.prefix_len)))
+            if bcfg is not None and hasattr(executor, "pre_infer_group")
             else None)
         self.stats = {"pre_infers": 0, "ranks": 0, "hbm_hits": 0,
                       "dram_hits": 0, "fallbacks": 0, "spills": 0,
@@ -358,12 +374,16 @@ class InstanceRuntime:
     def release_slot(self, now: float) -> None:
         self.free_slots += 1
         self._maybe_start(now)
-        if (self.batcher is not None and self.loop is not None
-                and self.free_slots > 0 and not self.queue
-                and self.batcher.pending):
+        if self.loop is None or self.free_slots <= 0 or self.queue:
+            return
+        if self.batcher is not None and self.batcher.pending:
             # work-conserving batching: an idle slot never waits out the
             # flush deadline while ranked work sits in the aggregator
             self.loop.schedule(now, "batch_drain", inst=self)
+        elif self.pre_batcher is not None and self.pre_batcher.pending:
+            # same discipline for the side path (ranked work first:
+            # pre-inference is off the critical path)
+            self.loop.schedule(now, "pre_drain", inst=self)
 
     def pcie_acquire(self, now: float, cb: Callable) -> None:
         if self.pcie_free > 0:
@@ -416,8 +436,13 @@ class RelayRuntime:
         nn = max(cl.n_normal or (self.cfg.trigger.n_instances - ns), 1)
         self.special = [f"special-{i}" for i in range(ns)]
         self.normal = [f"normal-{i}" for i in range(nn)]
+        # two-level fleet: the pools stripe over cl.hosts servers; the
+        # owner map decides the owning host, the per-host ring the
+        # instance.  hosts=1 degenerates to the historical flat router.
+        self.topology = ClusterTopology(
+            stripe_hosts(self.special, self.normal, cl.hosts))
         self.router = make_router(cl.router_policy, self.special, self.normal,
-                                  seed=cl.seed)
+                                  seed=cl.seed, topology=self.topology)
         if executor_factory is not None:
             factory = executor_factory
         else:
@@ -427,20 +452,32 @@ class RelayRuntime:
             factory = (lambda name, batching=batching:
                        get_executor("sim")(cost, batching=batching,
                                            page_tokens=cl.page_tokens))
-        layout = (PageLayout.from_model_config(cost.cfg, cl.page_tokens)
-                  if cl.page_tokens > 0 else None)
+        self._factory = factory
+        self._layout = (PageLayout.from_model_config(cost.cfg,
+                                                     cl.page_tokens)
+                        if cl.page_tokens > 0 else None)
+        # DRAM is server memory: with several hosts, one shared expander
+        # per host.  hosts=1 keeps the historical per-instance tier —
+        # equivalent under affinity (each user is pinned to one
+        # instance) and bit-compatible with single-process traces.
+        self.host_expanders: Dict[str, DRAMExpander] = {}
+        if cl.hosts > 1:
+            for hname in self.topology.hosts:
+                self.host_expanders[hname] = make_expander(
+                    cl.expander_policy, ExpanderConfig(
+                        dram_budget_bytes=cl.dram_budget_bytes,
+                        max_reload_concurrency=cl.pcie_concurrency))
         self.instances: Dict[str, InstanceRuntime] = {}
-        for name in self.special + self.normal:
-            icfg = InstanceConfig(
-                name=name, hbm_cache_bytes=cl.hbm_cache_bytes,
-                special=name.startswith("special"), m_slots=cl.m_slots,
-                pcie_concurrency=cl.pcie_concurrency,
-                expander_policy=cl.expander_policy, page_layout=layout)
-            icfg.dram.dram_budget_bytes = cl.dram_budget_bytes
-            icfg.dram.max_reload_concurrency = cl.pcie_concurrency
-            inst = InstanceRuntime(icfg, factory(name))
-            inst.loop = self
-            self.instances[name] = inst
+        for host in self.topology.hosts.values():
+            for name in host.instances:
+                self.instances[name] = self._make_instance(
+                    name, name.startswith("special"), host.name)
+        self.migration = {"entries": 0, "cross_host": 0, "intra_host": 0,
+                          "ms": 0.0, "dropped": 0}
+        # monotone churn counters: departed names are never reused, so a
+        # join can't silently overwrite a still-live instance
+        self._next_special = ns
+        self._next_normal = nn
         self.events: list = []
         self.records: List[Record] = []
         self._seq = itertools.count()
@@ -511,6 +548,234 @@ class RelayRuntime:
             inst.loop = self
         return inst
 
+    def _make_instance(self, name: str, special: bool,
+                       host: str) -> InstanceRuntime:
+        cl = self.cfg.cluster
+        icfg = InstanceConfig(
+            name=name, hbm_cache_bytes=cl.hbm_cache_bytes,
+            special=special, m_slots=cl.m_slots,
+            pcie_concurrency=cl.pcie_concurrency,
+            expander_policy=cl.expander_policy, page_layout=self._layout)
+        icfg.dram.dram_budget_bytes = cl.dram_budget_bytes
+        icfg.dram.max_reload_concurrency = cl.pcie_concurrency
+        inst = InstanceRuntime(icfg, self._factory(name),
+                               expander=self.host_expanders.get(host))
+        inst.loop = self
+        return inst
+
+    # --- host membership churn (rebalancing, owner handoff) -------------------
+
+    def host_join(self, n_special: int = 1, n_normal: int = 0,
+                  now: Optional[float] = None) -> Host:
+        """Add a server with fresh instances, bump the owner-map epoch,
+        and (under ``rebalance="handoff"``) migrate every entry whose
+        owner changed to its new owner — off the critical path, priced
+        at the cross-host remote-fetch penalty."""
+        now = self.now if now is None else now
+        k = len(self.topology.hosts)
+        while f"host-{k}" in self.topology.hosts:
+            k += 1
+        host = Host(name=f"host-{k}")
+        for _ in range(n_special):
+            name = f"special-{self._next_special}"
+            self._next_special += 1
+            host.special.append(name)
+            self.special.append(name)
+        for _ in range(n_normal):
+            name = f"normal-{self._next_normal}"
+            self._next_normal += 1
+            host.normal.append(name)
+            self.normal.append(name)
+        if self.host_expanders:
+            # per-host DRAM mode: the new server brings its own tier
+            cl = self.cfg.cluster
+            self.host_expanders[host.name] = make_expander(
+                cl.expander_policy, ExpanderConfig(
+                    dram_budget_bytes=cl.dram_budget_bytes,
+                    max_reload_concurrency=cl.pcie_concurrency))
+        self.router.add_host(host)
+        for name in host.instances:
+            self.instances[name] = self._make_instance(
+                name, name in host.special, host.name)
+        if self.cfg.cluster.rebalance == "handoff":
+            self._rebalance(now)
+        return host
+
+    def host_leave(self, name: str, now: Optional[float] = None) -> None:
+        """Remove a server.  Queued/parked work re-routes to the new
+        owners; resident HBM/DRAM entries are HANDED OFF (never
+        silently lost — ``premature_evictions`` stays 0 across churn)
+        unless ``rebalance="none"`` models the naive silent-loss
+        deployment."""
+        now = self.now if now is None else now
+        departing = list(self.topology.hosts[name].instances)
+        dep_expander = self.host_expanders.pop(name, None)
+        self.router.remove_host(name)
+        handoff = self.cfg.cluster.rebalance == "handoff"
+        orphans: List[dict] = []
+        for iname in departing:
+            inst = self.instances.pop(iname)
+            if iname in self.special:
+                self.special.remove(iname)
+            if iname in self.normal:
+                self.normal.remove(iname)
+            while inst.queue:
+                orphans.append(inst.queue.popleft())
+            for uid, jobs in list(inst.user_waiters.items()):
+                for job in jobs:
+                    # parked work keeps its accounting clock: the park
+                    # interval until re-dispatch is still 'pre' time
+                    job["rec"].pre_ms += (now - job.pop("t_park")) * 1e3
+                    orphans.append(job)
+                inst.user_waiters.pop(uid, None)
+            for batcher in (inst.batcher, inst.pre_batcher):
+                if batcher is None:
+                    continue
+                group = batcher.take_oldest()
+                while group is not None:
+                    orphans.append({"kind": "batch" if batcher is
+                                    inst.batcher else "pre_batch",
+                                    "group": group})
+                    group = batcher.take_oldest()
+            if handoff:
+                for uid in list(inst.hbm.entries):
+                    self._handoff_hbm(inst, uid, now)
+                if dep_expander is None:       # per-instance DRAM tiers
+                    for uid in list(inst.expander.entries):
+                        self._handoff_dram(inst.expander, name, uid, now)
+        if handoff and dep_expander is not None:
+            for uid in list(dep_expander.entries):
+                self._handoff_dram(dep_expander, name, uid, now)
+        # re-dispatch orphaned work at its new owner (group members fall
+        # back to plain jobs: their dead-host psi snapshots are gone, so
+        # the new instance re-resolves the cache action from scratch)
+        flat: List[dict] = []
+        for job in orphans:
+            if job["kind"] == "batch":
+                flat.extend(w.payload for w in job["group"])
+            elif job["kind"] == "pre_batch":
+                flat.extend({"kind": "pre", "meta": w.meta}
+                            for w in job["group"])
+            else:
+                flat.append(job)
+        for job in flat:
+            if job["kind"] == "pre":
+                target = self.router.route_key(job["meta"].user_id)
+            else:
+                target = self.router.route(job["req"])
+            inst = self._adopt(self.instances[target])
+            if job["kind"] == "pre":
+                inst.inflight_pre.add(job["meta"].user_id)
+            inst.enqueue(job, now)
+
+    def _handoff_hbm(self, inst: InstanceRuntime, uid: int,
+                     now: float) -> None:
+        """Migrate one HBM entry to the instance that now owns its key.
+        The transfer rides the background network path (remote-fetch
+        penalty when the owner changed hosts, local H2D otherwise) and
+        lands as a scheduled ``handoff_done`` event — a rank arriving
+        inside the migration window falls back (I1: correctness first,
+        speedup lost), it never fetches remotely on the critical path."""
+        target = self.router.route_key(uid)
+        if target == inst.name:
+            return
+        e = inst.hbm.extract(uid)
+        if e is None:
+            return
+        cross = (self.topology.host_of(target)
+                 != self.topology.host_of(inst.name))
+        if e.value is None and e.page_table is None and e.dram_backed:
+            # partially resident paged head: worthless off-instance; the
+            # full DRAM copy migrates separately and covers this user
+            self.migration["dropped"] += 1
+            return
+        ms = self.cost.handoff_ms(e.prefix_len or 1, cross_host=cross)
+        self.migration["entries"] += 1
+        self.migration["cross_host" if cross else "intra_host"] += 1
+        self.migration["ms"] += ms
+        self.schedule(now + ms / 1e3, "handoff_done", target=target,
+                      entry=e, tier="hbm")
+
+    def _handoff_dram(self, expander, from_host: Optional[str], uid: int,
+                      now: float) -> None:
+        """Migrate one DRAM entry to the expander tier of the host that
+        now owns its key."""
+        target = self.router.route_key(uid)
+        tgt_host = self.topology.host_of(target)
+        tgt_exp = self.host_expanders.get(tgt_host)
+        if tgt_exp is None:
+            tgt_exp = self.instances[target].expander
+        if tgt_exp is expander:
+            return
+        d = expander.take(uid)
+        if d is None:
+            return
+        cross = from_host is None or from_host != tgt_host
+        ms = self.cost.handoff_ms(d.prefix_len or 1, cross_host=cross)
+        self.migration["entries"] += 1
+        self.migration["cross_host" if cross else "intra_host"] += 1
+        self.migration["ms"] += ms
+        self.schedule(now + ms / 1e3, "handoff_done", target=target,
+                      entry=d, tier="dram")
+
+    def _rebalance(self, now: float) -> None:
+        """After a membership change: walk every resident entry and hand
+        off the ones whose owner moved.  Rendezvous hashing guarantees
+        only keys won by the joining host (or orphaned by a leave)
+        migrate — nothing else reshuffles."""
+        for inst in list(self.instances.values()):
+            for uid in list(inst.hbm.entries):
+                self._handoff_hbm(inst, uid, now)
+        seen: set = set()
+        for hname, exp in list(self.host_expanders.items()):
+            if id(exp) in seen:
+                continue
+            seen.add(id(exp))
+            for uid in list(exp.entries):
+                self._handoff_dram(exp, hname, uid, now)
+        if not self.host_expanders:
+            for inst in list(self.instances.values()):
+                for uid in list(inst.expander.entries):
+                    if self.router.route_key(uid) != inst.name:
+                        self._handoff_dram(inst.expander, None, uid, now)
+
+    def _on_handoff_done(self, t: float, target: str, entry, tier: str
+                         ) -> None:
+        inst = self.instances.get(target)
+        if inst is None:
+            # the destination churned away mid-flight: re-route once
+            try:
+                uid = entry.user_id
+                retarget = self.router.route_key(uid)
+            except Exception:
+                self.migration["dropped"] += 1
+                return
+            if retarget == target or retarget not in self.instances:
+                self.migration["dropped"] += 1
+                return
+            self.schedule(t, "handoff_done", target=retarget, entry=entry,
+                          tier=tier)
+            return
+        if tier == "dram":
+            if not inst.expander.spill(dataclasses.replace(entry)):
+                self.migration["dropped"] += 1
+            return
+        evicted = inst.hbm.insert(entry.user_id, entry.value, entry.nbytes,
+                                  t, prefix_len=entry.prefix_len)
+        landed = inst.hbm.entries.get(entry.user_id)
+        if landed is not None:
+            # the entry continues its lifecycle: a consumed psi must not
+            # later count as a premature eviction at its new home
+            landed.consumed = entry.consumed
+        else:
+            # the target window rejected the insert (oversized psi or a
+            # zombie-pinched pool): the migration did NOT land
+            self.migration["dropped"] += 1
+        for e in evicted:
+            if e.consumed and inst.expander.spill(e):
+                inst.stats["spills"] += 1
+        self._wake_waiters(t, inst, entry.user_id)
+
     # --- pipeline stage handlers ----------------------------------------------
 
     def _on_arrival(self, t: float, meta: UserMeta, sink=None) -> None:
@@ -526,9 +791,22 @@ class RelayRuntime:
         self.schedule(t_rank, "rank_arrival", meta=meta, rec=rec, sink=sink)
 
     def _on_pre_signal(self, t: float, meta: UserMeta, target: str) -> None:
+        if target not in self.instances:
+            # the bound instance churned away between binding and the
+            # signal landing: rebind to the current owner
+            target = self.router.route_key(meta.user_id)
         inst = self._adopt(self.instances[target])
         inst.inflight_pre.add(meta.user_id)
         inst.enqueue({"kind": "pre", "meta": meta}, t)
+
+    # --- membership-churn events (mid-stream join/leave in simulation) --------
+
+    def _on_host_join(self, t: float, n_special: int = 1,
+                      n_normal: int = 0) -> None:
+        self.host_join(n_special=n_special, n_normal=n_normal, now=t)
+
+    def _on_host_leave(self, t: float, name: str) -> None:
+        self.host_leave(name, now=t)
 
     def _on_rank_arrival(self, t: float, meta: UserMeta, rec: Record,
                          sink=None) -> None:
@@ -546,6 +824,9 @@ class RelayRuntime:
             return
         if job["kind"] == "batch":
             self._start_batch(t, inst, job["group"])
+            return
+        if job["kind"] == "pre_batch":
+            self._start_pre_batch(t, inst, job["group"])
             return
         req: Request = job["req"]
         rec: Record = job["rec"]
@@ -609,11 +890,78 @@ class RelayRuntime:
 
             inst.pcie_acquire(t, start)
             return
+        if inst.pre_batcher is not None:
+            self._batch_pre(t, inst, meta)
+            return
         inst.stats["pre_infers"] += 1
         psi, nbytes, ms = inst.executor.pre_infer(meta)
         inst.busy_ms += ms
         self.schedule(t + ms / 1e3, "pre_done", inst=inst, meta=meta,
                       psi=psi, nbytes=nbytes)
+
+    # --- batched pre-inference (the side path, grouped by prefill grid) -------
+
+    def _batch_pre(self, t: float, inst: InstanceRuntime, meta: UserMeta
+                   ) -> None:
+        """Admitted prefill under batching: park in the pre aggregator
+        (keyed by the 64-token prefill grid) and follow the same
+        work-conserving discipline as the rank path — an uncontended
+        slot launches the group of one immediately, so spaced traces
+        stay bit-identical to the unbatched side path; under contention
+        admitted users share ONE jitted prefill per grid, lifting the
+        admission ceiling the per-user side path imposed."""
+        work = PendingRank(user_id=meta.user_id, psi=None,
+                           prefix_len=meta.prefix_len, meta=meta)
+        group = inst.pre_batcher.add(work, t)
+        if group is None and not inst.queue:
+            group = inst.pre_batcher.take_for(work)
+        if group is not None:
+            self._start_pre_batch(t, inst, group)
+            self._ensure_pre_flush(t, inst)
+        else:
+            inst.release_slot(t)
+            if inst.pre_batcher.depth_for(work) == 1:
+                self.schedule(t + inst.pre_batcher.cfg.max_wait_ms / 1e3,
+                              "pre_flush", inst=inst)
+
+    def _ensure_pre_flush(self, t: float, inst: InstanceRuntime) -> None:
+        if inst.pre_batcher.pending:
+            self.schedule(t + inst.pre_batcher.cfg.max_wait_ms / 1e3,
+                          "pre_flush", inst=inst)
+
+    def _on_pre_flush(self, t: float, inst: InstanceRuntime) -> None:
+        for group in inst.pre_batcher.expired(t):
+            inst.enqueue({"kind": "pre_batch", "group": group}, t)
+        self._ensure_pre_flush(t, inst)
+
+    def _on_pre_drain(self, t: float, inst: InstanceRuntime) -> None:
+        while inst.free_slots > 0 and not inst.queue:
+            group = inst.pre_batcher.take_oldest()
+            if group is None:
+                return
+            inst.enqueue({"kind": "pre_batch", "group": group}, t)
+
+    def _start_pre_batch(self, t: float, inst: InstanceRuntime,
+                         group: List[PendingRank]) -> None:
+        metas = [w.meta for w in group]
+        inst.stats["pre_infers"] += len(metas)
+        outs, ms = inst.executor.pre_infer_group(metas)
+        inst.busy_ms += ms
+        self.schedule(t + ms / 1e3, "pre_group_done", inst=inst,
+                      group=group, outs=outs)
+
+    def _on_pre_group_done(self, t: float, inst: InstanceRuntime,
+                           group: List[PendingRank], outs) -> None:
+        for w, (psi, nbytes) in zip(group, outs):
+            inst.inflight_pre.discard(w.user_id)
+            target = self._misplaced(inst, w.user_id)
+            if target is not None:
+                self._forward_pre(t, inst, w.meta, psi, nbytes, target)
+            else:
+                inst.complete_pre(w.meta, psi, nbytes, t)
+        inst.release_slot(t)
+        for w in group:
+            self._wake_waiters(t, inst, w.user_id)
 
     def _park(self, t: float, inst: InstanceRuntime, uid: int, job: dict
               ) -> None:
@@ -749,11 +1097,45 @@ class RelayRuntime:
 
     # --- completions -------------------------------------------------------------
 
+    def _misplaced(self, inst: InstanceRuntime, uid: int) -> Optional[str]:
+        """After membership churn, an in-flight producer can complete on
+        an instance that no longer owns its user (the pre-infer raced
+        the rebalance).  Returns the owning target when the completion
+        is misplaced; None on the hot path (no churn has ever happened
+        or the placement is still correct)."""
+        if self.cfg.cluster.rebalance != "handoff":
+            return None
+        if self.topology.epoch == 0 and self.instances.get(inst.name) is inst:
+            return None
+        target = self.router.route_key(uid)
+        return None if target == inst.name else target
+
+    def _forward_pre(self, t: float, inst: InstanceRuntime, meta: UserMeta,
+                     psi: Any, nbytes: int, target: str) -> None:
+        """Hand a freshly computed psi to the user's new owner instead
+        of inserting it at the stale producer (prevents double
+        ownership during the rebalance window)."""
+        cross = (self.topology.host_of(target)
+                 != self.topology.host_of(inst.name))
+        ms = self.cost.handoff_ms(meta.prefix_len or 1, cross_host=cross)
+        self.migration["entries"] += 1
+        self.migration["cross_host" if cross else "intra_host"] += 1
+        self.migration["ms"] += ms
+        from .cache import CacheEntry
+        entry = CacheEntry(meta.user_id, psi, int(nbytes), t,
+                           prefix_len=meta.prefix_len)
+        self.schedule(t + ms / 1e3, "handoff_done", target=target,
+                      entry=entry, tier="hbm")
+
     def _on_pre_done(self, t: float, inst: InstanceRuntime, meta: UserMeta,
                      psi: Any, nbytes: int) -> None:
         uid = meta.user_id
         inst.inflight_pre.discard(uid)
-        inst.complete_pre(meta, psi, nbytes, t)
+        target = self._misplaced(inst, uid) if psi is not None else None
+        if target is not None:
+            self._forward_pre(t, inst, meta, psi, nbytes, target)
+        else:
+            inst.complete_pre(meta, psi, nbytes, t)
         inst.release_slot(t)
         self._wake_waiters(t, inst, uid)
 
@@ -763,6 +1145,10 @@ class RelayRuntime:
         inst.inflight_pre.discard(uid)
         inst.pcie_release(t)
         inst.expander.complete_reload(uid, inst.hbm, t)
+        if self._misplaced(inst, uid) is not None:
+            # the reload raced a rebalance: the promoted psi belongs to
+            # the new owner now — hand it off instead of keeping it
+            self._handoff_hbm(inst, uid, t)
         inst.release_slot(t)
         self._wake_waiters(t, inst, uid)
 
@@ -850,6 +1236,13 @@ class RelayRuntime:
     def stats(self) -> Dict[str, Dict]:
         agg = {"trigger": dict(self.trigger.stats),
                "router": dict(self.router.stats),
+               "topology": {
+                   "epoch": self.topology.epoch,
+                   "converged": self.topology.converged(),
+                   "hosts": {n: {"special": list(h.special),
+                                 "normal": list(h.normal)}
+                             for n, h in self.topology.hosts.items()}},
+               "migration": dict(self.migration),
                "slo": self.slo.summary(now=self.now)}
         inst = {}
         for name, i in self.instances.items():

@@ -73,6 +73,17 @@ class RelayGRService:
         return self.runtime.router
 
     @property
+    def topology(self):
+        return self.runtime.topology
+
+    def host_join(self, n_special: int = 1, n_normal: int = 0,
+                  now: Optional[float] = None):
+        return self.runtime.host_join(n_special, n_normal, now=now)
+
+    def host_leave(self, name: str, now: Optional[float] = None) -> None:
+        self.runtime.host_leave(name, now=now)
+
+    @property
     def instances(self) -> Dict:
         return self.runtime.instances
 

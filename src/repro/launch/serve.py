@@ -46,6 +46,9 @@ def main(argv=None):
     ap.add_argument("--page-tokens", type=int, default=0,
                     help=">0 stores psi in a paged HBM pool and ranks "
                          "through the rank_with_pages path")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="stripe the instance pools over N hosts; keyed "
+                         "traffic routes owner-map -> per-host ring")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke and not args.sim)
@@ -55,7 +58,8 @@ def main(argv=None):
         from repro.serving.simulator import run_sim
         store = UserBehaviorStore()
         arr = request_stream(store, args.qps, args.requests / args.qps)
-        s = run_sim(relay_config(trigger=TriggerConfig(n_instances=10)),
+        s = run_sim(relay_config(trigger=TriggerConfig(n_instances=10),
+                                 cluster=ClusterConfig(hosts=args.hosts)),
                     cost, arr)
         print(json.dumps(s, indent=1))
         return s
@@ -77,6 +81,7 @@ def main(argv=None):
                               else 0,
                               batch_wait_ms=args.batch_wait_ms,
                               page_tokens=args.page_tokens,
+                              hosts=args.hosts,
                               hbm_cache_bytes=hbm_bytes))
 
     def report(results):

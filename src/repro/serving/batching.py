@@ -48,6 +48,15 @@ def bucket_of(n: int) -> int:
     return BUCKETS[-1]
 
 
+def prefill_grid(n: int, grid: int = 64) -> int:
+    """The prefill shape grid: prefix lengths round up to ``grid``
+    tokens (the live executor's psi layout).  Batched pre-inference
+    groups by THIS key — members of one group share the padded prefill
+    length, so each member's psi slice is bit-identical to the psi its
+    own per-request prefill would have produced."""
+    return max(grid, (int(n) + grid - 1) // grid * grid)
+
+
 def pad_psi(xp, psi, target_len: int):
     """Right-pad a per-layer (K, V) pytree — shapes (L, B, P, H, D) —
     with zero keys/values up to ``target_len`` along the P axis.
@@ -116,12 +125,19 @@ class BatchingConfig:
 
 
 class BatchAggregator:
-    """Groups compatible pending requests into executable batches."""
+    """Groups compatible pending requests into executable batches.
 
-    def __init__(self, cfg: BatchingConfig = BatchingConfig()):
+    The default compatibility key is the rank-launch shape key
+    (kind, prefix-bucket, incr-len, item-count); pass ``key`` to group
+    by something else (the pre-inference aggregator keys by the
+    prefill grid instead — one jitted prefill per group)."""
+
+    def __init__(self, cfg: BatchingConfig = BatchingConfig(), key=None):
         self.cfg = cfg
         self.queues: Dict[Tuple, List[PendingRank]] = defaultdict(list)
         self.stats = {"batches": 0, "requests": 0, "max_seen_batch": 0}
+        if key is not None:
+            self._key = key
 
     def _key(self, p: PendingRank) -> Tuple:
         return (p.kind, bucket_of(p.prefix_len), p.incr_len, p.n_items)

@@ -82,6 +82,10 @@ class ClusterSim:
         return self.runtime.router
 
     @property
+    def topology(self):
+        return self.runtime.topology
+
+    @property
     def trigger(self):
         return self.runtime.trigger
 

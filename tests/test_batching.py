@@ -158,6 +158,22 @@ def test_batch_axis_padding_is_row_independent(live):
 # ---------------------------------------------------------------------------
 
 
+def test_live_pre_infer_group_matches_per_request(live):
+    """Batched pre-inference (one jitted prefill per prefill-grid
+    group): each member's psi slice and byte size bit-match the psi its
+    own per-request ``pre_infer`` would produce — so downstream rank
+    scores cannot diverge between the batched and per-user side paths."""
+    _, _, _, ex = live
+    metas = [_meta(50 + i, plen) for i, plen in enumerate((100, 128, 65))]
+    outs, ms = ex.pre_infer_group(metas)
+    assert ms > 0 and len(outs) == len(metas)
+    for meta, (psi, nbytes) in zip(metas, outs):
+        want_psi, want_nbytes, _ = ex.pre_infer(meta)
+        assert nbytes == want_nbytes
+        for got, want in zip(psi, want_psi):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_aggregator_key_separates_kinds_and_buckets():
     agg = BatchAggregator(BatchingConfig(max_batch=8, max_wait_ms=5.0))
     cached = PendingRank(1, ("psi",), 100, incr_len=8, n_items=16)

