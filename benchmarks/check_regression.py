@@ -100,6 +100,29 @@ def compare(reference: dict, candidate: dict, *, latency_tol: float,
                      rb["slo_qps"], rm["slo_qps"], "within 10%",
                      abs(rm["slo_qps"] - rb["slo_qps"])
                      <= 0.10 * rb["slo_qps"]))
+
+    # disaggregated-prefill acceptance: carving the side path onto a
+    # dedicated host must not cost rendezvous — hit rates within 2%
+    # absolute of relay_multihost (the shipment lands inside the
+    # retrieval slack at the reference point) — and the committed
+    # slo_qps may not fall more than 10% below relay_multihost (the
+    # freed ranking slots should pay for the NIC hop, not the reverse;
+    # one-sided: being FASTER is success, not drift)
+    if "relay_disagg" in reference and "relay_multihost" in reference:
+        rm = candidate.get("relay_multihost")
+        rd = candidate.get("relay_disagg")
+        if rm and rd:
+            for f in ("hbm_hit", "dram_hit", "miss"):
+                rows.append(("relay_disagg", f"{f} == relay_multihost",
+                             rm[f], rd[f], "± 0.02",
+                             abs(rd[f] - rm[f]) <= 0.02))
+        rm = reference["relay_multihost"]
+        rd = reference["relay_disagg"]
+        rows.append(("relay_disagg",
+                     "slo_qps vs relay_multihost (committed)",
+                     rm["slo_qps"], rd["slo_qps"],
+                     ">= 90% of relay_multihost",
+                     rd["slo_qps"] >= 0.90 * rm["slo_qps"]))
     return rows
 
 

@@ -60,7 +60,7 @@ def _fixed_stream(L, qps, dur, *, refresh=0.0, horizon=6000, seed=0,
 
 def _cfg(mode: str, L: int, cost=None) -> RelayConfig:
     """mode: baseline | relay | relay_dram | relay_batched | relay_paged
-    | relay_multihost
+    | relay_multihost | relay_disagg
 
     ``relay_batched`` is the ``relay`` deployment with continuous
     micro-batching switched on (same trigger/cache -> equal hit rates);
@@ -73,11 +73,24 @@ def _cfg(mode: str, L: int, cost=None) -> RelayConfig:
     (owner-map -> per-host ring routing, per-host DRAM tiers): affinity
     hit rates must stay within 2% of the single-host deployment — the
     two-level rendezvous changes WHERE producer and consumer meet, not
-    whether they do."""
+    whether they do.  ``relay_disagg`` is ``relay_multihost`` with the
+    pre-infer side path disaggregated onto dedicated prefill hosts:
+    psi ships cross-host to its owner over the NIC fabric, so hit
+    rates must stay within 2% of ``relay_multihost`` (the shipment
+    lands inside the retrieval slack at the reference point) while the
+    ranking hosts' slots are freed of prefill compute.  The prefill
+    tier is provisioned with headroom (two hosts x 20 slots: the point
+    of disaggregation is that the side path never contends, so pre
+    groups stay shallow and the NIC hop still beats the retrieval
+    slack at the admission ceiling) and two NIC links, so neither
+    compute nor the fabric caps admission below the colocated
+    600/s pool ceiling (Eq. 3b)."""
     relay = mode != "baseline"
     r2 = 0.8 if relay else 0.2   # 4 active instances either way
     hbm_cache = 4e9
-    batched = mode in ("relay_batched", "relay_paged", "relay_multihost")
+    batched = mode in ("relay_batched", "relay_paged", "relay_multihost",
+                       "relay_disagg")
+    multihost = mode in ("relay_multihost", "relay_disagg")
     return relay_config(
         trigger=TriggerConfig(n_instances=N_INST, r2=r2,
                               kv_p99_len=max(L, 1024),
@@ -89,7 +102,9 @@ def _cfg(mode: str, L: int, cost=None) -> RelayConfig:
             hbm_cache_bytes=hbm_cache,
             max_batch=8 if batched else 0,
             batch_wait_ms=2.0,
-            hosts=2 if mode == "relay_multihost" else 1,
+            hosts=2 if multihost else 1,
+            prefill_hosts=2 if mode == "relay_disagg" else 0,
+            prefill_m_slots=20 if mode == "relay_disagg" else 0,
             page_tokens=64 if mode == "relay_paged" else 0),
     )
 
@@ -443,7 +458,7 @@ def bench_relay_summary(quick: bool = False) -> Dict:
     out: Dict[str, Dict] = {"meta": {
         "L": L, "offered_qps": qps, "slo_ms": SLO_MS, "sim_s": SIM_S}}
     for mode in ("baseline", "relay", "relay_dram", "relay_batched",
-                 "relay_paged", "relay_multihost"):
+                 "relay_paged", "relay_multihost", "relay_disagg"):
         s = _run(mode, L, qps)
         entry = {
             "p50_ms": round(s["p50_ms"], 3),

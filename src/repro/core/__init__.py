@@ -25,7 +25,8 @@ from .policies import (make_expander, make_router, make_trigger,
                        policy_names, register_expander, register_router,
                        register_trigger)
 from .router import AffinityRouter, ConsistentHashRing
-from .topology import ClusterTopology, Host, OwnerMap, stripe_hosts
+from .topology import (ClusterTopology, Host, OwnerMap, make_prefill_hosts,
+                       stripe_hosts)
 from .runtime import (ClusterConfig, InstanceRuntime, PipelineConfig, Record,
                       RelayConfig, RelayRuntime, as_relay_config,
                       relay_config)

@@ -52,6 +52,14 @@ class HardwareModel:
     h2d_bw: float = 2.0e10             # B/s (PCIe/host-link, shared)
     net_bw: float = 1.25e9             # B/s cross-server (10 GbE share)
     net_rtt_ms: float = 2.0            # per remote fetch
+    # Dedicated cross-host psi fabric (100 GbE-class share per host):
+    # the provisioned background channel that rebalance migrations and
+    # disaggregated-prefill psi shipping ride.  Distinct from net_bw —
+    # invariant I1 forbids the *synchronous per-request* fetch over the
+    # congested serving network; planned bulk transfers get the fat
+    # link, and the runtime serializes concurrent transfers on each
+    # host's link (NIC contention) rather than paying latency only.
+    nic_bw: float = 1.25e10            # B/s per-host shipping fabric
     host_feature_ms: float = 2.0       # CPU feature processing per request
     embed_bytes_per_token: int = 1024  # host->device embedding traffic
 
@@ -189,12 +197,34 @@ class GRCostModel:
         return (self.hw.net_rtt_ms
                 + self.kv_bytes(prefix_len) / self.hw.net_bw * 1e3)
 
-    def handoff_ms(self, prefix_len: int, cross_host: bool = True) -> float:
-        """Ownership-handoff transfer of one psi during rebalancing
-        churn — the remote-fetch penalty paid OFF the critical path
-        (background migration), never per-request.  An intra-host move
-        (ring change within one server) only re-crosses the local
-        H2D/DRAM path."""
+    # ---- off-critical-path psi transfers (NIC bandwidth model) -------------
+
+    def link_occupancy_ms(self, nbytes: int) -> float:
+        """Time one transfer *occupies* a host's NIC link: the
+        serialization term of a cross-host move.  The runtime's per-host
+        link model charges this window against the sender's and
+        receiver's links so concurrent shipments and rebalance
+        migrations contend for bandwidth instead of overlapping for
+        free; RTT is propagation and does not occupy the link."""
+        return max(int(nbytes), 0) / self.hw.nic_bw * 1e3
+
+    def psi_transfer_ms(self, prefix_len: int, *,
+                        cross_host: bool = True) -> float:
+        """THE pricing entry point for any psi that leaves its instance
+        off the critical path — rebalance migrations (ownership
+        handoff) and disaggregated-prefill psi shipping both price
+        through here, so the two paths can never drift.  A cross-host
+        move rides the dedicated shipping fabric (``hw.nic_bw`` +
+        RTT); an intra-host move (ring change within one server) only
+        re-crosses the local H2D/DRAM path.  Never charged per-request:
+        invariant I1 still forbids critical-path remote fetches
+        (``remote_fetch_ms``, the congested-network penalty)."""
         if cross_host:
-            return self.remote_fetch_ms(prefix_len)
+            return (self.hw.net_rtt_ms
+                    + self.link_occupancy_ms(self.kv_bytes(prefix_len)))
         return self.dram_load_ms(prefix_len)
+
+    def handoff_ms(self, prefix_len: int, cross_host: bool = True) -> float:
+        """Back-compat alias: rebalance handoffs are priced by the
+        unified ``psi_transfer_ms`` entry point."""
+        return self.psi_transfer_ms(prefix_len, cross_host=cross_host)

@@ -25,6 +25,15 @@ method; ``RelayRuntime`` then parks rank work in a ``BatchAggregator``
 and flushes groups through one model slot each.  ``SimExecutor``
 mirrors the same surface via ``GRCostModel.batched_rank_ms`` so the
 cluster simulator stays trace-comparable with the live engine.
+
+Both executors also serve the *disaggregated-prefill* split
+(``ClusterConfig.prefill_hosts > 0``): a dedicated prefill engine
+drives only the side-path surface — ``pre_infer`` and the batched
+``pre_infer_group`` — while its produced psi is shipped cross-host by
+the runtime; the rank surface of the same executor runs on the owning
+rank instances.  No prefill-specific executor subclass exists on
+purpose: the compute is identical, only the placement (and the NIC
+hop) differs.
 """
 
 from __future__ import annotations

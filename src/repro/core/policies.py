@@ -13,6 +13,10 @@ Built-ins:
   trigger:  ``sequence-aware`` (paper Eqs. 1-3), ``admit-all``
             (unconditional pre-inference — the paper's §2.4 strawman),
             ``never`` (baseline: relay disabled at the admission level).
+            Under disaggregated prefill (``ClusterConfig.prefill_hosts
+            > 0``) ``make_trigger`` installs a shipping-cost estimator
+            so the slack test prices the cross-host psi hop into
+            admission.
   router:   ``affinity`` (consistent hashing on the user key, paper
             §3.3), ``random`` (placement ablation: producer/consumer
             miss each other).
@@ -66,8 +70,19 @@ def _get(registry: Dict[str, Callable], kind: str, name: str) -> Callable:
                        f"registered: {sorted(registry)}") from None
 
 
-def make_trigger(name: str, cfg: TriggerConfig, cost: GRCostModel):
-    return _get(TRIGGER_POLICIES, "trigger", name)(cfg, cost)
+def make_trigger(name: str, cfg: TriggerConfig, cost: GRCostModel,
+                 ship_ms=None):
+    """Build a trigger policy.  ``ship_ms`` (an optional
+    ``UserMeta -> ms`` estimator) is installed as the trigger's
+    ``ship_estimator`` — the disaggregated-prefill runtime passes the
+    cross-host psi shipping cost so the slack test prices the full
+    side-path deadline (compute + shipment), not just the compute: a
+    psi that lands after its rank request is useless, so admission
+    must account for the hop."""
+    trigger = _get(TRIGGER_POLICIES, "trigger", name)(cfg, cost)
+    if ship_ms is not None:
+        trigger.ship_estimator = ship_ms
+    return trigger
 
 
 def make_router(name: str, special: List[str], normal: List[str], *,

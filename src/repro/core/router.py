@@ -20,6 +20,12 @@ the single-process router exactly.
 Requests without the key (normal, short-sequence traffic) fall back to
 standard policies (round-robin / least-connections / user-hash) inside
 the owning host's normal pool.
+
+Disaggregated prefill splits the rendezvous: when the topology carries
+dedicated ``role="prefill"`` hosts, keyed PRE-INFER signals route to a
+prefill engine (``route_pre``) while the eventual ranking request still
+lands on the psi's owning rank host — the runtime ships the produced
+psi cross-host to close the loop.
 """
 
 from __future__ import annotations
@@ -28,7 +34,7 @@ import bisect
 from typing import Dict, List, Optional
 
 from .topology import ClusterTopology, Host, _h, stripe_hosts
-from .types import HASH_KEY, Request
+from .types import HASH_KEY, Request, Stage
 
 
 class ConsistentHashRing:
@@ -94,7 +100,7 @@ class AffinityRouter:
             for name, host in topology.hosts.items()}
         self._rr: Dict[str, int] = {name: 0 for name in topology.hosts}
         self._load: Dict[str, int] = {n: 0 for n in topology.all_normal()}
-        self.stats = {"special": 0, "normal": 0}
+        self.stats = {"special": 0, "normal": 0, "prefill": 0}
 
     # --- single-host compatibility surface -----------------------------------
 
@@ -130,8 +136,25 @@ class AffinityRouter:
             ring = self.rings[name]
         return ring.route(key)
 
+    def route_pre(self, key) -> str:
+        """Pre-infer signal placement.  Disaggregated deployments
+        (topology carries ``role="prefill"`` hosts) rendezvous-hash the
+        key over the dedicated prefill engines — deterministic and
+        balanced, and deliberately NOT the owner ring: the producer
+        computes on a prefill host and SHIPS psi to the owner at
+        completion.  Co-located deployments fall back to the owner
+        instance (producer and consumer share it)."""
+        pool = self.topology.all_prefill()
+        if not pool:
+            return self.route_key(key)
+        return max(pool, key=lambda p: _h(f"pre|{p}|{key}"))
+
     def route(self, request: Request) -> str:
         key = request.header.get(HASH_KEY)
+        if (request.stage == Stage.PRE_INFER and key is not None
+                and self.topology.all_prefill()):
+            self.stats["prefill"] += 1
+            return self.route_pre(key)
         if key is not None:
             self.stats["special"] += 1
             return self.route_key(key)

@@ -24,6 +24,16 @@ if ranking wins the race against its own pre-infer signal, the ranking
 job parks until psi lands in HBM (at most one reload / compute per user
 per burst).
 
+Disaggregated prefill (``ClusterConfig.prefill_hosts > 0``) carves
+dedicated side-path hosts out of the topology: admitted pre-infer
+signals run on a prefill engine and the produced psi is SHIPPED
+cross-host to its owning rank instance over per-host NIC links
+(``GRCostModel.psi_transfer_ms`` — the same unified pricing rebalance
+migrations use, with concurrent transfers contending for link
+bandwidth).  A rank request racing its own shipment is served as a
+miss (never parked on the network); the near-miss is counted in
+``stats()["shipping"]["late_miss"]``.
+
 Latency accounting invariant (tested in tests/test_runtime_parity.py):
 for every completed request,
 
@@ -61,7 +71,8 @@ from .executors import Executor, get_executor
 from .expander import DRAMExpander, ExpanderConfig
 from .paging import PageLayout
 from .policies import make_expander, make_router, make_trigger
-from .topology import ClusterTopology, Host, stripe_hosts
+from .topology import (ClusterTopology, Host, make_prefill_hosts,
+                       stripe_hosts)
 from .trigger import TriggerConfig
 from .types import HitKind, RankResult, Request, UserMeta
 
@@ -94,6 +105,19 @@ class ClusterConfig:
     page_tokens: int = 0                 # >0 -> paged HBM window (pool pages)
     hosts: int = 1                       # servers the pools stripe over
     rebalance: str = "handoff"           # churn policy: handoff | none
+    # >0 -> disaggregated prefill: dedicate N hosts (one pooled prefill
+    # engine each) to the pre-infer side path; produced psi is SHIPPED
+    # cross-host to the owning rank host at insert time
+    prefill_hosts: int = 0
+    # NPU slots per prefill engine (0 -> m_slots).  The prefill tier is
+    # provisioned independently of the rank tier: its engines carry the
+    # WHOLE pool's side-path compute, so Eq. 3a's per-instance
+    # admission rate scales with the engine's true slot count
+    prefill_m_slots: int = 0
+    # None -> serialize cross-host transfers on per-host NIC links iff
+    # prefill_hosts > 0 (True/False force it); False reproduces the
+    # legacy latency-only handoff pricing bit-for-bit
+    nic_serialize: Optional[bool] = None
     relay_enabled: bool = True           # False -> baseline (no side path)
     long_seq_threshold: int = 0          # 0 -> trigger's risk test routes
     trigger_policy: str = "sequence-aware"
@@ -188,6 +212,7 @@ class InstanceConfig:
     pcie_concurrency: int = 4
     expander_policy: str = "dram"
     page_layout: Optional[PageLayout] = None   # paged HBM window geometry
+    role: str = "rank"                  # "rank" | "prefill" (side path only)
 
 
 class InstanceRuntime:
@@ -206,10 +231,14 @@ class InstanceRuntime:
         self.cfg = cfg
         self.name = cfg.name
         self.special = cfg.special
+        self.role = cfg.role
         self.executor = executor
         # a live executor declares the page geometry of ITS model; the
-        # cluster-level layout (from the cost model) covers sim mode
-        layout = getattr(executor, "page_layout", None) or cfg.page_layout
+        # cluster-level layout (from the cost model) covers sim mode.
+        # A prefill engine holds no window at all (psi ships out on
+        # completion), so it skips the paged-pool machinery.
+        layout = (None if cfg.role == "prefill" else
+                  getattr(executor, "page_layout", None) or cfg.page_layout)
         self.hbm = make_hbm_store(int(cfg.hbm_cache_bytes), layout)
         if hasattr(self.hbm, "materialize_on_evict"):
             # no DRAM tier -> evictees are discarded, never spilled:
@@ -428,7 +457,15 @@ class RelayRuntime:
         self.cost = cost
         self.clock: Clock = clock if clock is not None else VirtualClock()
         cl = self.cfg.cluster
-        self.trigger = make_trigger(cl.trigger_policy, self.cfg.trigger, cost)
+        # disaggregated prefill: dedicated side-path hosts + psi shipped
+        # cross-host to the owner — the shipping delay is priced into
+        # the trigger's slack test (a late psi is a useless psi)
+        self.disagg = cl.prefill_hosts > 0
+        self.trigger = make_trigger(
+            cl.trigger_policy, self.cfg.trigger, cost,
+            ship_ms=((lambda m: cost.psi_transfer_ms(m.prefix_len,
+                                                     cross_host=True))
+                     if self.disagg else None))
         # risk test used for rank-stage routing; ablations may decouple
         # it from the admission trigger (e.g. admit-all + true-risk routes)
         self.route_trigger = self.trigger
@@ -439,8 +476,12 @@ class RelayRuntime:
         # two-level fleet: the pools stripe over cl.hosts servers; the
         # owner map decides the owning host, the per-host ring the
         # instance.  hosts=1 degenerates to the historical flat router.
-        self.topology = ClusterTopology(
-            stripe_hosts(self.special, self.normal, cl.hosts))
+        # Prefill hosts join the topology with role="prefill": they run
+        # the side path only and never own keys.
+        fleet = stripe_hosts(self.special, self.normal, cl.hosts)
+        fleet += make_prefill_hosts(cl.prefill_hosts)
+        self.prefill = [p for h in fleet for p in h.prefill]
+        self.topology = ClusterTopology(fleet)
         self.router = make_router(cl.router_policy, self.special, self.normal,
                                   seed=cl.seed, topology=self.topology)
         if executor_factory is not None:
@@ -462,7 +503,9 @@ class RelayRuntime:
         # instance) and bit-compatible with single-process traces.
         self.host_expanders: Dict[str, DRAMExpander] = {}
         if cl.hosts > 1:
-            for hname in self.topology.hosts:
+            for hname, h in self.topology.hosts.items():
+                if h.role == "prefill":
+                    continue      # no psi ever rests on a prefill host
                 self.host_expanders[hname] = make_expander(
                     cl.expander_policy, ExpanderConfig(
                         dram_budget_bytes=cl.dram_budget_bytes,
@@ -471,9 +514,32 @@ class RelayRuntime:
         for host in self.topology.hosts.values():
             for name in host.instances:
                 self.instances[name] = self._make_instance(
-                    name, name.startswith("special"), host.name)
+                    name, name.startswith("special"), host.name,
+                    role=host.role)
         self.migration = {"entries": 0, "cross_host": 0, "intra_host": 0,
                           "ms": 0.0, "dropped": 0}
+        if self.disagg:
+            # Eq. 3a for the dedicated tier: each prefill engine admits
+            # at q_m x ITS slot count (it carries the pool's whole side
+            # path), bounded by the pool-wide cap; survival (Eqs. 1-2)
+            # is still enforced per owner window by the pool bucket
+            rate = self.cfg.trigger.q_m * (cl.prefill_m_slots
+                                           or cl.m_slots)
+            for name in self.prefill:
+                self.trigger.instance_rates[name] = min(
+                    rate, self.trigger.q_max)
+        # cross-host psi shipping (disaggregated prefill) + the per-host
+        # NIC link model both paths share.  nic_serialize=None -> links
+        # contend exactly when the deployment is disaggregated; the
+        # legacy latency-only pricing stays bit-identical otherwise.
+        self.shipping = {"shipped": 0, "landed": 0, "deduped": 0,
+                         "late_miss": 0, "dropped": 0, "forwarded": 0,
+                         "bytes": 0, "ms": 0.0}
+        self._ship_inflight: Dict[int, int] = {}
+        self._ship_raced: set = set()
+        self.nic_serialize = (self.disagg if cl.nic_serialize is None
+                              else bool(cl.nic_serialize))
+        self.nics: Dict[str, Dict[str, float]] = {}
         # monotone churn counters: departed names are never reused, so a
         # join can't silently overwrite a still-live instance
         self._next_special = ns
@@ -548,15 +614,22 @@ class RelayRuntime:
             inst.loop = self
         return inst
 
-    def _make_instance(self, name: str, special: bool,
-                       host: str) -> InstanceRuntime:
+    def _make_instance(self, name: str, special: bool, host: str,
+                       role: str = "rank") -> InstanceRuntime:
         cl = self.cfg.cluster
+        # a prefill engine never stores psi: no paged pool, no DRAM
+        # tier — everything it produces ships to the owner immediately
         icfg = InstanceConfig(
             name=name, hbm_cache_bytes=cl.hbm_cache_bytes,
-            special=special, m_slots=cl.m_slots,
+            special=special,
+            m_slots=((cl.prefill_m_slots or cl.m_slots)
+                     if role == "prefill" else cl.m_slots),
             pcie_concurrency=cl.pcie_concurrency,
-            expander_policy=cl.expander_policy, page_layout=self._layout)
-        icfg.dram.dram_budget_bytes = cl.dram_budget_bytes
+            expander_policy=cl.expander_policy,
+            page_layout=None if role == "prefill" else self._layout,
+            role=role)
+        icfg.dram.dram_budget_bytes = (0.0 if role == "prefill"
+                                       else cl.dram_budget_bytes)
         icfg.dram.max_reload_concurrency = cl.pcie_concurrency
         inst = InstanceRuntime(icfg, self._factory(name),
                                expander=self.host_expanders.get(host))
@@ -609,6 +682,7 @@ class RelayRuntime:
         deployment."""
         now = self.now if now is None else now
         departing = list(self.topology.hosts[name].instances)
+        departing_role = self.topology.hosts[name].role
         dep_expander = self.host_expanders.pop(name, None)
         self.router.remove_host(name)
         handoff = self.cfg.cluster.rebalance == "handoff"
@@ -619,6 +693,8 @@ class RelayRuntime:
                 self.special.remove(iname)
             if iname in self.normal:
                 self.normal.remove(iname)
+            if iname in self.prefill:
+                self.prefill.remove(iname)
             while inst.queue:
                 orphans.append(inst.queue.popleft())
             for uid, jobs in list(inst.user_waiters.items()):
@@ -660,7 +736,14 @@ class RelayRuntime:
                 flat.append(job)
         for job in flat:
             if job["kind"] == "pre":
-                target = self.router.route_key(job["meta"].user_id)
+                # side-path work follows its pool: a departing prefill
+                # engine re-routes to a surviving one (rank owner only
+                # when the prefill pool emptied); rank-host orphans stay
+                # with the new owner, whose handed-off tiers serve them
+                uid = job["meta"].user_id
+                target = (self._pre_target(uid)
+                          if departing_role == "prefill"
+                          else self.router.route_key(uid))
             else:
                 target = self.router.route(job["req"])
             inst = self._adopt(self.instances[target])
@@ -668,14 +751,67 @@ class RelayRuntime:
                 inst.inflight_pre.add(job["meta"].user_id)
             inst.enqueue(job, now)
 
+    # --- per-host NIC links (shipments and migrations contend) ----------------
+
+    def _nic(self, host: Optional[str]) -> Dict[str, float]:
+        """Link state of one host's NIC (lazily created; a departed
+        host's link survives so in-flight drains stay accounted).
+        Full duplex: egress (tx) and ingress (rx) serialize
+        independently, like real NIC queues."""
+        key = host or "<fabric>"
+        nic = self.nics.get(key)
+        if nic is None:
+            nic = {"tx_free": 0.0, "rx_free": 0.0, "transfers": 0,
+                   "bytes": 0, "busy_ms": 0.0, "wait_ms": 0.0}
+            self.nics[key] = nic
+        return nic
+
+    def _link_transfer(self, now: float, src_host: Optional[str],
+                       dst_host: Optional[str], nbytes: int,
+                       prefix_len: int) -> Tuple[float, float]:
+        """One cross-host psi transfer over the shipping fabric.
+        Returns (arrival time, wall ms).  With ``nic_serialize`` the
+        transfer occupies the sender's egress and then the receiver's
+        ingress for its serialization window
+        (``GRCostModel.link_occupancy_ms``) — a cut-through tandem, so
+        concurrent shipments and rebalance migrations CONTEND for
+        per-host link bandwidth; otherwise it degenerates to the
+        legacy latency-only ``psi_transfer_ms`` pricing."""
+        if not self.nic_serialize:
+            ms = self.cost.psi_transfer_ms(prefix_len, cross_host=True)
+            return now + ms / 1e3, ms
+        nbytes = int(nbytes) or self.cost.kv_bytes(prefix_len)
+        occ = self.cost.link_occupancy_ms(nbytes) / 1e3
+        start_tx = now
+        if src_host is not None:
+            tx = self._nic(src_host)
+            start_tx = max(now, tx["tx_free"])
+            tx["tx_free"] = start_tx + occ
+            tx["transfers"] += 1
+            tx["bytes"] += nbytes
+            tx["busy_ms"] += occ * 1e3
+            tx["wait_ms"] += (start_tx - now) * 1e3
+        start_rx = start_tx
+        if dst_host is not None:
+            rx = self._nic(dst_host)
+            start_rx = max(start_tx, rx["rx_free"])
+            rx["rx_free"] = start_rx + occ
+            rx["transfers"] += 1
+            rx["bytes"] += nbytes
+            rx["busy_ms"] += occ * 1e3
+            rx["wait_ms"] += (start_rx - start_tx) * 1e3
+        arrival = start_rx + occ + self.cost.hw.net_rtt_ms / 1e3
+        return arrival, (arrival - now) * 1e3
+
     def _handoff_hbm(self, inst: InstanceRuntime, uid: int,
                      now: float) -> None:
         """Migrate one HBM entry to the instance that now owns its key.
-        The transfer rides the background network path (remote-fetch
-        penalty when the owner changed hosts, local H2D otherwise) and
-        lands as a scheduled ``handoff_done`` event — a rank arriving
-        inside the migration window falls back (I1: correctness first,
-        speedup lost), it never fetches remotely on the critical path."""
+        The transfer rides the background shipping fabric (the unified
+        ``psi_transfer_ms`` pricing + NIC link contention when the
+        owner changed hosts, local H2D otherwise) and lands as a
+        scheduled ``handoff_done`` event — a rank arriving inside the
+        migration window falls back (I1: correctness first, speedup
+        lost), it never fetches remotely on the critical path."""
         target = self.router.route_key(uid)
         if target == inst.name:
             return
@@ -689,12 +825,27 @@ class RelayRuntime:
             # full DRAM copy migrates separately and covers this user
             self.migration["dropped"] += 1
             return
-        ms = self.cost.handoff_ms(e.prefix_len or 1, cross_host=cross)
+        arrival, ms = self._transfer(now, self.topology.host_of(inst.name),
+                                     target, e.nbytes, e.prefix_len or 1,
+                                     cross)
         self.migration["entries"] += 1
         self.migration["cross_host" if cross else "intra_host"] += 1
         self.migration["ms"] += ms
-        self.schedule(now + ms / 1e3, "handoff_done", target=target,
+        self.schedule(arrival, "handoff_done", target=target,
                       entry=e, tier="hbm")
+
+    def _transfer(self, now: float, src_host: Optional[str], target: str,
+                  nbytes: int, prefix_len: int, cross: bool
+                  ) -> Tuple[float, float]:
+        """Price + schedule one background psi move (migration or
+        shipment leg): cross-host moves ride the NIC fabric, intra-host
+        moves re-cross the local H2D path."""
+        if cross:
+            return self._link_transfer(now, src_host,
+                                       self.topology.host_of(target),
+                                       nbytes, prefix_len)
+        ms = self.cost.psi_transfer_ms(prefix_len, cross_host=False)
+        return now + ms / 1e3, ms
 
     def _handoff_dram(self, expander, from_host: Optional[str], uid: int,
                       now: float) -> None:
@@ -711,11 +862,12 @@ class RelayRuntime:
         if d is None:
             return
         cross = from_host is None or from_host != tgt_host
-        ms = self.cost.handoff_ms(d.prefix_len or 1, cross_host=cross)
+        arrival, ms = self._transfer(now, from_host, target, d.nbytes,
+                                     d.prefix_len or 1, cross)
         self.migration["entries"] += 1
         self.migration["cross_host" if cross else "intra_host"] += 1
         self.migration["ms"] += ms
-        self.schedule(now + ms / 1e3, "handoff_done", target=target,
+        self.schedule(arrival, "handoff_done", target=target,
                       entry=d, tier="dram")
 
     def _rebalance(self, now: float) -> None:
@@ -791,13 +943,51 @@ class RelayRuntime:
         self.schedule(t_rank, "rank_arrival", meta=meta, rec=rec, sink=sink)
 
     def _on_pre_signal(self, t: float, meta: UserMeta, target: str) -> None:
+        uid = meta.user_id
+        if self.disagg and target in self.instances \
+                and self.instances[target].role == "prefill":
+            # psi already host-local at the OWNER (resident window or
+            # DRAM copy)?  Then the colocated side path — lifecycle
+            # touch or local reload — handles it without burning
+            # prefill compute or a NIC shipment
+            owner = self.router.route_key(uid)
+            oinst = self.instances.get(owner)
+            if oinst is not None and (
+                    oinst.hbm.resident(uid) is not None
+                    or uid in oinst.expander.entries):
+                target = owner
         if target not in self.instances:
             # the bound instance churned away between binding and the
             # signal landing: rebind to the current owner
-            target = self.router.route_key(meta.user_id)
+            target = self._pre_target(uid)
         inst = self._adopt(self.instances[target])
-        inst.inflight_pre.add(meta.user_id)
+        inst.inflight_pre.add(uid)
+        if inst.role == "prefill":
+            # the owner-side rank path must see the side path as "in
+            # flight over the network", not "in flight locally": a rank
+            # racing the shipment is served as a miss, never parked
+            self._ship_open(uid)
         inst.enqueue({"kind": "pre", "meta": meta}, t)
+
+    def _pre_target(self, uid: int) -> str:
+        """Current side-path placement for a user: a prefill engine in
+        the disaggregated deployment, the owning rank instance
+        otherwise."""
+        if self.disagg:
+            target = self.router.route_pre(uid)
+            if target in self.instances:
+                return target
+        return self.router.route_key(uid)
+
+    def _ship_open(self, uid: int) -> None:
+        self._ship_inflight[uid] = self._ship_inflight.get(uid, 0) + 1
+
+    def _ship_close(self, uid: int) -> None:
+        n = self._ship_inflight.get(uid, 0) - 1
+        if n <= 0:
+            self._ship_inflight.pop(uid, None)
+        else:
+            self._ship_inflight[uid] = n
 
     # --- membership-churn events (mid-stream join/leave in simulation) --------
 
@@ -865,12 +1055,32 @@ class RelayRuntime:
                 inst.expander.finish(uid)
                 self._park(t, inst, uid, job)
             else:
+                if self._ship_inflight.get(uid):
+                    # shipping-vs-deadline race: the psi is still on the
+                    # wire (or in prefill compute) — serve the miss NOW
+                    # rather than stall on an NIC-contended arrival; the
+                    # shipment still lands for future reuse (no
+                    # double-rank: nobody is parked)
+                    self.shipping["late_miss"] += 1
+                    self._ship_raced.add(uid)
                 inst.expander.finish(uid)
                 self._finish_rank(t, inst, job, "miss", None)
 
     def _start_pre(self, t: float, inst: InstanceRuntime, meta: UserMeta
                    ) -> None:
         uid = meta.user_id
+        if inst.role == "prefill":
+            owner = self.instances.get(self.router.route_key(uid))
+            if owner is not None and owner.hbm.resident(uid) is not None:
+                # dedup across the split: psi became resident at the
+                # owner while this signal queued — renew its lifecycle
+                # there, ship nothing (the refresh costs no NIC bytes)
+                inst.inflight_pre.discard(uid)
+                self._ship_close(uid)
+                self.shipping["deduped"] += 1
+                self._adopt(owner).hbm.touch(uid, t)
+                inst.release_slot(t)
+                return
         # dedup: psi already local (HBM or DRAM) -> pseudo step only.
         # Higher DRAM hit rates therefore reduce pre-inference work and
         # NPU utilization (paper Fig. 14b).
@@ -954,11 +1164,22 @@ class RelayRuntime:
                            group: List[PendingRank], outs) -> None:
         for w, (psi, nbytes) in zip(group, outs):
             inst.inflight_pre.discard(w.user_id)
+            if inst.role == "prefill":
+                # batched disaggregated prefill: every member of the
+                # one jitted launch ships to its own owner
+                if psi is not None:
+                    self._ship_psi(t, inst, w.meta, psi, nbytes)
+                else:
+                    self._ship_close(w.user_id)
+                continue
+            if self._ship_inflight.get(w.user_id):
+                self._ship_close(w.user_id)
             target = self._misplaced(inst, w.user_id)
             if target is not None:
                 self._forward_pre(t, inst, w.meta, psi, nbytes, target)
             else:
                 inst.complete_pre(w.meta, psi, nbytes, t)
+                self._settle_raced(inst, w.user_id)
         inst.release_slot(t)
         for w in group:
             self._wake_waiters(t, inst, w.user_id)
@@ -1117,34 +1338,121 @@ class RelayRuntime:
         ownership during the rebalance window)."""
         cross = (self.topology.host_of(target)
                  != self.topology.host_of(inst.name))
-        ms = self.cost.handoff_ms(meta.prefix_len or 1, cross_host=cross)
+        arrival, ms = self._transfer(t, self.topology.host_of(inst.name),
+                                     target, int(nbytes),
+                                     meta.prefix_len or 1, cross)
         self.migration["entries"] += 1
         self.migration["cross_host" if cross else "intra_host"] += 1
         self.migration["ms"] += ms
         from .cache import CacheEntry
         entry = CacheEntry(meta.user_id, psi, int(nbytes), t,
                            prefix_len=meta.prefix_len)
-        self.schedule(t + ms / 1e3, "handoff_done", target=target,
+        self.schedule(arrival, "handoff_done", target=target,
                       entry=entry, tier="hbm")
 
     def _on_pre_done(self, t: float, inst: InstanceRuntime, meta: UserMeta,
                      psi: Any, nbytes: int) -> None:
         uid = meta.user_id
         inst.inflight_pre.discard(uid)
+        if inst.role == "prefill":
+            # disaggregated side path: the engine never keeps psi — it
+            # ships to the owning rank host (the shipment keeps the
+            # user's in-flight marker open until it lands or drops)
+            if psi is not None:
+                self._ship_psi(t, inst, meta, psi, nbytes)
+            else:
+                self._ship_close(uid)
+            inst.release_slot(t)
+            return
+        if self._ship_inflight.get(uid):
+            # churn re-dispatched a disagg pre job onto a rank host:
+            # psi completes locally, nothing is in the network anymore
+            self._ship_close(uid)
         target = self._misplaced(inst, uid) if psi is not None else None
         if target is not None:
             self._forward_pre(t, inst, meta, psi, nbytes, target)
         else:
             inst.complete_pre(meta, psi, nbytes, t)
+            self._settle_raced(inst, uid)
         inst.release_slot(t)
         self._wake_waiters(t, inst, uid)
+
+    # --- cross-host psi shipping (disaggregated prefill) ----------------------
+
+    def _ship_psi(self, t: float, inst: InstanceRuntime, meta: UserMeta,
+                  psi: Any, nbytes: int) -> None:
+        """Relay a freshly prefilled psi from its producing prefill
+        engine to the user's owning rank instance: one cross-host hop
+        on the NIC fabric (contending with concurrent shipments and
+        rebalance migrations), landing as a ``ship_done`` insert."""
+        target = self.router.route_key(meta.user_id)
+        nb = int(nbytes) or self.cost.kv_bytes(meta.prefix_len or 1)
+        arrival, ms = self._link_transfer(
+            t, self.topology.host_of(inst.name),
+            self.topology.host_of(target), nb, meta.prefix_len or 1)
+        self.shipping["shipped"] += 1
+        self.shipping["bytes"] += nb
+        self.shipping["ms"] += ms
+        self.schedule(arrival, "ship_done", target=target, meta=meta,
+                      psi=psi, nbytes=nbytes)
+
+    def _on_ship_done(self, t: float, target: str, meta: UserMeta,
+                      psi: Any, nbytes: int, hops: int = 0) -> None:
+        uid = meta.user_id
+        inst = self.instances.get(target)
+        try:
+            owner = self.router.route_key(uid)
+        except Exception:
+            owner = None
+        if inst is None or (owner is not None and owner != target):
+            # ownership churned while the psi was on the wire: forward
+            # one more fabric hop to the new owner (bounded — continued
+            # churn eventually drops the copy, which is safe: the rank
+            # path falls back, it never double-owns)
+            if hops >= 2 or owner is None or owner not in self.instances:
+                self._ship_close(uid)
+                self._settle_raced(None, uid)
+                self.shipping["dropped"] += 1
+                return
+            nb = int(nbytes) or self.cost.kv_bytes(meta.prefix_len or 1)
+            arrival, ms = self._link_transfer(
+                t, self.topology.host_of(target),
+                self.topology.host_of(owner), nb, meta.prefix_len or 1)
+            self.shipping["forwarded"] += 1
+            self.shipping["ms"] += ms
+            self.schedule(arrival, "ship_done", target=owner, meta=meta,
+                          psi=psi, nbytes=nbytes, hops=hops + 1)
+            return
+        self._ship_close(uid)
+        self.shipping["landed"] += 1
+        inst = self._adopt(inst)
+        inst.complete_pre(meta, psi, nbytes, t)
+        self._settle_raced(inst, uid)
+        self._wake_waiters(t, inst, uid)
+
+    def _settle_raced(self, inst: Optional[InstanceRuntime],
+                      uid: int) -> None:
+        """The rank this psi was produced for already fell back: the
+        lifecycle is over, so a landed copy is consumed-on-arrival — it
+        serves FUTURE requests (and exits the window through the spill
+        path, never as a premature eviction)."""
+        if uid in self._ship_raced and not self._ship_inflight.get(uid):
+            self._ship_raced.discard(uid)
+            if inst is not None:
+                inst.hbm.consume(uid)
 
     def _on_pre_reload_done(self, t: float, inst: InstanceRuntime,
                             meta: UserMeta, ms: float) -> None:
         uid = meta.user_id
         inst.inflight_pre.discard(uid)
+        if self._ship_inflight.get(uid):
+            # churn re-routed a disagg pre job onto its rank owner and
+            # a local DRAM reload satisfied it: nothing is on the wire
+            # anymore, so the shipment marker must close here too
+            self._ship_close(uid)
         inst.pcie_release(t)
         inst.expander.complete_reload(uid, inst.hbm, t)
+        self._settle_raced(inst, uid)
         if self._misplaced(inst, uid) is not None:
             # the reload raced a rebalance: the promoted psi belongs to
             # the new owner now — hand it off instead of keeping it
@@ -1205,7 +1513,7 @@ class RelayRuntime:
         for r in self.records:
             hits[r.hit] += 1
         n = len(self.records)
-        return {
+        out = {
             "n": n,
             "p50_ms": float(np.percentile(e2e, 50)),
             "p99_ms": float(np.percentile(e2e, 99)),
@@ -1225,13 +1533,24 @@ class RelayRuntime:
             "special_util": self._util(self.special, dur),
             "normal_util": self._util(self.normal, dur),
         }
+        if self.prefill:
+            # disaggregated deployments report the side-path hosts too:
+            # the tentpole claim is that prefill compute leaves the
+            # ranking hosts' slots (special_util drops, prefill_util
+            # carries the pre-infer load)
+            out["prefill_util"] = self._util(self.prefill, dur)
+        return out
 
     def _util(self, names, dur) -> float:
         if not names or dur <= 0:
             return 0.0
         busy = sum(self.instances[n].busy_ms for n in names
                    if n in self.instances) / 1e3
-        return busy / (dur * self.cfg.cluster.m_slots * len(names))
+        # per-instance slot counts: the prefill tier may be provisioned
+        # with a different concurrency than the rank tier
+        slots = sum(self.instances[n].cfg.m_slots if n in self.instances
+                    else self.cfg.cluster.m_slots for n in names)
+        return busy / (dur * slots) if slots else 0.0
 
     def stats(self) -> Dict[str, Dict]:
         agg = {"trigger": dict(self.trigger.stats),
@@ -1240,9 +1559,14 @@ class RelayRuntime:
                    "epoch": self.topology.epoch,
                    "converged": self.topology.converged(),
                    "hosts": {n: {"special": list(h.special),
-                                 "normal": list(h.normal)}
+                                 "normal": list(h.normal),
+                                 "prefill": list(h.prefill),
+                                 "role": h.role}
                              for n, h in self.topology.hosts.items()}},
                "migration": dict(self.migration),
+               "shipping": {**self.shipping,
+                            "inflight": sum(self._ship_inflight.values())},
+               "nic": {h: dict(n) for h, n in self.nics.items()},
                "slo": self.slo.summary(now=self.now)}
         inst = {}
         for name, i in self.instances.items():

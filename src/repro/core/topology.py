@@ -6,7 +6,13 @@ so placement is a *topology* concern, not a single in-process hash
 ring.  This module models the fleet as
 
   * ``Host`` — one server: a set of special (cache-holding) and normal
-    ranking instances plus the server-local DRAM tier they share;
+    ranking instances plus the server-local DRAM tier they share.  A
+    host carries a *role*: ``"rank"`` servers hold psi and serve
+    ranking; ``"prefill"`` servers (the disaggregated-prefill
+    deployment, ``ClusterConfig.prefill_hosts > 0``) run only the
+    pre-infer side path and SHIP every psi they produce to the user's
+    owning rank host — they never own keys, so the owner map spans
+    rank hosts only;
   * ``OwnerMap`` — which host *owns* a user key, decided by rendezvous
     (highest-random-weight) hashing over the host set.  Rendezvous
     hashing gives the minimal-disruption property the rebalance
@@ -52,10 +58,13 @@ class Host:
     name: str
     special: List[str] = dataclasses.field(default_factory=list)
     normal: List[str] = dataclasses.field(default_factory=list)
+    # dedicated pre-infer engines (only on role="prefill" hosts)
+    prefill: List[str] = dataclasses.field(default_factory=list)
+    role: str = "rank"                   # "rank" | "prefill"
 
     @property
     def instances(self) -> List[str]:
-        return list(self.special) + list(self.normal)
+        return list(self.special) + list(self.normal) + list(self.prefill)
 
 
 def stripe_hosts(special: List[str], normal: List[str],
@@ -71,6 +80,15 @@ def stripe_hosts(special: List[str], normal: List[str],
     for i, n in enumerate(normal):
         hosts[i % n_hosts].normal.append(n)
     return hosts
+
+
+def make_prefill_hosts(n_hosts: int) -> List[Host]:
+    """Dedicated pre-infer servers for the disaggregated-prefill
+    deployment: one pooled prefill engine per host (its ``m_slots``
+    model the host's NPU concurrency).  They join the topology with
+    ``role="prefill"`` so the owner map never hands them keys."""
+    return [Host(name=f"prefill-host-{k}", role="prefill",
+                 prefill=[f"prefill-{k}"]) for k in range(int(n_hosts))]
 
 
 class OwnerMap:
@@ -116,13 +134,20 @@ class ClusterTopology:
             raise ValueError("topology needs at least one host")
         self.hosts: "OrderedDict[str, Host]" = OrderedDict(
             (h.name, h) for h in hosts)
-        self.owner_map = OwnerMap(self.hosts, epoch=0)
+        if not self._rank_names():
+            raise ValueError("topology needs at least one rank host")
+        self.owner_map = OwnerMap(self._rank_names(), epoch=0)
         self.views: Dict[str, OwnerMap] = {
             name: self.owner_map.copy() for name in self.hosts}
         self._instance_host: Dict[str, str] = {}
         for h in hosts:
             for inst in h.instances:
                 self._instance_host[inst] = h.name
+
+    def _rank_names(self) -> List[str]:
+        """Key-owning membership: prefill hosts run the side path only —
+        they never own a user's cache lifecycle."""
+        return [n for n, h in self.hosts.items() if h.role != "prefill"]
 
     # --- lookups ------------------------------------------------------------
 
@@ -153,6 +178,9 @@ class ClusterTopology:
     def all_normal(self) -> List[str]:
         return [n for h in self.hosts.values() for n in h.normal]
 
+    def all_prefill(self) -> List[str]:
+        return [p for h in self.hosts.values() for p in h.prefill]
+
     # --- membership ---------------------------------------------------------
 
     def join(self, host: Host) -> None:
@@ -164,7 +192,7 @@ class ClusterTopology:
         self.hosts[host.name] = host
         for inst in host.instances:
             self._instance_host[inst] = host.name
-        self.owner_map = OwnerMap(self.hosts, epoch=self.epoch + 1)
+        self.owner_map = OwnerMap(self._rank_names(), epoch=self.epoch + 1)
         self.views[host.name] = self.owner_map.copy()
 
     def leave(self, name: str) -> Host:
@@ -174,11 +202,13 @@ class ClusterTopology:
             raise KeyError(f"host {name!r} not in topology")
         if len(self.hosts) == 1:
             raise ValueError("cannot remove the last host")
+        if self.hosts[name].role != "prefill" and len(self._rank_names()) == 1:
+            raise ValueError("cannot remove the last rank host")
         host = self.hosts.pop(name)
         for inst in host.instances:
             self._instance_host.pop(inst, None)
         self.views.pop(name, None)
-        self.owner_map = OwnerMap(self.hosts, epoch=self.epoch + 1)
+        self.owner_map = OwnerMap(self._rank_names(), epoch=self.epoch + 1)
         seed = sorted(self.hosts)[0]
         self.views[seed] = self.owner_map.copy()
         return host

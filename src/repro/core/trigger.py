@@ -40,6 +40,10 @@ class TriggerConfig:
     # beyond-paper (EXPERIMENTS.md §Perf): only admit when pre-inference
     # is estimated to finish inside the retrieval+preprocess slack, so
     # ranking never parks on its own pre-infer signal. 0 disables.
+    # Under disaggregated prefill the runtime installs a shipping-cost
+    # estimator (``SequenceAwareTrigger.ship_estimator``) and the slack
+    # test prices the cross-host psi shipment too — a psi that arrives
+    # after its rank request is useless, so it must not be admitted.
     slack_budget_ms: float = 0.0
 
     @property
@@ -84,7 +88,18 @@ class SequenceAwareTrigger:
         self.q_admit = min(rate_survive, rate_compute)
         self.q_max = rate_compute * cfg.n_special                 # Eq. 3b
         self._instance_buckets: Dict[str, TokenBucket] = {}
+        # per-instance admission-rate overrides (Eq. 3a with the
+        # instance's TRUE compute): a dedicated prefill engine serves
+        # the whole pool's side path, so its rate is q_m x its own
+        # slot count, not the rank-instance default — the runtime
+        # fills this for the prefill tier
+        self.instance_rates: Dict[str, float] = {}
         self._pool_bucket = TokenBucket(self.q_max)
+        # disaggregated prefill: the runtime installs an estimate of the
+        # cross-host psi shipping delay (ms as a function of UserMeta);
+        # the slack test then admits only when pre-infer AND the
+        # shipment both fit the retrieval/preprocess window.
+        self.ship_estimator = None
         self.stats = {"assessed": 0, "at_risk": 0, "admitted": 0,
                       "rate_limited": 0, "slack_rejected": 0}
 
@@ -109,13 +124,18 @@ class SequenceAwareTrigger:
             return Decision(False, False, d.est_full_ms, "safe")
         if self.cfg.slack_budget_ms:
             pre_est = self.cost.pre_infer_ms(meta.prefix_len)
+            if self.ship_estimator is not None:
+                # psi must land at the OWNER before ranking arrives:
+                # the shipping hop is on the relay's deadline path
+                pre_est += self.ship_estimator(meta)
             if pre_est > self.cfg.slack_budget_ms:
                 self.stats["slack_rejected"] += 1
                 return Decision(False, True, d.est_full_ms,
                                 "insufficient-slack")
         bucket = self._instance_buckets.get(instance)
         if bucket is None:
-            bucket = TokenBucket(self.q_admit)
+            bucket = TokenBucket(self.instance_rates.get(instance,
+                                                         self.q_admit))
             self._instance_buckets[instance] = bucket
         if not self._pool_bucket.try_take(now):
             self.stats["rate_limited"] += 1

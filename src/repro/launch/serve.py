@@ -49,6 +49,10 @@ def main(argv=None):
     ap.add_argument("--hosts", type=int, default=1,
                     help="stripe the instance pools over N hosts; keyed "
                          "traffic routes owner-map -> per-host ring")
+    ap.add_argument("--prefill-hosts", type=int, default=0,
+                    help=">0 disaggregates the pre-infer side path onto "
+                         "dedicated hosts; psi ships cross-host to its "
+                         "owning rank instance over the NIC fabric")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke and not args.sim)
@@ -58,9 +62,11 @@ def main(argv=None):
         from repro.serving.simulator import run_sim
         store = UserBehaviorStore()
         arr = request_stream(store, args.qps, args.requests / args.qps)
-        s = run_sim(relay_config(trigger=TriggerConfig(n_instances=10),
-                                 cluster=ClusterConfig(hosts=args.hosts)),
-                    cost, arr)
+        s = run_sim(relay_config(
+            trigger=TriggerConfig(n_instances=10),
+            cluster=ClusterConfig(hosts=args.hosts,
+                                  prefill_hosts=args.prefill_hosts)),
+            cost, arr)
         print(json.dumps(s, indent=1))
         return s
 
@@ -82,6 +88,7 @@ def main(argv=None):
                               batch_wait_ms=args.batch_wait_ms,
                               page_tokens=args.page_tokens,
                               hosts=args.hosts,
+                              prefill_hosts=args.prefill_hosts,
                               hbm_cache_bytes=hbm_bytes))
 
     def report(results):
@@ -146,6 +153,8 @@ def main(argv=None):
         results.append(svc.submit(meta, now=t))
     hits = report(results)
     print(json.dumps(svc.stats()["trigger"], indent=1))
+    if args.prefill_hosts:
+        print(json.dumps({"shipping": svc.stats()["shipping"]}, indent=1))
     return hits
 
 

@@ -1,0 +1,314 @@
+"""Disaggregated prefill: dedicated side-path hosts + cross-host psi
+shipping over contended NIC links.
+
+Covers the PR's tentpole semantics end to end:
+
+  * role topology — prefill hosts never own keys; pre-infer signals
+    route to the prefill pool while ranking lands on the owner;
+  * the shipping lifecycle — prefill compute -> NIC hop -> insert at
+    the owning rank instance -> HBM hit, with the trigger pricing the
+    hop into its slack test;
+  * the shipping-vs-deadline race — a psi landing after its rank
+    request is served as a MISS (no stall, no double-rank) and the
+    near-miss is counted in ``stats()["shipping"]``;
+  * NIC bandwidth accounting — concurrent shipments and rebalance
+    migrations serialize on per-host links instead of overlapping for
+    free (PR 4's "handoff bandwidth" follow-up).
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import (ClusterConfig, GRCostModel, HitKind, TriggerConfig,
+                        UserMeta, relay_config)
+from repro.core.costmodel import HardwareModel
+from repro.core.router import AffinityRouter
+from repro.core.topology import ClusterTopology, Host, make_prefill_hosts, \
+    stripe_hosts
+from repro.core.types import Request, Stage
+from repro.models import get_config
+from repro.serving.simulator import ClusterSim
+
+COST = GRCostModel(get_config("hstu_gr"))
+
+
+def _cfg(prefill_hosts=1, hosts=2, **cluster):
+    return relay_config(
+        trigger=TriggerConfig(n_instances=5, r2=0.4, kv_p99_len=4096),
+        cluster=ClusterConfig(hbm_cache_bytes=1.5e8,
+                              dram_budget_bytes=500e9, hosts=hosts,
+                              prefill_hosts=prefill_hosts, **cluster))
+
+
+# ---------------------------------------------------------------------------
+# role topology + routing
+# ---------------------------------------------------------------------------
+
+
+def test_owner_map_never_owns_prefill_hosts():
+    topo = ClusterTopology(stripe_hosts([f"special-{i}" for i in range(4)],
+                                        ["normal-0"], 2)
+                           + make_prefill_hosts(2))
+    assert topo.all_prefill() == ["prefill-0", "prefill-1"]
+    for key in range(500):
+        assert topo.owner(key).role != "prefill"
+    # a prefill host leave never disturbs the owner map's membership
+    before = [topo.owner_map.owner(k) for k in range(100)]
+    topo.leave("prefill-host-1")
+    assert [topo.owner_map.owner(k) for k in range(100)] == before
+
+
+def test_cannot_remove_last_rank_host():
+    topo = ClusterTopology(stripe_hosts(["special-0"], ["normal-0"], 1)
+                           + make_prefill_hosts(1))
+    with pytest.raises(ValueError, match="last rank host"):
+        topo.leave("host-0")
+
+
+def test_pre_signals_route_to_prefill_pool_ranks_to_owner():
+    topo = ClusterTopology(stripe_hosts([f"special-{i}" for i in range(4)],
+                                        ["normal-0"], 2)
+                           + make_prefill_hosts(2))
+    router = AffinityRouter([f"special-{i}" for i in range(4)],
+                            ["normal-0"], topology=topo)
+    for uid in range(50):
+        meta = UserMeta(user_id=uid, prefix_len=4096)
+        pre = router.route(Request.pre_infer(0, meta))
+        rank = router.route(Request.rank(1, meta, long_sequence=True))
+        assert pre.startswith("prefill-"), pre
+        assert rank.startswith("special-"), rank
+        assert router.route_pre(uid) == pre     # deterministic
+        assert router.route_key(uid) == rank
+    assert router.stats["prefill"] == 50
+
+
+def test_prefill_engines_run_side_path_only():
+    sim = ClusterSim(_cfg(), COST)
+    arr = [(0.5 * (i + 1), UserMeta(user_id=10 ** 6 + i, prefix_len=2048))
+           for i in range(12)]
+    s = sim.run(arr)
+    pre_insts = {n: i for n, i in sim.runtime.instances.items()
+                 if i.role == "prefill"}
+    assert pre_insts and all(i.stats["ranks"] == 0
+                             for i in pre_insts.values())
+    assert sum(i.stats["pre_infers"] for i in pre_insts.values()) == 12
+    # ...and the ranking specials ran NO prefill compute: the split
+    # frees their slots (the tentpole's capacity argument)
+    assert all(i.stats["pre_infers"] == 0
+               for n, i in sim.runtime.instances.items()
+               if i.role != "prefill")
+    assert s["hbm_hit"] == 1.0      # every shipment landed before rank
+    assert s["prefill_util"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# the shipping lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_shipment_lands_before_rank_and_hits():
+    """L=2048: signal (3 ms) + prefill (~25 ms) + NIC hop (~4.7 ms)
+    beat the 65 ms retrieval/preprocess slack — the rank request walks
+    into an HBM hit with a ZERO pre component (it never parked)."""
+    sim = ClusterSim(_cfg(), COST)
+    sim.run([(0.0, UserMeta(user_id=7, prefix_len=2048))])
+    (rec,) = sim.records
+    assert rec.hit == HitKind.HBM_HIT.value
+    assert rec.pre_ms == 0.0
+    ship = sim.runtime.stats()["shipping"]
+    assert ship["shipped"] == ship["landed"] == 1
+    assert ship["late_miss"] == 0 and ship["inflight"] == 0
+    assert ship["bytes"] == COST.kv_bytes(2048)
+
+
+def test_shipping_race_served_as_miss_no_stall_no_double_rank():
+    """The regression case: at L=4096 the prefill (~82 ms) outlives the
+    65 ms slack, so the shipment is still in flight when ranking
+    arrives.  Colocated deployments PARK (pre > 0, HBM hit); the
+    disaggregated runtime must instead serve the miss immediately —
+    no stall on an NIC-contended arrival, exactly one rank — and count
+    the near-miss in stats()["shipping"].  The landed psi then serves
+    the user's NEXT request as a plain HBM hit."""
+    meta = UserMeta(user_id=99, prefix_len=4096)
+
+    colocated = ClusterSim(_cfg(prefill_hosts=0), COST)
+    colocated.run([(0.0, meta)])
+    assert colocated.records[0].hit == HitKind.HBM_HIT.value
+    assert colocated.records[0].pre_ms > 0.0          # parked on its psi
+
+    sim = ClusterSim(_cfg(), COST)
+    sim.run([(0.0, meta), (1.0, meta)])
+    first, second = sim.records
+    assert first.hit == HitKind.MISS_FALLBACK.value
+    assert first.pre_ms == 0.0, "the miss must not stall on the wire"
+    # no stall: rank-stage wall time is exactly the fallback compute
+    assert first.rank_ms == pytest.approx(
+        COST.full_rank_ms(4096, meta.incr_len, meta.n_items))
+    # no double-rank: one rank per request, nobody was parked
+    assert sum(i.stats["ranks"] for i in sim.runtime.instances.values()) \
+        == 2
+    ship = sim.runtime.stats()["shipping"]
+    assert ship["late_miss"] == 1
+    assert ship["shipped"] == ship["landed"] == 1
+    # the late psi still landed (consumed-on-arrival) and serves the
+    # next request
+    assert second.hit == HitKind.HBM_HIT.value
+    assert sum(i.hbm.stats["premature_evictions"]
+               for i in sim.runtime.instances.values()) == 0
+
+
+def test_trigger_prices_shipping_delay_into_admission():
+    """A psi that would arrive after its rank request is useless — with
+    a slack budget set, the disaggregated trigger must reject what the
+    colocated trigger admits, because the NIC hop eats the window."""
+    slow_nic = GRCostModel(get_config("hstu_gr"),
+                           hw=HardwareModel(nic_bw=1e7))   # hop ~3.4 s
+    meta = UserMeta(user_id=5, prefix_len=2048)
+    tcfg = TriggerConfig(n_instances=5, r2=0.4, kv_p99_len=4096,
+                         slack_budget_ms=40.0)
+
+    colocated = ClusterSim(relay_config(
+        trigger=tcfg, cluster=ClusterConfig(hbm_cache_bytes=1.5e8)),
+        slow_nic)
+    colocated.run([(0.0, meta)])
+    assert colocated.trigger.stats["admitted"] == 1
+
+    disagg = ClusterSim(relay_config(
+        trigger=tcfg, cluster=ClusterConfig(hbm_cache_bytes=1.5e8,
+                                            hosts=2, prefill_hosts=1)),
+        slow_nic)
+    disagg.run([(0.0, meta)])
+    assert disagg.trigger.stats["admitted"] == 0
+    assert disagg.trigger.stats["slack_rejected"] == 1
+    assert disagg.runtime.stats()["shipping"]["shipped"] == 0
+
+
+def test_batched_prefill_groups_and_ships_per_member():
+    """Contended prefill engines group admitted users by the prefill
+    grid (one jitted launch) and every member ships to its OWN owner."""
+    cfg = _cfg(max_batch=4, batch_wait_ms=2.0, m_slots=1)
+    cfg = dataclasses.replace(
+        cfg, trigger=dataclasses.replace(cfg.trigger, m_slots=1))
+    sim = ClusterSim(cfg, COST)
+    arr = [(1e-4 * i, UserMeta(user_id=10 ** 5 + i, prefix_len=2048))
+           for i in range(6)]
+    sim.run(arr)
+    batched = [i for i in sim.runtime.instances.values()
+               if i.role == "prefill" and i.pre_batcher is not None
+               and i.pre_batcher.stats["requests"]]
+    assert batched, "no prefill work reached the pre aggregator"
+    assert max(i.pre_batcher.stats["max_seen_batch"] for i in batched) > 1
+    ship = sim.runtime.stats()["shipping"]
+    assert ship["shipped"] == ship["landed"] == 6
+    assert ship["inflight"] == 0
+
+
+def test_reload_completion_closes_stale_shipment_marker():
+    """Churn can strand a disagg pre job on its rank owner with the
+    shipment marker still open (the prefill pool emptied mid-flight);
+    if a local DRAM reload then satisfies it, the marker must close —
+    otherwise every later miss for the user is miscounted as a
+    late-miss race and ``shipping["inflight"]`` never drains."""
+    from repro.core import CacheEntry
+    sim = ClusterSim(_cfg(), COST)
+    rt = sim.runtime
+    uid = 33
+    owner = rt.router.route_key(uid)
+    inst = rt.instances[owner]
+    inst.expander.spill(CacheEntry(uid, "psi", COST.kv_bytes(4096), 0.0,
+                                   consumed=True, prefix_len=4096))
+    rt._ship_open(uid)      # orphaned marker from the departed engine
+    inst.inflight_pre.add(uid)
+    inst.enqueue({"kind": "pre",
+                  "meta": UserMeta(user_id=uid, prefix_len=4096)}, 0.0)
+    rt.drain()
+    assert rt.stats()["shipping"]["inflight"] == 0
+    assert inst.hbm.resident(uid) is not None
+
+
+def test_prefill_tier_provisioned_independently():
+    """`prefill_m_slots` sizes the dedicated engines (and Eq. 3a's
+    per-engine admission rate) independently of the rank tier: a
+    prefill engine serving the whole pool's side path must not inherit
+    the rank instance's rate cap."""
+    sim = ClusterSim(_cfg(prefill_m_slots=20), COST)
+    rt = sim.runtime
+    (name,) = rt.prefill
+    inst = rt.instances[name]
+    assert inst.cfg.m_slots == 20
+    assert all(rt.instances[s].cfg.m_slots == 5 for s in rt.special)
+    # Eq. 3a with the engine's true slot count, bounded by the pool cap
+    q_m = sim.cfg.trigger.q_m
+    assert rt.trigger.instance_rates[name] == pytest.approx(
+        min(q_m * 20, rt.trigger.q_max))
+    # the default tier inherits the rank slot count
+    plain = ClusterSim(_cfg(), COST).runtime
+    (pname,) = plain.prefill
+    assert plain.instances[pname].cfg.m_slots == 5
+    assert plain.trigger.instance_rates[pname] == pytest.approx(
+        min(q_m * 5, plain.trigger.q_max))
+
+
+# ---------------------------------------------------------------------------
+# NIC bandwidth accounting
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_transfers_contend_for_link_bandwidth():
+    """Two transfers leaving the same host at the same instant must
+    serialize on its link; transfers between disjoint host pairs stay
+    independent.  With serialization off, the legacy latency-only
+    pricing is reproduced exactly."""
+    rt = ClusterSim(_cfg(), COST).runtime
+    assert rt.nic_serialize
+    nb = COST.kv_bytes(2048)
+    a1, _ = rt._link_transfer(0.0, "src", "dst1", nb, 2048)
+    a2, _ = rt._link_transfer(0.0, "src", "dst2", nb, 2048)
+    a3, _ = rt._link_transfer(0.0, "other", "dst3", nb, 2048)
+    occ_s = COST.link_occupancy_ms(nb) / 1e3
+    assert a2 == pytest.approx(a1 + occ_s), "no serialization on src"
+    assert a3 == pytest.approx(a1), "disjoint pairs must not contend"
+    assert rt.nics["src"]["wait_ms"] > 0.0
+    assert rt.nics["src"]["transfers"] == 2
+
+    legacy = ClusterSim(_cfg(nic_serialize=False), COST).runtime
+    b1, ms1 = legacy._link_transfer(0.0, "src", "dst1", nb, 2048)
+    b2, ms2 = legacy._link_transfer(0.0, "src", "dst2", nb, 2048)
+    assert b1 == b2 and ms1 == ms2 == COST.psi_transfer_ms(2048)
+    assert legacy.nics == {}
+
+
+def test_migrations_and_shipments_share_the_unified_pricing():
+    """The dedup satellite: rebalance handoffs and psi shipping price
+    through ONE GRCostModel entry point, so the two paths cannot
+    drift.  ``handoff_ms`` is now an alias of ``psi_transfer_ms``."""
+    for L in (512, 2048, 4096):
+        assert COST.handoff_ms(L, cross_host=True) \
+            == COST.psi_transfer_ms(L, cross_host=True)
+        assert COST.handoff_ms(L, cross_host=False) \
+            == COST.psi_transfer_ms(L, cross_host=False) \
+            == COST.dram_load_ms(L)
+        assert COST.psi_transfer_ms(L, cross_host=True) == pytest.approx(
+            COST.hw.net_rtt_ms
+            + COST.link_occupancy_ms(COST.kv_bytes(L)))
+
+
+def test_rebalance_migrations_occupy_the_nic():
+    """PR 4's follow-up closed: under churn WITH the NIC model on,
+    handoff transfers appear on the per-host links (they no longer
+    overlap for free)."""
+    sim = ClusterSim(_cfg(nic_serialize=True), COST)
+    arr = [(0.05 * (i + 1), UserMeta(user_id=2000 + i, prefix_len=2048))
+           for i in range(16)]
+    sim.runtime.schedule(0.41, "host_leave", name="host-1")
+    sim.run(arr)
+    rt = sim.runtime
+    assert rt.migration["entries"] > 0, "churn found nothing to migrate"
+    moved = sum(n["transfers"] for n in rt.nics.values())
+    # every cross-host migration and every shipment hits two links
+    assert moved >= rt.migration["cross_host"] + \
+        rt.stats()["shipping"]["shipped"]
+    ship = rt.stats()["shipping"]
+    assert ship["shipped"] == ship["landed"] + ship["dropped"]
+    assert ship["inflight"] == 0

@@ -229,6 +229,79 @@ def test_batched_matches_unbatched_trace_when_uncontended():
 
 
 # ---------------------------------------------------------------------------
+# the parity contract under disaggregated prefill
+# ---------------------------------------------------------------------------
+
+
+def _disagg_cfg(prefill_hosts: int, hosts: int = 2) -> RelayConfig:
+    return dataclasses.replace(
+        PARITY_CFG,
+        cluster=dataclasses.replace(PARITY_CFG.cluster, hosts=hosts,
+                                    prefill_hosts=prefill_hosts))
+
+
+@pytest.mark.parametrize("prefill_hosts", [1, 2])
+def test_disagg_live_and_sim_traces_identical(prefill_hosts):
+    """Disaggregated prefill is one more deployment shape of the SAME
+    state machine: for the spaced parity stream, live (per-request
+    drain) and sim (global drain) must agree on every hit kind and
+    every latency component — including the psi shipments riding the
+    NIC fabric between the drains."""
+    cfg = _disagg_cfg(prefill_hosts)
+    svc = RelayGRService(cfg, COST)
+    live_results = [svc.submit(meta, now=t) for t, meta in _arrivals()]
+
+    sim = ClusterSim(cfg, COST)
+    sim.run(iter(_arrivals()))
+
+    live_recs, sim_recs = svc.runtime.records, sim.runtime.records
+    assert len(live_recs) == len(sim_recs) == len(live_results)
+    for a, b, r in zip(live_recs, sim_recs, live_results):
+        assert a.user_id == b.user_id
+        assert a.hit == b.hit == r.hit.value
+        for f in ("pre_ms", "load_ms", "rank_ms", "queue_ms"):
+            assert getattr(a, f) == pytest.approx(getattr(b, f), abs=1e-9), \
+                f"component {f} diverged for user {a.user_id}"
+        assert r.latency_ms == pytest.approx(
+            sum(r.components.values()), abs=1e-9)
+        assert a.e2e_ms == pytest.approx(b.e2e_ms, abs=1e-9)
+    # both modes actually exercised the split: psi shipped cross-host,
+    # and their shipping ledgers agree entry for entry
+    for rt in (svc.runtime, sim.runtime):
+        ship = rt.stats()["shipping"]
+        assert ship["shipped"] > 0 and ship["inflight"] == 0
+    assert svc.runtime.stats()["shipping"] == sim.runtime.stats()["shipping"]
+
+
+def test_prefill_hosts_zero_is_bit_identical():
+    """The regression case from the acceptance criteria: with
+    prefill_hosts=0 the new code paths must not perturb a single trace
+    — hit kinds, components and wall times equal the plain PARITY_CFG
+    deployment bit for bit, and the shipping/NIC machinery stays
+    silent."""
+    plain = ClusterSim(PARITY_CFG, COST)
+    plain.run(iter(_arrivals()))
+    explicit = ClusterSim(
+        dataclasses.replace(
+            PARITY_CFG,
+            cluster=dataclasses.replace(PARITY_CFG.cluster,
+                                        prefill_hosts=0,
+                                        nic_serialize=None)),
+        COST)
+    explicit.run(iter(_arrivals()))
+    assert len(plain.records) == len(explicit.records)
+    for a, b in zip(plain.records, explicit.records):
+        assert (a.user_id, a.hit) == (b.user_id, b.hit)
+        for f in ("pre_ms", "load_ms", "rank_ms", "queue_ms"):
+            assert getattr(a, f) == getattr(b, f)
+        assert a.e2e_ms == b.e2e_ms
+        assert a.t_done == b.t_done
+    ship = explicit.runtime.stats()["shipping"]
+    assert all(v == 0 for v in ship.values())
+    assert explicit.runtime.nics == {}
+
+
+# ---------------------------------------------------------------------------
 # RelayConfig + deprecation shims
 # ---------------------------------------------------------------------------
 
