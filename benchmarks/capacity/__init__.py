@@ -1,0 +1,29 @@
+"""Capacity harness: trace-realistic workload matrix, knee-finding, and
+committed latency–throughput curves.
+
+The measurement substrate the ROADMAP's open items prove themselves on:
+a declarative matrix runner over {offered QPS × sequence length ×
+hosts/prefill-hosts × user-popularity skew × arrival process} producing
+per-cell latency distributions, per-cell SLO knees (geometric-expansion
+search — no hard QPS cap), and ``BENCH_capacity.json`` + CSV curves
+committed next to ``BENCH_relay.json``.
+
+    PYTHONPATH=src python -m benchmarks.capacity [--quick]
+
+See ``benchmarks/capacity/README.md`` for the matrix schema.
+"""
+
+from .knee import HARD_CAP_QPS, KneeResult, find_knee
+from .matrix import (ALL_MODES, COST, HSTU, N_INST, SIM_S, SLO_MS,
+                     MatrixSpec, cell_name, meets_slo, mode_config,
+                     run_cell, run_matrix, run_point)
+from .report import PROVENANCE_FIELDS, curves_csv, headline, render, write
+from .workload import DEFAULT_POPULATION, WorkloadSpec, fixed_stream
+
+__all__ = [
+    "ALL_MODES", "COST", "DEFAULT_POPULATION", "HARD_CAP_QPS", "HSTU",
+    "KneeResult", "MatrixSpec", "N_INST", "PROVENANCE_FIELDS", "SIM_S",
+    "SLO_MS", "WorkloadSpec", "cell_name", "curves_csv", "find_knee",
+    "fixed_stream", "headline", "meets_slo", "mode_config", "render",
+    "run_cell", "run_matrix", "run_point", "write",
+]

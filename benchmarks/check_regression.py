@@ -24,6 +24,20 @@ Replaces the old sanity-only ``slo_qps >= 0.8 * relay`` check: every
 mode is now gated against its own committed trajectory, so a perf
 regression in any deployment flavour fails CI instead of rotting
 silently in an artifact.
+
+Capacity gating (``--capacity-candidate``): a fresh
+``python -m benchmarks.capacity`` headline is diffed against the
+committed ``BENCH_capacity.json`` over the intersection of matrix
+cells — per-cell knee QPS must reach ``--qps-floor`` of the committed
+knee, and every curve's goodput must rise monotonically up to its
+knee (a goodput dip below the knee means admission is collapsing
+before saturation — a scheduler bug, not a tolerance matter).
+
+Both gates refuse (exit 2, distinct from a regression's exit 1) to
+diff headlines produced under different workloads: the meta blocks
+must agree on provenance (seed/horizon/arrival/workload for the relay
+headline; seed/population/slo_ms for capacity), and a ``--quick``
+capacity file is never accepted as the committed reference.
 """
 
 from __future__ import annotations
@@ -34,6 +48,39 @@ import sys
 
 GATED_LATENCY = ("p99_ms", "rank_p99_ms")
 GATED_HITS = ("hbm_hit", "dram_hit", "miss")
+
+#: BENCH_relay.json meta fields that pin the workload a headline was
+#: measured under; two headlines disagreeing on any of these are
+#: different experiments, and diffing them is refused outright
+RELAY_PROVENANCE = ("L", "offered_qps", "slo_ms", "seed", "horizon",
+                    "arrival", "workload")
+
+
+class ProvenanceMismatch(Exception):
+    """Raised when two headlines were measured under different
+    workloads — the diff would compare apples to oranges."""
+
+
+def check_provenance(reference: dict, candidate: dict,
+                     fields=RELAY_PROVENANCE, *, label: str = "") -> None:
+    """Refuse to diff headlines with mismatched workload provenance.
+
+    Only fields the *reference* meta actually carries are enforced, so
+    the gate stays usable against pre-provenance committed files; a
+    field the reference has but the candidate lacks IS a mismatch.
+    """
+    ref_meta = reference.get("meta", {})
+    cand_meta = candidate.get("meta", {})
+    bad = [f for f in fields if f in ref_meta
+           and cand_meta.get(f) != ref_meta[f]]
+    if bad:
+        detail = ", ".join(
+            f"{f}: committed={ref_meta[f]!r} candidate="
+            f"{cand_meta.get(f, '<absent>')!r}" for f in bad)
+        raise ProvenanceMismatch(
+            f"{label}workload provenance mismatch — refusing to diff "
+            f"({detail}); regenerate the candidate under the committed "
+            f"workload or recommit the reference")
 
 
 def _fmt(v) -> str:
@@ -126,18 +173,73 @@ def compare(reference: dict, candidate: dict, *, latency_tol: float,
     return rows
 
 
+def _curve_below_knee(cell: dict) -> list:
+    knee = cell.get("knee_qps", 0.0)
+    return [r for r in cell.get("curve", ())
+            if r.get("offered_qps", 0.0) <= knee + 1e-9]
+
+
+def _goodput_monotone(cell: dict, tol: float) -> bool:
+    """Goodput must rise with offered load up to the knee: each point
+    may dip at most ``tol`` (relative) below the running maximum."""
+    best = 0.0
+    for row in _curve_below_knee(cell):
+        g = row.get("goodput_qps", 0.0)
+        if g < best * (1 - tol):
+            return False
+        best = max(best, g)
+    return True
+
+
+def compare_capacity(reference: dict, candidate: dict, *,
+                     knee_floor: float, curve_tol: float) -> list:
+    """Gate a fresh capacity headline against the committed one over
+    the intersection of matrix cells (the CI smoke runs a subset of
+    the committed full matrix, keyed by the same cell names)."""
+    ref_cells = reference.get("cells", {})
+    cand_cells = candidate.get("cells", {})
+    shared = sorted(set(ref_cells) & set(cand_cells))
+    rows = []
+    if not shared:
+        rows.append(("capacity", "<cells>", len(ref_cells), 0,
+                     "cell-key intersection non-empty", False))
+        return rows
+    for name in shared:
+        ref, cand = ref_cells[name], cand_cells[name]
+        lim = ref["knee_qps"] * knee_floor
+        rows.append((name, "knee_qps", ref["knee_qps"],
+                     cand.get("knee_qps"),
+                     f">= {lim:.1f} ({knee_floor:.0%} of committed)",
+                     cand.get("knee_qps") is not None
+                     and cand["knee_qps"] >= lim))
+        rows.append((name, "goodput monotone to knee",
+                     "monotone", "monotone" if
+                     _goodput_monotone(cand, curve_tol) else "DIP",
+                     f"no >{curve_tol:.0%} dip below running max",
+                     _goodput_monotone(cand, curve_tol)))
+    return rows
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="fail CI when the serving perf headline regresses "
                     "past tolerance vs the committed BENCH_relay.json")
-    ap.add_argument("--candidate", required=True,
+    ap.add_argument("--candidate", default=None,
                     help="headline json from the fresh benchmarks.run")
     ap.add_argument("--reference", default="BENCH_relay.json",
                     help="committed trajectory to gate against")
+    ap.add_argument("--capacity-candidate", default=None,
+                    help="headline json from a fresh "
+                         "benchmarks.capacity run")
+    ap.add_argument("--capacity-reference", default="BENCH_capacity.json",
+                    help="committed capacity matrix to gate against")
     ap.add_argument("--latency-tol", type=float, default=0.05)
     ap.add_argument("--hit-tol", type=float, default=0.02)
+    ap.add_argument("--curve-tol", type=float, default=None,
+                    help="max relative goodput dip below the knee "
+                         "(default 0.02, or 0.10 with --quick)")
     ap.add_argument("--qps-floor", type=float, default=None,
-                    help="min fraction of committed slo_qps "
+                    help="min fraction of committed slo_qps / knee_qps "
                          "(default 0.85, or 0.55 with --quick)")
     ap.add_argument("--quick", action="store_true",
                     help="candidate came from a --quick run: coarse "
@@ -145,17 +247,50 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.qps_floor is None:
         args.qps_floor = 0.55 if args.quick else 0.85
+    if args.curve_tol is None:
+        args.curve_tol = 0.10 if args.quick else 0.02
+    if not args.candidate and not args.capacity_candidate:
+        ap.error("need --candidate and/or --capacity-candidate")
 
-    with open(args.reference) as f:
-        reference = json.load(f)
-    with open(args.candidate) as f:
-        candidate = json.load(f)
+    rows = []
+    try:
+        if args.candidate:
+            with open(args.reference) as f:
+                reference = json.load(f)
+            with open(args.candidate) as f:
+                candidate = json.load(f)
+            check_provenance(reference, candidate, RELAY_PROVENANCE,
+                             label="relay: ")
+            rows += compare(reference, candidate,
+                            latency_tol=args.latency_tol,
+                            hit_tol=args.hit_tol,
+                            qps_floor=args.qps_floor)
+        if args.capacity_candidate:
+            from benchmarks.capacity import PROVENANCE_FIELDS
+            with open(args.capacity_reference) as f:
+                cap_ref = json.load(f)
+            with open(args.capacity_candidate) as f:
+                cap_cand = json.load(f)
+            if cap_ref.get("meta", {}).get("quick"):
+                raise ProvenanceMismatch(
+                    "capacity: committed reference "
+                    f"{args.capacity_reference} is a --quick run — "
+                    "refusing to gate against a smoke matrix; commit a "
+                    "full run")
+            check_provenance(cap_ref, cap_cand, PROVENANCE_FIELDS,
+                             label="capacity: ")
+            rows += compare_capacity(cap_ref, cap_cand,
+                                     knee_floor=args.qps_floor,
+                                     curve_tol=args.curve_tol)
+    except ProvenanceMismatch as exc:
+        print(f"REFUSED: {exc}", file=sys.stderr)
+        return 2
 
-    rows = compare(reference, candidate, latency_tol=args.latency_tol,
-                   hit_tol=args.hit_tol, qps_floor=args.qps_floor)
     width = max(len(r[0]) + len(r[1]) for r in rows) + 3
-    print(f"perf regression gate: candidate={args.candidate} "
-          f"vs committed={args.reference}"
+    print(f"perf regression gate: candidate="
+          f"{args.candidate or args.capacity_candidate} "
+          f"vs committed="
+          f"{args.reference if args.candidate else args.capacity_reference}"
           f"{' [quick tolerances]' if args.quick else ''}")
     failures = []
     for mode, field, ref, cand, limit, ok in rows:

@@ -26,6 +26,9 @@ from typing import Dict, Iterable, List, Tuple
 
 import numpy as np
 
+from benchmarks.capacity import (COST, HSTU, N_INST, SIM_S, SLO_MS,
+                                 find_knee, fixed_stream, meets_slo,
+                                 mode_config, run_point)
 from repro.core.costmodel import GRCostModel, HardwareModel
 from repro.core.runtime import (ClusterConfig, PipelineConfig, RelayConfig,
                                 relay_config)
@@ -35,96 +38,21 @@ from repro.data.synthetic import UserBehaviorStore, WorkloadConfig
 from repro.models import get_config
 from repro.serving.simulator import run_sim
 
-HSTU = get_config("hstu_gr")
-COST = GRCostModel(HSTU)
-
-N_INST = 5          # 4 active + 1 idle opposite-pool instance
-SIM_S = 12.0
-SLO_MS = 135.0
-
-
-def _fixed_stream(L, qps, dur, *, refresh=0.0, horizon=6000, seed=0,
-                  dim=None, n_items=512):
-    rng = np.random.default_rng(seed)
-    t, recent = 0.0, []
-    while t < dur:
-        t += rng.exponential(1.0 / qps)
-        if recent and rng.random() < refresh:
-            uid = int(rng.choice(recent[-horizon:]))
-        else:
-            uid = int(rng.integers(0, 10**9))
-        recent.append(uid)
-        yield t, UserMeta(user_id=uid, prefix_len=L, dim=dim or 256,
-                          n_items=n_items)
+# the sweep machinery now lives in benchmarks.capacity (the capacity
+# harness shares it); these names are re-exports kept for the historical
+# figure functions below
+_fixed_stream = fixed_stream
+_run = run_point
 
 
 def _cfg(mode: str, L: int, cost=None) -> RelayConfig:
-    """mode: baseline | relay | relay_dram | relay_batched | relay_paged
-    | relay_multihost | relay_disagg
-
-    ``relay_batched`` is the ``relay`` deployment with continuous
-    micro-batching switched on (same trigger/cache -> equal hit rates);
-    the throughput delta is pure batching.  ``relay_paged`` is
-    ``relay_batched`` over the paged HBM window (64-token pages): same
-    trigger and byte budget, psi block-granular — hit rates must match
-    ``relay_batched`` with slo_qps within tolerance (page-rounded load
-    times are the only modelled difference at page-aligned L).
-    ``relay_multihost`` is ``relay_batched`` striped over two hosts
-    (owner-map -> per-host ring routing, per-host DRAM tiers): affinity
-    hit rates must stay within 2% of the single-host deployment — the
-    two-level rendezvous changes WHERE producer and consumer meet, not
-    whether they do.  ``relay_disagg`` is ``relay_multihost`` with the
-    pre-infer side path disaggregated onto dedicated prefill hosts:
-    psi ships cross-host to its owner over the NIC fabric, so hit
-    rates must stay within 2% of ``relay_multihost`` (the shipment
-    lands inside the retrieval slack at the reference point) while the
-    ranking hosts' slots are freed of prefill compute.  The prefill
-    tier is provisioned with headroom (two hosts x 20 slots: the point
-    of disaggregation is that the side path never contends, so pre
-    groups stay shallow and the NIC hop still beats the retrieval
-    slack at the admission ceiling) and two NIC links, so neither
-    compute nor the fabric caps admission below the colocated
-    600/s pool ceiling (Eq. 3b)."""
-    relay = mode != "baseline"
-    r2 = 0.8 if relay else 0.2   # 4 active instances either way
-    hbm_cache = 4e9
-    batched = mode in ("relay_batched", "relay_paged", "relay_multihost",
-                       "relay_disagg")
-    multihost = mode in ("relay_multihost", "relay_disagg")
-    return relay_config(
-        trigger=TriggerConfig(n_instances=N_INST, r2=r2,
-                              kv_p99_len=max(L, 1024),
-                              hbm_bytes=hbm_cache / 0.5, r1=0.5,
-                              t_life_s=0.5),
-        cluster=ClusterConfig(
-            relay_enabled=relay,
-            dram_budget_bytes=500e9 if mode == "relay_dram" else 0.0,
-            hbm_cache_bytes=hbm_cache,
-            max_batch=8 if batched else 0,
-            batch_wait_ms=2.0,
-            hosts=2 if multihost else 1,
-            prefill_hosts=2 if mode == "relay_disagg" else 0,
-            prefill_m_slots=20 if mode == "relay_disagg" else 0,
-            page_tokens=64 if mode == "relay_paged" else 0),
-    )
-
-
-def _run(mode, L, qps, *, cost=None, dur=SIM_S, seed=0, refresh=None,
-         pipeline=None, n_items=512):
-    cost = cost or COST
-    refresh = (0.5 if mode == "relay_dram" else 0.0) if refresh is None \
-        else refresh
-    cfg = _cfg(mode, L)
-    if pipeline is not None:
-        cfg = dataclasses.replace(cfg, pipeline=pipeline)
-    arr = _fixed_stream(L, qps, dur, refresh=refresh, seed=seed,
-                        dim=cost.cfg.d_model, n_items=n_items)
-    return run_sim(cfg, cost, arr)
+    """Per-mode deployment config — see ``capacity.mode_config`` for
+    the mode glossary (this wrapper keeps the historical signature)."""
+    return mode_config(mode, L)
 
 
 def _meets_slo(s) -> bool:
-    return s.get("n", 0) > 0 and s["p99_ms"] <= SLO_MS \
-        and s["success_rate"] >= 0.999
+    return meets_slo(s, SLO_MS)
 
 
 def _meets_rank_budget(s) -> bool:
@@ -140,27 +68,27 @@ def _meets_ext_budget(s) -> bool:
     return s.get("n", 0) > 0 and s["rank_p99_ms"] <= 80.0
 
 
-def _max_qps(mode, L, *, cost=None, lo=5, hi=1200, pipeline=None,
+def _max_qps(mode, L, *, cost=None, lo=5, hi=None, pipeline=None,
              criterion=_meets_slo, n_items=512, refresh=None,
              dur=SIM_S, coarse=False) -> float:
-    """Largest offered QPS meeting the SLO criterion.
+    """Largest offered QPS meeting the SLO criterion (the shared
+    geometric-expansion knee-finder, ``capacity.find_knee``: the upper
+    probe doubles until the criterion fails, so there is no hard search
+    cap to silently clip future throughput gains — ``hi`` merely seeds
+    the first probe).
 
     Under the pipeline-SLO criterion the value is goodput (SLO-compliant
     completions/s); under stage-budget criteria it is raw completed
     throughput (the paper's Fig.13d/14 y-axes).  ``coarse`` widens the
     bisection tolerance (used by --quick CI smoke runs)."""
     key = "goodput_qps" if criterion is _meets_slo else "throughput_qps"
-    best = 0.0
-    slack = 0.30 if coarse else 0.08
-    while hi - lo > max(4, lo * slack):
-        mid = (lo + hi) / 2
-        s = _run(mode, L, mid, cost=cost, pipeline=pipeline,
-                 n_items=n_items, refresh=refresh, dur=dur)
-        if criterion(s):
-            best, lo = s[key], mid
-        else:
-            hi = mid
-    return best
+
+    def measure(q):
+        return _run(mode, L, q, cost=cost, pipeline=pipeline,
+                    n_items=n_items, refresh=refresh, dur=dur)
+
+    return find_knee(measure, criterion, lo=lo, hi=hi, key=key,
+                     coarse=coarse).best
 
 
 # ---------------------------------------------------------------------------
@@ -455,8 +383,13 @@ def bench_relay_summary(quick: bool = False) -> Dict:
     ``BENCH_relay.json`` so successive PRs can diff serving performance.
     """
     L, qps = 2048, 60
+    # workload provenance: the regression gate refuses to diff headlines
+    # produced under mismatched workloads (seed / draw population /
+    # arrival process), so a knob change can't masquerade as a perf win
     out: Dict[str, Dict] = {"meta": {
-        "L": L, "offered_qps": qps, "slo_ms": SLO_MS, "sim_s": SIM_S}}
+        "L": L, "offered_qps": qps, "slo_ms": SLO_MS, "sim_s": SIM_S,
+        "seed": 0, "horizon": 10**9, "arrival": "poisson",
+        "workload": "uniform"}}
     for mode in ("baseline", "relay", "relay_dram", "relay_batched",
                  "relay_paged", "relay_multihost", "relay_disagg"):
         s = _run(mode, L, qps)

@@ -534,6 +534,7 @@ class RelayRuntime:
         # legacy latency-only pricing stays bit-identical otherwise.
         self.shipping = {"shipped": 0, "landed": 0, "deduped": 0,
                          "late_miss": 0, "dropped": 0, "forwarded": 0,
+                         "coalesced": 0, "transfers": 0,
                          "bytes": 0, "ms": 0.0}
         self._ship_inflight: Dict[int, int] = {}
         self._ship_raced: set = set()
@@ -1162,13 +1163,18 @@ class RelayRuntime:
 
     def _on_pre_group_done(self, t: float, inst: InstanceRuntime,
                            group: List[PendingRank], outs) -> None:
+        outbound: Dict[Optional[str], list] = {}
         for w, (psi, nbytes) in zip(group, outs):
             inst.inflight_pre.discard(w.user_id)
             if inst.role == "prefill":
-                # batched disaggregated prefill: every member of the
-                # one jitted launch ships to its own owner
+                # batched disaggregated prefill: members of the one
+                # jitted launch bound for the same rank host coalesce
+                # into one NIC transfer (per-destination, below)
                 if psi is not None:
-                    self._ship_psi(t, inst, w.meta, psi, nbytes)
+                    target = self.router.route_key(w.user_id)
+                    outbound.setdefault(
+                        self.topology.host_of(target), []).append(
+                        (target, w.meta, psi, nbytes))
                 else:
                     self._ship_close(w.user_id)
                 continue
@@ -1180,6 +1186,8 @@ class RelayRuntime:
             else:
                 inst.complete_pre(w.meta, psi, nbytes, t)
                 self._settle_raced(inst, w.user_id)
+        for dst_host, members in outbound.items():
+            self._ship_group(t, inst, dst_host, members)
         inst.release_slot(t)
         for w in group:
             self._wake_waiters(t, inst, w.user_id)
@@ -1391,10 +1399,37 @@ class RelayRuntime:
             t, self.topology.host_of(inst.name),
             self.topology.host_of(target), nb, meta.prefix_len or 1)
         self.shipping["shipped"] += 1
+        self.shipping["transfers"] += 1
         self.shipping["bytes"] += nb
         self.shipping["ms"] += ms
         self.schedule(arrival, "ship_done", target=target, meta=meta,
                       psi=psi, nbytes=nbytes)
+
+    def _ship_group(self, t: float, inst: InstanceRuntime,
+                    dst_host: Optional[str], members: list) -> None:
+        """Coalesced shipment: every member of one batched prefill
+        launch bound for the same rank host rides ONE NIC transfer —
+        summed payload bytes, one serialization window, one RTT —
+        through the same ``psi_transfer_ms``/``_link_transfer`` pricing
+        as a solo shipment.  Each member still lands as its own
+        ``ship_done`` (its target instance may differ within the
+        host), so the late-miss race and churn forwarding are
+        untouched."""
+        total = 0
+        len_sum = 0
+        for _, meta, _, nbytes in members:
+            total += int(nbytes) or self.cost.kv_bytes(meta.prefix_len or 1)
+            len_sum += meta.prefix_len or 1
+        arrival, ms = self._link_transfer(
+            t, self.topology.host_of(inst.name), dst_host, total, len_sum)
+        self.shipping["shipped"] += len(members)
+        self.shipping["transfers"] += 1
+        self.shipping["coalesced"] += len(members) - 1
+        self.shipping["bytes"] += total
+        self.shipping["ms"] += ms
+        for target, meta, psi, nbytes in members:
+            self.schedule(arrival, "ship_done", target=target, meta=meta,
+                          psi=psi, nbytes=nbytes)
 
     def _on_ship_done(self, t: float, target: str, meta: UserMeta,
                       psi: Any, nbytes: int, hops: int = 0) -> None:
@@ -1419,6 +1454,7 @@ class RelayRuntime:
                 t, self.topology.host_of(target),
                 self.topology.host_of(owner), nb, meta.prefix_len or 1)
             self.shipping["forwarded"] += 1
+            self.shipping["transfers"] += 1
             self.shipping["ms"] += ms
             self.schedule(arrival, "ship_done", target=owner, meta=meta,
                           psi=psi, nbytes=nbytes, hops=hops + 1)

@@ -6,6 +6,19 @@ paper's workload description (§4.1): most users have short histories,
 popularity law.  Used by the serving engine (behaviour fetch for
 pre-inference), the trainer (next-item prediction batches) and the
 benchmarks (request generators).
+
+Request-level workload layer (the capacity harness substrate):
+
+  * ``ZipfPopularity`` — WHO arrives: a multi-million-user *request
+    popularity* sampler (skew ``s=0`` is uniform; ``s>0`` draws user
+    ranks from a bounded Zipf(s) law, so a head of hot users recurs
+    within cache lifetimes and hit rates finally depend on footprint
+    pressure instead of pinning at 100%);
+  * ``arrival_times`` — WHEN they arrive: pluggable arrival processes
+    (homogeneous Poisson, diurnal sinusoid via Lewis–Shedler thinning,
+    MMPP-style two-state bursty), all normalized to a mean offered QPS;
+  * ``capacity_stream`` — the composition: a timed
+    ``(t, UserMeta)`` stream that feeds ``ClusterSim.run`` unchanged.
 """
 
 from __future__ import annotations
@@ -86,6 +99,174 @@ class UserBehaviorStore:
                 for u in uids])
             yield {"tokens": toks[:, :-1].astype(np.int32),
                    "labels": toks[:, 1:].astype(np.int32)}
+
+
+# ---------------------------------------------------------------------------
+# request popularity (WHO arrives)
+# ---------------------------------------------------------------------------
+
+
+class ZipfPopularity:
+    """Request-level user-popularity sampler over a ``population`` of
+    user ids: rank-``r`` user receives a share of traffic ``∝ r^-skew``
+    (bounded continuous Zipf, inverse-CDF sampled — O(1) per draw even
+    for multi-million populations).  ``skew=0`` degenerates to the
+    uniform draw the legacy benchmark streams used, where a repeat user
+    is a once-in-a-billion event and HBM hit rates pin at 100%; real
+    recommendation traffic is heavily head-skewed, which is what makes
+    hit rate / P99 curves move with footprint pressure.
+
+    The rank -> user-id mapping is the identity (popular users are the
+    low ids); every consumer of a user id hashes it (rendezvous owner
+    map, per-host rings, behaviour-store seeds), so contiguity carries
+    no placement bias.
+    """
+
+    def __init__(self, population: int, skew: float = 0.0):
+        if population < 1:
+            raise ValueError(f"population must be >= 1, got {population}")
+        if skew < 0:
+            raise ValueError(f"skew must be >= 0, got {skew}")
+        self.population = int(population)
+        self.skew = float(skew)
+
+    def cdf(self, rank: float) -> float:
+        """Analytic share of requests landing on the top-``rank`` users
+        (continuous bounded-Zipf CDF) — used by the statistical skew
+        tests and by capacity reports to label workload head-heaviness."""
+        n, s = self.population, self.skew
+        rank = min(max(float(rank), 1.0), float(n))
+        if n == 1:
+            return 1.0
+        if abs(s - 1.0) < 1e-9:
+            return np.log(rank) / np.log(n)
+        return (rank ** (1.0 - s) - 1.0) / (n ** (1.0 - s) - 1.0)
+
+    def sample(self, rng: np.random.Generator, n: int = 1) -> np.ndarray:
+        """Draw ``n`` user ids (int64 array)."""
+        u = rng.random(n)
+        pop, s = self.population, self.skew
+        if pop == 1:
+            ranks = np.ones(n)
+        elif abs(s - 1.0) < 1e-9:
+            ranks = np.exp(u * np.log(pop))
+        else:
+            ranks = (1.0 + u * (pop ** (1.0 - s) - 1.0)) ** (1.0 / (1.0 - s))
+        ids = np.floor(ranks).astype(np.int64) - 1
+        return np.clip(ids, 0, pop - 1)
+
+    def sample_one(self, rng: np.random.Generator) -> int:
+        return int(self.sample(rng, 1)[0])
+
+
+# ---------------------------------------------------------------------------
+# arrival processes (WHEN they arrive)
+# ---------------------------------------------------------------------------
+
+
+def _poisson_arrivals(qps: float, duration_s: float,
+                      rng: np.random.Generator) -> Iterator[float]:
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / qps)
+        if t >= duration_s:
+            return
+        yield t
+
+
+def _diurnal_arrivals(qps: float, duration_s: float,
+                      rng: np.random.Generator, *, amp: float = 0.6,
+                      period_s: float = 10.0) -> Iterator[float]:
+    """Sinusoidal rate modulation ``λ(t) = qps·(1 + amp·sin(2πt/T))``
+    via Lewis–Shedler thinning (exact for any bounded λ).  The mean
+    rate over whole periods is ``qps``; the peak is ``(1+amp)·qps`` —
+    a compressed diurnal cycle so a 12 s sim sees both the trough and
+    the crest of a day."""
+    if not 0.0 <= amp < 1.0:
+        raise ValueError(f"diurnal amp must be in [0, 1), got {amp}")
+    lam_max = qps * (1.0 + amp)
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / lam_max)
+        if t >= duration_s:
+            return
+        lam_t = qps * (1.0 + amp * np.sin(2.0 * np.pi * t / period_s))
+        if rng.random() * lam_max <= lam_t:
+            yield t
+
+
+def _mmpp_arrivals(qps: float, duration_s: float,
+                   rng: np.random.Generator, *, low: float = 0.3,
+                   high: float = 1.7, dwell_s: float = 1.0
+                   ) -> Iterator[float]:
+    """Two-state Markov-modulated Poisson process: the rate alternates
+    between ``low·qps`` and ``high·qps`` with exponential dwell times
+    (equal mean dwell in each state, so the stationary mean rate is
+    ``(low+high)/2 · qps`` — keep ``low+high == 2`` to offer ``qps`` on
+    average).  This is the bursty workload: multi-second on/off surges
+    that queue the rank pool far beyond what Poisson at the same mean
+    produces."""
+    if low < 0 or high < low:
+        raise ValueError(f"need 0 <= low <= high, got {low}, {high}")
+    t, hot = 0.0, bool(rng.random() < 0.5)
+    t_switch = rng.exponential(dwell_s)
+    while True:
+        rate = qps * (high if hot else low)
+        # draw the next arrival in the current state; a state switch
+        # before it invalidates the draw (memorylessness: redraw)
+        gap = rng.exponential(1.0 / rate) if rate > 0 else float("inf")
+        if t + gap >= t_switch:
+            t = t_switch
+            hot = not hot
+            t_switch = t + rng.exponential(dwell_s)
+            if t >= duration_s:
+                return
+            continue
+        t += gap
+        if t >= duration_s:
+            return
+        yield t
+
+
+ARRIVAL_PROCESSES = {
+    "poisson": _poisson_arrivals,
+    "diurnal": _diurnal_arrivals,
+    "mmpp": _mmpp_arrivals,
+}
+
+
+def arrival_times(process: str, qps: float, duration_s: float, *,
+                  rng: np.random.Generator, **kw) -> Iterator[float]:
+    """Arrival-time generator for one of ``ARRIVAL_PROCESSES`` (mean
+    offered rate ``qps`` over ``duration_s`` seconds)."""
+    try:
+        fn = ARRIVAL_PROCESSES[process]
+    except KeyError:
+        raise ValueError(
+            f"unknown arrival process {process!r}; "
+            f"known: {sorted(ARRIVAL_PROCESSES)}") from None
+    if qps <= 0:
+        return iter(())
+    return fn(qps, duration_s, rng, **kw)
+
+
+def capacity_stream(L: int, qps: float, duration_s: float, *,
+                    skew: float = 0.0, population: int = 2_000_000,
+                    arrival: str = "poisson", seed: int = 0,
+                    dim: int = 256, n_items: int = 512,
+                    incr_len: int = 64, arrival_kw: Optional[Dict] = None
+                    ) -> Iterator[Tuple[float, UserMeta]]:
+    """The capacity-harness request stream: WHO (Zipf(skew) popularity
+    over ``population`` users) × WHEN (a named arrival process at mean
+    ``qps``), at a fixed request profile (prefix ``L``, ``n_items``
+    candidates).  Yields ``(t, UserMeta)`` and feeds ``ClusterSim.run``
+    unchanged."""
+    rng = np.random.default_rng(seed)
+    pop = ZipfPopularity(population, skew)
+    for t in arrival_times(arrival, qps, duration_s, rng=rng,
+                           **(arrival_kw or {})):
+        yield t, UserMeta(user_id=pop.sample_one(rng), prefix_len=L,
+                          incr_len=incr_len, dim=dim, n_items=n_items)
 
 
 def request_stream(store: UserBehaviorStore, qps: float, duration_s: float,

@@ -312,3 +312,37 @@ def test_rebalance_migrations_occupy_the_nic():
     ship = rt.stats()["shipping"]
     assert ship["shipped"] == ship["landed"] + ship["dropped"]
     assert ship["inflight"] == 0
+
+
+def test_batched_prefill_coalesces_shipments_per_host():
+    """Shipment coalescing: members of ONE batched prefill launch
+    bound for the same rank host ride a single NIC transfer (summed
+    bytes, one serialization window) instead of serializing per user.
+    Fewer NIC transfers than psi shipped, identical payload bytes, and
+    — at this operating point — an identical hit profile to the
+    unbatched runtime, so amortizing the fabric costs nothing."""
+    arr = [(0.001 * i, UserMeta(user_id=3000 + i, prefix_len=2048))
+           for i in range(12)]
+
+    def run(**kw):
+        sim = ClusterSim(_cfg(nic_serialize=True, prefill_m_slots=2, **kw),
+                         COST)
+        sim.run(arr)
+        return (sim.runtime.stats()["shipping"],
+                sorted(r.hit for r in sim.records))
+
+    solo, solo_hits = run()
+    batched, batched_hits = run(max_batch=8)
+
+    # the solo path is 1:1 — every shipment is its own transfer
+    assert solo["transfers"] == solo["shipped"] == 12
+    assert solo["coalesced"] == 0
+    # batching coalesces: same psi shipped, strictly fewer transfers
+    assert batched["shipped"] == 12
+    assert batched["transfers"] < solo["transfers"]
+    assert batched["coalesced"] == \
+        batched["shipped"] - batched["transfers"]
+    # same payload crosses the wire, and nobody's rendezvous regressed
+    assert batched["bytes"] == solo["bytes"] == 12 * COST.kv_bytes(2048)
+    assert batched_hits == solo_hits
+    assert batched["landed"] == solo["landed"] == 12
