@@ -77,6 +77,15 @@ def find_knee(measure: Callable[[float], Dict],
         probe(hard_cap)
         return KneeResult(best=best, knee_qps=knee, probes=probes,
                           hard_cap=hard_cap)
+    if not any(ok for _, ok, _ in probes):
+        # the seed upper probe failed outright: ground the bracket by
+        # probing lo itself — otherwise bisection narrows toward an
+        # UNVERIFIED lower bound and can report knee_qps=0/best=0 with
+        # no evidence that lo fails (every mid probe may fail while lo
+        # would have passed)
+        if not probe(lo):
+            return KneeResult(best=best, knee_qps=knee, probes=probes,
+                              hard_cap=hard_cap)
     slack = 0.30 if coarse else 0.08
     while hi - lo > max(4.0, lo * slack):
         mid = (lo + hi) / 2.0

@@ -41,7 +41,8 @@ SLO_MS = 135.0
 
 #: every serving mode the harness understands (the BENCH_relay set)
 ALL_MODES = ("baseline", "relay", "relay_dram", "relay_batched",
-             "relay_paged", "relay_multihost", "relay_disagg")
+             "relay_paged", "relay_segments", "relay_multihost",
+             "relay_disagg")
 
 
 def mode_config(mode: str, L: int, *, hosts: Optional[int] = None,
@@ -56,6 +57,12 @@ def mode_config(mode: str, L: int, *, hosts: Optional[int] = None,
     trigger and byte budget, psi block-granular — hit rates must match
     ``relay_batched`` with slo_qps within tolerance (page-rounded load
     times are the only modelled difference at page-aligned L).
+    ``relay_segments`` is ``relay_paged`` with beyond-prefix reuse
+    (RcLLM): the stream attaches per-user candidate-independent
+    ``seg_lens``, the side path caches those interior segments
+    alongside the prefix as page-aligned spans, and a cache hit ranks
+    only the truly fresh incr tokens — the reused-token fraction per
+    hit must EXCEED ``relay_paged`` at equal-or-better slo_qps.
     ``relay_multihost`` is ``relay_batched`` striped over two hosts
     (owner-map -> per-host ring routing, per-host DRAM tiers): affinity
     hit rates must stay within 2% of the single-host deployment — the
@@ -81,8 +88,9 @@ def mode_config(mode: str, L: int, *, hosts: Optional[int] = None,
     relay = mode != "baseline"
     r2 = 0.8 if relay else 0.2   # 4 active instances either way
     hbm_cache = 4e9
-    batched = mode in ("relay_batched", "relay_paged", "relay_multihost",
-                       "relay_disagg")
+    batched = mode in ("relay_batched", "relay_paged", "relay_segments",
+                       "relay_multihost", "relay_disagg")
+    paged = mode in ("relay_paged", "relay_segments")
     multihost = mode in ("relay_multihost", "relay_disagg")
     if hosts is None:
         hosts = 2 if multihost else 1
@@ -102,7 +110,8 @@ def mode_config(mode: str, L: int, *, hosts: Optional[int] = None,
             hosts=hosts,
             prefill_hosts=prefill_hosts,
             prefill_m_slots=20 if prefill_hosts else 0,
-            page_tokens=64 if mode == "relay_paged" else 0),
+            page_tokens=64 if paged else 0,
+            segments=mode == "relay_segments"),
     )
 
 
@@ -148,6 +157,15 @@ def run_point(mode, L, qps, *, cost=None, dur=SIM_S, seed=0, refresh=None,
     else:
         arr = workload.stream(L, qps, dur, seed=seed,
                               dim=cost.cfg.d_model, n_items=n_items)
+    if cfg.cluster.segments:
+        # attach per-user candidate-independent seg_lens from the
+        # dedicated hash RNG — the arrival/popularity draws above are
+        # untouched, so relay_segments sees the exact trace relay_paged
+        # sees, plus segment annotations
+        from repro.data.synthetic import segment_lens
+        arr = ((t, dataclasses.replace(
+            m, seg_lens=segment_lens(m.user_id, m.incr_len)))
+            for t, m in arr)
     sim = ClusterSim(cfg, cost)
     s = sim.run(arr)
     return _distribution(sim, s) if distribution else s
@@ -247,7 +265,7 @@ CURVE_FIELDS = ("offered_qps", "n", "p50_ms", "p90_ms", "p95_ms", "p99_ms",
                 "mean_ms", "max_ms", "rank_p99_ms", "pre_p99_ms",
                 "load_p99_ms", "throughput_qps", "goodput_qps",
                 "success_rate", "hbm_hit", "dram_hit", "miss",
-                "special_util")
+                "special_util", "reused_frac")
 
 
 def _curve_row(qps: float, s: Dict) -> Dict:

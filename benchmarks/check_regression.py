@@ -126,6 +126,35 @@ def compare(reference: dict, candidate: dict, *, latency_tol: float,
                      abs(rp["slo_qps"] - rb["slo_qps"])
                      <= 0.05 * rb["slo_qps"]))
 
+    # beyond-prefix acceptance: relay_segments is relay_paged with
+    # candidate-independent interior segments cached alongside the
+    # prefix — the point of the mode is MORE reused tokens per hit, so
+    # its reused-token fraction must strictly exceed relay_paged's
+    # (candidate and committed), and the committed slo_qps may not fall
+    # below relay_paged (segment reuse shortens critical-path ranking;
+    # one-sided: faster is success)
+    if "relay_segments" in reference and "relay_paged" in reference:
+        rp = candidate.get("relay_paged")
+        rs = candidate.get("relay_segments")
+        if rp and rs and "reused_frac" in rp and "reused_frac" in rs:
+            rows.append(("relay_segments", "reused_frac > relay_paged",
+                         rp["reused_frac"], rs["reused_frac"],
+                         "strictly greater",
+                         rs["reused_frac"] > rp["reused_frac"]))
+        rp = reference["relay_paged"]
+        rs = reference["relay_segments"]
+        if "reused_frac" in rp and "reused_frac" in rs:
+            rows.append(("relay_segments",
+                         "reused_frac > relay_paged (committed)",
+                         rp["reused_frac"], rs["reused_frac"],
+                         "strictly greater",
+                         rs["reused_frac"] > rp["reused_frac"]))
+        rows.append(("relay_segments",
+                     "slo_qps vs relay_paged (committed)",
+                     rp["slo_qps"], rs["slo_qps"],
+                     ">= relay_paged",
+                     rs["slo_qps"] >= rp["slo_qps"]))
+
     # multi-host acceptance: striping the pools over two hosts moves
     # WHERE producer and consumer rendezvous, never whether they do —
     # affinity hit rates must stay within 2% absolute of single-host

@@ -391,7 +391,8 @@ def bench_relay_summary(quick: bool = False) -> Dict:
         "seed": 0, "horizon": 10**9, "arrival": "poisson",
         "workload": "uniform"}}
     for mode in ("baseline", "relay", "relay_dram", "relay_batched",
-                 "relay_paged", "relay_multihost", "relay_disagg"):
+                 "relay_paged", "relay_segments", "relay_multihost",
+                 "relay_disagg"):
         s = _run(mode, L, qps)
         entry = {
             "p50_ms": round(s["p50_ms"], 3),
@@ -402,6 +403,7 @@ def bench_relay_summary(quick: bool = False) -> Dict:
             "hbm_hit": round(s["hbm_hit"], 4),
             "dram_hit": round(s["dram_hit"], 4),
             "miss": round(s["miss"], 4),
+            "reused_frac": round(s["reused_frac"], 4),
         }
         # quick (CI smoke) still reports slo_qps — shorter sims and a
         # coarser bisection keep it cheap while preserving the fields

@@ -23,7 +23,8 @@ import time
 
 # every BENCH_relay.json must report these serving modes
 RELAY_MODES = ("baseline", "relay", "relay_dram", "relay_batched",
-               "relay_paged", "relay_multihost", "relay_disagg")
+               "relay_paged", "relay_segments", "relay_multihost",
+               "relay_disagg")
 
 
 def main(argv=None) -> None:

@@ -79,6 +79,13 @@ class CacheEntry:
     tokens_resident: int = 0
     reload_tokens: Optional[int] = None
     page_table: Optional[np.ndarray] = None   # (slabs, n_pages) int32
+    # beyond-prefix segment reuse: ordered (global_start, valid_len)
+    # cached spans — None for prefix-only entries.  In the paged store a
+    # segmented entry pads EVERY span to whole pages and ``prefix_len``
+    # holds the padded total, so the page math (entry_pages, resume,
+    # partial tail eviction) is span-agnostic; ``spans`` preserves the
+    # true layout for the kernel's position/validity tables.
+    spans: Optional[Tuple[Tuple[int, int], ...]] = None
 
 
 class HBMCacheStore:
@@ -101,7 +108,9 @@ class HBMCacheStore:
         return len(self.entries)
 
     def insert(self, user_id: int, value: Any, nbytes: int, now: float,
-               prefix_len: int = 0) -> List[CacheEntry]:
+               prefix_len: int = 0,
+               spans: Optional[Tuple[Tuple[int, int], ...]] = None
+               ) -> List[CacheEntry]:
         """Insert psi(u); evicts oldest entries past the budget.
         Returns the evicted entries (candidates for DRAM spill).
 
@@ -124,7 +133,8 @@ class HBMCacheStore:
             # the fresher psi serves this lifecycle)
             self._evict(user_id)
         entry = CacheEntry(user_id, value, int(nbytes), now,
-                           prefix_len=prefix_len, tokens_resident=prefix_len)
+                           prefix_len=prefix_len, tokens_resident=prefix_len,
+                           spans=tuple(spans) if spans else None)
         evicted = []
         while self.used_bytes + entry.nbytes > self.budget and self.entries:
             old_uid, old = next(iter(self.entries.items()))
@@ -289,8 +299,19 @@ class PagedHBMStore(HBMCacheStore):
     # --- insert: fresh / refresh / resume -----------------------------------
 
     def insert(self, user_id: int, value: Any, nbytes: int, now: float,
-               prefix_len: int = 0) -> List[CacheEntry]:
+               prefix_len: int = 0,
+               spans: Optional[Tuple[Tuple[int, int], ...]] = None
+               ) -> List[CacheEntry]:
         tokens = self._tokens_of(nbytes, prefix_len)
+        if spans:
+            # segmented entry: every span pads to whole pages so spans
+            # stay independently addressable; the page math (entry
+            # sizing, resume, partial tail eviction) runs on the PADDED
+            # total, which becomes the entry's prefix_len.  Live psi
+            # for a segmented entry must arrive pre-padded to the same
+            # grid (zero pad keys are exact under silu attention).
+            pt = self.layout.page_tokens
+            tokens = sum(pt * ceil_div(int(ln), pt) for _, ln in spans)
         if _is_kv_pytree(value):
             # live psi arrives on the executor's 64-token prefill grid,
             # which can overhang the page grid — page the WHOLE value
@@ -325,11 +346,13 @@ class PagedHBMStore(HBMCacheStore):
         table = np.asarray(pages, np.int32).reshape(self.layout.slabs, pps)
         entry = CacheEntry(
             user_id, value, need * self.layout.page_bytes, now,
-            prefix_len=tokens, tokens_resident=tokens, page_table=table)
+            prefix_len=tokens, tokens_resident=tokens, page_table=table,
+            spans=tuple(spans) if spans else None)
         if self.buffer is not None and _is_kv_pytree(value):
             slice_into_pages(self.buffer, table, value,
                              self.layout.page_tokens)
-            entry.value = PagedPsi(table, tokens, self.layout, self.buffer)
+            entry.value = PagedPsi(table, tokens, self.layout, self.buffer,
+                                   spans=entry.spans)
         self.entries[user_id] = entry
         self.used_bytes += entry.nbytes
         self.stats["inserts"] += 1
@@ -361,7 +384,7 @@ class PagedHBMStore(HBMCacheStore):
             slice_into_pages(self.buffer, table, value,
                              self.layout.page_tokens, t0=t0)
             entry.value = PagedPsi(table, entry.prefix_len, self.layout,
-                                   self.buffer)
+                                   self.buffer, spans=entry.spans)
         added = missing * self.layout.page_bytes
         entry.tokens_resident = entry.prefix_len
         entry.nbytes += added
@@ -461,7 +484,8 @@ class PagedHBMStore(HBMCacheStore):
             return entry.value
         pps = self.layout.pages_per_slab(entry.tokens_resident)
         psi = PagedPsi(entry.page_table[:, :pps].copy(),
-                       entry.tokens_resident, self.layout, self.buffer)
+                       entry.tokens_resident, self.layout, self.buffer,
+                       spans=entry.spans)
         self.pool.pin(psi.pages)
         return psi
 

@@ -161,19 +161,31 @@ class SimExecutor:
 
     def __init__(self, cost: GRCostModel,
                  batching: Optional[BatchingConfig] = None,
-                 page_tokens: int = 0):
+                 page_tokens: int = 0, segments: bool = False):
         self.cost = cost
         self.batching = batching
         self.page_tokens = int(page_tokens)
+        # beyond-prefix segment reuse: the side path also computes the
+        # candidate-independent interior segments (UserMeta.seg_lens),
+        # and a cache hit ranks only the truly fresh tokens.  Disabled
+        # (or with empty seg_lens) every cost is unchanged.
+        self.segments = bool(segments)
+
+    def _seg_tokens(self, meta: UserMeta) -> int:
+        if not self.segments:
+            return 0
+        return int(sum(getattr(meta, "seg_lens", ()) or ()))
 
     def pre_infer(self, meta: UserMeta) -> Tuple[Any, int, float]:
-        nbytes = self.cost.kv_bytes(meta.prefix_len)
-        ms = self.cost.pre_infer_ms(meta.prefix_len)
-        return ("psi", meta.user_id, meta.prefix_len), nbytes, ms
+        reuse = meta.prefix_len + self._seg_tokens(meta)
+        nbytes = self.cost.kv_bytes(reuse)
+        ms = self.cost.pre_infer_ms(reuse)
+        return ("psi", meta.user_id, reuse), nbytes, ms
 
     def rank_cached(self, meta: UserMeta, psi) -> Tuple[Any, float]:
+        segs = self._seg_tokens(meta)
         return None, self.cost.rank_on_cache_ms(
-            meta.prefix_len, meta.incr_len, meta.n_items)
+            meta.prefix_len + segs, meta.incr_len - segs, meta.n_items)
 
     def rank_full(self, meta: UserMeta) -> Tuple[Any, float]:
         return None, self.cost.full_rank_ms(
@@ -197,8 +209,9 @@ class SimExecutor:
             m = w.meta
             plen = m.prefix_len if m is not None else w.prefix_len
             if w.psi is not None:
+                segs = self._seg_tokens(m) if m is not None else 0
                 per.append(self.cost.rank_on_cache_ms(
-                    plen, w.incr_len, w.n_items))
+                    plen + segs, w.incr_len - segs, w.n_items))
             else:
                 per.append(self.cost.full_rank_ms(
                     plen, w.incr_len, w.n_items))
@@ -227,7 +240,8 @@ class LiveExecutor:
     """Runs the real HSTU backbone with jitted prefill / rank steps."""
 
     def __init__(self, model, params, store,
-                 cost: Optional[GRCostModel] = None, page_tokens: int = 0):
+                 cost: Optional[GRCostModel] = None, page_tokens: int = 0,
+                 segments: bool = False):
         import jax
         self._jax = jax
         self.model = model
@@ -235,6 +249,7 @@ class LiveExecutor:
         self.store = store
         self.cost = cost or GRCostModel(model.cfg)
         self.page_tokens = int(page_tokens)
+        self.segments = bool(segments)
         # the executor owns compute geometry: a paged window must page
         # THIS model's psi, not the (possibly full-scale) cost model's
         self.page_layout = (PageLayout.from_model_config(
@@ -256,6 +271,28 @@ class LiveExecutor:
     def _round(self, n: int, m: int = 64) -> int:
         return max(m, (n + m - 1) // m * m)  # bucketed shapes: few recompiles
 
+    def _pad_segments(self, kv, meta: UserMeta):
+        """Append the segmented entry's span slots to live psi: one
+        whole-page run of ZERO K/V per interior segment, matching the
+        page grid ``PagedHBMStore.insert`` sizes a span-carrying entry
+        to.  Zero keys are exact under silu attention (they contribute
+        silu(0)·v = 0), so live scores equal the prefix-only launch
+        while the span storage/gather machinery runs end-to-end; real
+        interior-segment compute rides the Pallas segment kernel
+        (``repro.kernels.paged_prefix_attn.segment_rank_attn``)."""
+        segs = tuple(getattr(meta, "seg_lens", ()) or ())
+        if not (self.segments and self.page_layout is not None and segs):
+            return kv
+        jnp = self._jax.numpy
+        pt = self.page_layout.page_tokens
+        extra = sum(pt * ceil_div(int(s), pt) for s in segs)
+
+        def pad(a):
+            z = jnp.zeros(a.shape[:2] + (extra,) + a.shape[3:], a.dtype)
+            return jnp.concatenate([a, z], axis=2)
+
+        return tuple(pad(a) for a in kv)
+
     def pre_infer(self, meta: UserMeta) -> Tuple[Any, int, float]:
         jnp = self._jax.numpy
         n = self._round(meta.prefix_len)
@@ -265,6 +302,7 @@ class LiveExecutor:
         _, kv = self._prefill(self.params, toks)
         kv = self._jax.block_until_ready(kv)
         ms = (time.perf_counter() - t0) * 1e3
+        kv = self._pad_segments(kv, meta)
         return kv, kv_nbytes(kv), ms
 
     def rank_cached(self, meta: UserMeta, psi) -> Tuple[Any, float]:
@@ -332,9 +370,9 @@ class BatchedLiveExecutor(LiveExecutor):
     def __init__(self, model, params, store,
                  cost: Optional[GRCostModel] = None,
                  batching: Optional[BatchingConfig] = None,
-                 page_tokens: int = 0):
+                 page_tokens: int = 0, segments: bool = False):
         super().__init__(model, params, store, cost,
-                         page_tokens=page_tokens)
+                         page_tokens=page_tokens, segments=segments)
         self.batching = batching or BatchingConfig()
         self._warmed: set = set()
 
@@ -419,6 +457,7 @@ class BatchedLiveExecutor(LiveExecutor):
         outs = []
         for i in range(len(metas)):
             psi = tuple(a[:, i:i + 1] for a in kv)   # (L, 1, n, H, D)
+            psi = self._pad_segments(psi, metas[i])
             outs.append((psi, kv_nbytes(psi)))
         return outs, ms
 

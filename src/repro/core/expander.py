@@ -77,7 +77,7 @@ class DRAMExpander:
         self.stats = {"spills": 0, "reloads": 0, "redundant_avoided": 0,
                       "dram_hits": 0, "dram_misses": 0, "lru_evictions": 0,
                       "reload_throttled": 0, "unfit_dropped": 0,
-                      "handoffs": 0}
+                      "rejected_spills": 0, "handoffs": 0}
 
     # --- spill (after consumption, off the critical path) -------------------
     def spill(self, entry: CacheEntry) -> bool:
@@ -90,6 +90,14 @@ class DRAMExpander:
             if entry.user_id in self.entries:
                 self.entries.move_to_end(entry.user_id)
                 return True
+            return False
+        if entry.nbytes > self.cfg.dram_budget_bytes:
+            # an entry that can never fit must be rejected UP FRONT,
+            # without disturbing the tier: letting it reach the LRU
+            # loop would evict every resident psi before the final fit
+            # check rejects it anyway (mirror of the HBM window's
+            # rejected_inserts)
+            self.stats["rejected_spills"] += 1
             return False
         if isinstance(entry.value, PagedPsi):
             # psi leaves the pool: the DRAM copy is a dense host pytree,
@@ -188,7 +196,7 @@ class DRAMExpander:
         if e is not None:
             e.reload_tokens = None
             evicted = hbm.insert(user_id, e.value, e.nbytes, now,
-                                 prefix_len=e.prefix_len)
+                                 prefix_len=e.prefix_len, spans=e.spans)
             if hbm.resident(user_id) is None:
                 # the window rejected the promotion: the reload is
                 # wasted, but a TRANSIENTLY rejected copy (zombie-

@@ -161,11 +161,16 @@ class PagedPsi:
     """
 
     def __init__(self, table: np.ndarray, n_tokens: int, layout: PageLayout,
-                 buffer: Optional[np.ndarray]):
+                 buffer: Optional[np.ndarray], spans=None):
         self.table = np.asarray(table, np.int32)
         self.n_tokens = int(n_tokens)
         self.layout = layout
         self.buffer = buffer
+        # beyond-prefix reuse: ordered (global_start, valid_len) cached
+        # spans; None for prefix-only psi.  Each span occupies whole
+        # pages (``n_tokens`` is the padded total), so the consumer can
+        # derive the kernel's page_pos/page_valid tables from it.
+        self.spans = tuple(spans) if spans else None
 
     @property
     def pages(self) -> List[int]:

@@ -117,7 +117,11 @@ class AdmitAllTrigger(SequenceAwareTrigger):
     def admit(self, meta: UserMeta, instance: str, now: float) -> Decision:
         d = self.assess(meta)
         self.stats["admitted"] += 1
-        return Decision(True, True, d.est_full_ms, "admit-all")
+        # the REAL risk verdict rides along: rank-stage routing keys off
+        # Decision.at_risk, and the ablation only floods admission —
+        # hard-coding True here would silently turn every short-sequence
+        # request into keyed special-pool traffic as well
+        return Decision(True, d.at_risk, d.est_full_ms, "admit-all")
 
 
 @register_trigger("never")
@@ -181,6 +185,12 @@ class RandomSpecialRouter(AffinityRouter):
             # the live topology, not a construction-time snapshot: host
             # churn must never leave departed instances routable
             specials = self.topology.all_special()
+            if not specials:
+                # churn emptied the special pool: degrade to the
+                # normal-pool path (AffinityRouter's discipline) — there
+                # is nobody left to rendezvous at, which must mean a
+                # fallback rank, never a crash on the empty modulus
+                return self.route_normal(request)
             self.stats["special"] += 1
             hv = _h(f"random:{self._seed}:{request.stage.value}:{key}")
             return specials[hv % len(specials)]

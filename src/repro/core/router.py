@@ -158,6 +158,12 @@ class AffinityRouter:
         if key is not None:
             self.stats["special"] += 1
             return self.route_key(key)
+        return self.route_normal(request)
+
+    def route_normal(self, request: Request) -> str:
+        """The normal-pool LB path: unkeyed traffic, and the
+        degradation target when churn leaves no special instance for
+        keyed traffic to rendezvous at."""
         self.stats["normal"] += 1
         host = self.topology.owner(request.user.user_id)
         pool = host.normal or self.topology.all_normal()

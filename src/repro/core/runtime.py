@@ -74,7 +74,7 @@ from .policies import make_expander, make_router, make_trigger
 from .topology import (ClusterTopology, Host, make_prefill_hosts,
                        stripe_hosts)
 from .trigger import TriggerConfig
-from .types import HitKind, RankResult, Request, UserMeta
+from .types import HitKind, RankResult, Request, UserMeta, reuse_spans
 
 
 # ---------------------------------------------------------------------------
@@ -103,6 +103,14 @@ class ClusterConfig:
     max_batch: int = 0                   # >0 -> continuous micro-batching
     batch_wait_ms: float = 2.0           # aggregator flush deadline
     page_tokens: int = 0                 # >0 -> paged HBM window (pool pages)
+    # beyond-prefix segment reuse (RcLLM): the side path computes and
+    # caches the prefix PLUS candidate-independent interior segments
+    # (``UserMeta.seg_lens``) as a span-aware paged entry; ranking then
+    # reuses every cached span and computes only the truly fresh
+    # tokens.  Requires page_tokens > 0 (spans live in the page pool).
+    # Disabled (the default) every trace is bit-identical to the
+    # prefix-only path.
+    segments: bool = False
     hosts: int = 1                       # servers the pools stripe over
     rebalance: str = "handoff"           # churn policy: handoff | none
     # >0 -> disaggregated prefill: dedicate N hosts (one pooled prefill
@@ -172,6 +180,17 @@ def as_relay_config(cfg) -> RelayConfig:
                     f"SimConfig shim), got {type(cfg).__name__}")
 
 
+def _reused_tokens(entry) -> int:
+    """Cached tokens a hit actually reuses: the sum of the entry's span
+    lengths (true valid tokens, not the page-padded total) for a
+    segmented entry, the prefix length otherwise."""
+    if entry is None:
+        return 0
+    if entry.spans:
+        return int(sum(ln for _, ln in entry.spans))
+    return int(entry.prefix_len)
+
+
 # ---------------------------------------------------------------------------
 # per-request trace record
 # ---------------------------------------------------------------------------
@@ -191,6 +210,12 @@ class Record:
     rank_ms: float = 0.0       # ranking compute
     queue_ms: float = 0.0      # slot / PCIe queueing
     hit: str = "miss"
+    # beyond-prefix reuse accounting: cached tokens this rank actually
+    # reused (prefix + interior segments on a hit; 0 on a miss) and the
+    # request's total context (prefix + incr) — summary() reduces the
+    # pair to the fleet-wide reused-token fraction
+    reused_tokens: int = 0
+    ctx_tokens: int = 0
 
     @property
     def e2e_ms(self) -> float:
@@ -212,6 +237,7 @@ class InstanceConfig:
     pcie_concurrency: int = 4
     expander_policy: str = "dram"
     page_layout: Optional[PageLayout] = None   # paged HBM window geometry
+    segments: bool = False              # span-aware (beyond-prefix) entries
     role: str = "rank"                  # "rank" | "prefill" (side path only)
 
 
@@ -232,6 +258,7 @@ class InstanceRuntime:
         self.name = cfg.name
         self.special = cfg.special
         self.role = cfg.role
+        self.segments = cfg.segments
         self.executor = executor
         # a live executor declares the page geometry of ITS model; the
         # cluster-level layout (from the cost model) covers sim mode.
@@ -289,8 +316,13 @@ class InstanceRuntime:
         if psi is None:
             self.hbm.touch(meta.user_id, now)
             return
+        # span-aware entries: the side path cached the prefix PLUS the
+        # candidate-independent interior segments — record their layout
+        # so the paged window pads each span to whole pages and ranking
+        # knows the true reused-token count
+        spans = reuse_spans(meta) if self.segments else None
         evicted = self.hbm.insert(meta.user_id, psi, nbytes, now,
-                                  prefix_len=meta.prefix_len)
+                                  prefix_len=meta.prefix_len, spans=spans)
         if meta.user_id not in self.hbm:
             # oversized psi rejected by the window (surfaced via
             # hbm.stats["rejected_inserts"]): the runtime must treat
@@ -461,11 +493,22 @@ class RelayRuntime:
         # cross-host to the owner — the shipping delay is priced into
         # the trigger's slack test (a late psi is a useless psi)
         self.disagg = cl.prefill_hosts > 0
+        if cl.segments and cl.page_tokens <= 0:
+            # spans live in the page pool (each span pads to whole
+            # pages); a dense window has no span-addressable storage
+            raise ValueError("ClusterConfig.segments requires a paged "
+                             "HBM window (page_tokens > 0)")
         self.trigger = make_trigger(
             cl.trigger_policy, self.cfg.trigger, cost,
             ship_ms=((lambda m: cost.psi_transfer_ms(m.prefix_len,
                                                      cross_host=True))
                      if self.disagg else None))
+        if cl.segments:
+            # admission scores TOTAL reusable tokens (prefix + interior
+            # segments), not just the prefix — the side path computes
+            # and caches every span, so the slack deadline prices all
+            # of them
+            self.trigger.segments = True
         # risk test used for rank-stage routing; ablations may decouple
         # it from the admission trigger (e.g. admit-all + true-risk routes)
         self.route_trigger = self.trigger
@@ -492,7 +535,8 @@ class RelayRuntime:
                         if cl.max_batch > 0 else None)
             factory = (lambda name, batching=batching:
                        get_executor("sim")(cost, batching=batching,
-                                           page_tokens=cl.page_tokens))
+                                           page_tokens=cl.page_tokens,
+                                           segments=cl.segments))
         self._factory = factory
         self._layout = (PageLayout.from_model_config(cost.cfg,
                                                      cl.page_tokens)
@@ -628,7 +672,7 @@ class RelayRuntime:
             pcie_concurrency=cl.pcie_concurrency,
             expander_policy=cl.expander_policy,
             page_layout=None if role == "prefill" else self._layout,
-            role=role)
+            segments=cl.segments, role=role)
         icfg.dram.dram_budget_bytes = (0.0 if role == "prefill"
                                        else cl.dram_budget_bytes)
         icfg.dram.max_reload_concurrency = cl.pcie_concurrency
@@ -914,7 +958,8 @@ class RelayRuntime:
                 self.migration["dropped"] += 1
             return
         evicted = inst.hbm.insert(entry.user_id, entry.value, entry.nbytes,
-                                  t, prefix_len=entry.prefix_len)
+                                  t, prefix_len=entry.prefix_len,
+                                  spans=entry.spans)
         landed = inst.hbm.entries.get(entry.user_id)
         if landed is not None:
             # the entry continues its lifecycle: a consumed psi must not
@@ -933,7 +978,8 @@ class RelayRuntime:
 
     def _on_arrival(self, t: float, meta: UserMeta, sink=None) -> None:
         rec = Record(user_id=meta.user_id, t_arrival=t,
-                     prefix_len=meta.prefix_len)
+                     prefix_len=meta.prefix_len,
+                     ctx_tokens=meta.prefix_len + meta.incr_len)
         pp = self.cfg.pipeline
         if self.cfg.cluster.relay_enabled:
             signal, target = self.open_lifecycle(meta, t)
@@ -1210,6 +1256,8 @@ class RelayRuntime:
         result = inst.exec_rank(job["req"], action, entry, comp, t)
         rec.rank_ms = comp["rank"]
         rec.hit = result.hit.value
+        if result.hit != HitKind.MISS_FALLBACK:
+            rec.reused_tokens = _reused_tokens(entry)
         self.schedule(t + comp["rank"] / 1e3, "rank_done", inst=inst,
                       job=job, result=result)
 
@@ -1226,6 +1274,8 @@ class RelayRuntime:
         hit, psi = inst.classify_rank(meta.user_id, action, entry,
                                       rec.load_ms)
         job["hit"] = hit
+        if hit != HitKind.MISS_FALLBACK:
+            rec.reused_tokens = _reused_tokens(entry)
         work = PendingRank(user_id=meta.user_id, psi=psi,
                            prefix_len=meta.prefix_len, meta=meta,
                            payload=job)
@@ -1353,8 +1403,9 @@ class RelayRuntime:
         self.migration["cross_host" if cross else "intra_host"] += 1
         self.migration["ms"] += ms
         from .cache import CacheEntry
+        spans = (reuse_spans(meta) if self.cfg.cluster.segments else None)
         entry = CacheEntry(meta.user_id, psi, int(nbytes), t,
-                           prefix_len=meta.prefix_len)
+                           prefix_len=meta.prefix_len, spans=spans)
         self.schedule(arrival, "handoff_done", target=target,
                       entry=entry, tier="hbm")
 
@@ -1568,6 +1619,12 @@ class RelayRuntime:
                 [r.rank_ms for r in self.records], 99)),
             "special_util": self._util(self.special, dur),
             "normal_util": self._util(self.normal, dur),
+            # beyond-prefix reuse: fraction of all context tokens served
+            # from cache (prefix-only paths reuse at most the prefix;
+            # segment reuse adds the interior spans on every hit)
+            "reused_frac": (sum(r.reused_tokens for r in self.records)
+                            / max(sum(r.ctx_tokens for r in self.records),
+                                  1)),
         }
         if self.prefill:
             # disaggregated deployments report the side-path hosts too:

@@ -100,8 +100,16 @@ class SequenceAwareTrigger:
         # the slack test then admits only when pre-infer AND the
         # shipment both fit the retrieval/preprocess window.
         self.ship_estimator = None
+        # segment-aware value scoring (beyond-prefix reuse): when the
+        # runtime flips this on, admission scores the TOTAL reusable
+        # tokens (prefix + candidate-independent interior segments),
+        # not just the prefix — the side path computes and caches every
+        # reusable span, so the slack deadline must price all of them
+        self.segments = False
         self.stats = {"assessed": 0, "at_risk": 0, "admitted": 0,
-                      "rate_limited": 0, "slack_rejected": 0}
+                      "rate_limited": 0, "rate_limited_pool": 0,
+                      "rate_limited_instance": 0, "slack_rejected": 0,
+                      "reusable_tokens_admitted": 0}
 
     # --- side-path risk test (metadata only) -------------------------------
     def assess(self, meta: UserMeta) -> Decision:
@@ -117,13 +125,25 @@ class SequenceAwareTrigger:
         return Decision(False, at_risk, est,
                         "at-risk" if at_risk else "safe")
 
+    # --- segment-aware value score (beyond-prefix reuse) ---------------------
+    def reusable_tokens(self, meta: UserMeta) -> int:
+        """Total cacheable tokens for this request: the prefix, plus —
+        under segment reuse — every candidate-independent interior
+        segment.  This is the value score admission prices: more
+        reusable tokens means more rank-time saved per admitted psi."""
+        toks = int(meta.prefix_len)
+        if self.segments:
+            toks += int(sum(getattr(meta, "seg_lens", ()) or ()))
+        return toks
+
     # --- admission ----------------------------------------------------------
     def admit(self, meta: UserMeta, instance: str, now: float) -> Decision:
         d = self.assess(meta)
         if not d.at_risk:
             return Decision(False, False, d.est_full_ms, "safe")
+        reuse = self.reusable_tokens(meta)
         if self.cfg.slack_budget_ms:
-            pre_est = self.cost.pre_infer_ms(meta.prefix_len)
+            pre_est = self.cost.pre_infer_ms(reuse)
             if self.ship_estimator is not None:
                 # psi must land at the OWNER before ranking arrives:
                 # the shipping hop is on the relay's deadline path
@@ -137,14 +157,22 @@ class SequenceAwareTrigger:
             bucket = TokenBucket(self.instance_rates.get(instance,
                                                          self.q_admit))
             self._instance_buckets[instance] = bucket
-        if not self._pool_bucket.try_take(now):
-            self.stats["rate_limited"] += 1
-            return Decision(False, True, d.est_full_ms, "pool-rate-limited")
+        # instance bucket first: an instance-rate rejection must not
+        # burn a pool token (pool-wide under-admission under
+        # per-instance contention); the pool take refunds the instance
+        # token on ITS rejection for the same reason
         if not bucket.try_take(now):
             self.stats["rate_limited"] += 1
+            self.stats["rate_limited_instance"] += 1
             return Decision(False, True, d.est_full_ms,
                             "instance-rate-limited")
+        if not self._pool_bucket.try_take(now):
+            bucket.tokens = min(bucket.burst, bucket.tokens + 1.0)
+            self.stats["rate_limited"] += 1
+            self.stats["rate_limited_pool"] += 1
+            return Decision(False, True, d.est_full_ms, "pool-rate-limited")
         self.stats["admitted"] += 1
+        self.stats["reusable_tokens_admitted"] += reuse
         return Decision(True, True, d.est_full_ms, "admitted")
 
     # --- derived quantities (paper §3.2 sanity check) ------------------------

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 HASH_KEY = "consistency-hash-key"
 
@@ -43,6 +43,38 @@ class UserMeta:
     incr_len: int = 64         # short-term behaviours + cross features
     dim: int = 256             # feature/embedding dimension
     n_items: int = 512         # candidate items reaching ranking
+    # beyond-prefix reuse (RcLLM): lengths of candidate-independent
+    # interior segments WITHIN the incr region — behaviour runs whose
+    # psi does not depend on the candidate items, so the side path can
+    # compute and cache them alongside the prefix.  Empty = prefix-only
+    # (the default; every non-segment workload leaves this untouched).
+    # sum(seg_lens) <= incr_len; the remainder is fresh critical-path
+    # tokens.
+    seg_lens: Tuple[int, ...] = ()
+
+
+def reuse_spans(meta: "UserMeta"
+                ) -> Optional[Tuple[Tuple[int, int], ...]]:
+    """Deterministic (global_start, length) layout of a user's reusable
+    spans: the prefix plus the candidate-independent interior segments,
+    the latter interleaved with the fresh incr tokens (an equal fresh
+    gap precedes each segment; the remainder — including the items —
+    trails the last one).  Returns None for prefix-only users, so every
+    non-segment path is untouched."""
+    segs = tuple(int(s) for s in (meta.seg_lens or ()))
+    if not segs:
+        return None
+    spans = []
+    if meta.prefix_len:
+        spans.append((0, int(meta.prefix_len)))
+    fresh = max(int(meta.incr_len) - sum(segs), 0)
+    gap = fresh // (len(segs) + 1)
+    cursor = int(meta.prefix_len)
+    for ln in segs:
+        cursor += gap
+        spans.append((cursor, ln))
+        cursor += ln
+    return tuple(spans)
 
 
 @dataclasses.dataclass

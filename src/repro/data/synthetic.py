@@ -102,6 +102,36 @@ class UserBehaviorStore:
 
 
 # ---------------------------------------------------------------------------
+# beyond-prefix segments (candidate-independent incr spans)
+# ---------------------------------------------------------------------------
+
+
+def segment_lens(user_id: int, incr_len: int, *, salt: int = 7,
+                 max_segments: int = 2) -> Tuple[int, ...]:
+    """Deterministic per-user candidate-independent segment lengths
+    inside the incr region (RcLLM beyond-prefix reuse).  Drawn from a
+    dedicated hash-seeded RNG keyed on the user id — NEVER from a
+    stream's arrival/popularity RNG — so enabling segments leaves every
+    existing trace's draws untouched.  Total segment mass is 40–75% of
+    ``incr_len`` split across 1..``max_segments`` runs; the remainder
+    stays fresh critical-path tokens."""
+    if incr_len < 8:
+        return ()
+    rng = np.random.default_rng(
+        np.random.SeedSequence([user_id & 0x7FFFFFFF, 7000 + salt]))
+    k = int(rng.integers(1, max_segments + 1))
+    total = int(incr_len * rng.uniform(0.4, 0.75))
+    if total < k:
+        return ()
+    if k > 1:
+        cuts = np.sort(rng.integers(1, total, size=k - 1))
+    else:
+        cuts = np.array([], dtype=np.int64)
+    parts = np.diff(np.concatenate([[0], cuts, [total]]))
+    return tuple(int(p) for p in parts if p > 0)
+
+
+# ---------------------------------------------------------------------------
 # request popularity (WHO arrives)
 # ---------------------------------------------------------------------------
 
@@ -254,28 +284,35 @@ def capacity_stream(L: int, qps: float, duration_s: float, *,
                     skew: float = 0.0, population: int = 2_000_000,
                     arrival: str = "poisson", seed: int = 0,
                     dim: int = 256, n_items: int = 512,
-                    incr_len: int = 64, arrival_kw: Optional[Dict] = None
+                    incr_len: int = 64, arrival_kw: Optional[Dict] = None,
+                    segments: bool = False
                     ) -> Iterator[Tuple[float, UserMeta]]:
     """The capacity-harness request stream: WHO (Zipf(skew) popularity
     over ``population`` users) × WHEN (a named arrival process at mean
     ``qps``), at a fixed request profile (prefix ``L``, ``n_items``
     candidates).  Yields ``(t, UserMeta)`` and feeds ``ClusterSim.run``
-    unchanged."""
+    unchanged.  ``segments=True`` attaches per-user candidate-
+    independent ``seg_lens`` from a separate hash RNG (the arrival and
+    popularity draws are identical either way)."""
     rng = np.random.default_rng(seed)
     pop = ZipfPopularity(population, skew)
     for t in arrival_times(arrival, qps, duration_s, rng=rng,
                            **(arrival_kw or {})):
-        yield t, UserMeta(user_id=pop.sample_one(rng), prefix_len=L,
-                          incr_len=incr_len, dim=dim, n_items=n_items)
+        uid = pop.sample_one(rng)
+        segs = segment_lens(uid, incr_len) if segments else ()
+        yield t, UserMeta(user_id=uid, prefix_len=L, incr_len=incr_len,
+                          dim=dim, n_items=n_items, seg_lens=segs)
 
 
 def request_stream(store: UserBehaviorStore, qps: float, duration_s: float,
                    *, seed: int = 0, refresh_prob: float = 0.0,
                    refresh_horizon: int = 256, long_only: bool = False,
-                   min_len: int = 0
+                   min_len: int = 0, segments: bool = False
                    ) -> Iterator[Tuple[float, UserMeta]]:
     """Poisson arrivals; with probability ``refresh_prob`` a request is a
-    rapid-refresh repeat of a recent user (drives DRAM-tier reuse)."""
+    rapid-refresh repeat of a recent user (drives DRAM-tier reuse).
+    ``segments=True`` attaches hash-derived per-user ``seg_lens``
+    without consuming any stream RNG draws."""
     rng = np.random.default_rng(seed)
     t = 0.0
     recent: list = []
@@ -288,4 +325,8 @@ def request_stream(store: UserBehaviorStore, qps: float, duration_s: float,
             if min_len and store.prefix_len(uid) < min_len:
                 continue
         recent.append(uid)
-        yield t, store.meta(uid)
+        m = store.meta(uid)
+        if segments:
+            m = dataclasses.replace(
+                m, seg_lens=segment_lens(uid, m.incr_len))
+        yield t, m

@@ -195,6 +195,183 @@ def paged_prefix_rank_attn(q, k_pages, v_pages, page_table, prefix_lens,
     )(q, k_new, v_new, partial)
 
 
+def _segment_pages_kernel(table_ref, pos_ref, valid_ref, q_ref, qpos_ref,
+                          k_ref, v_ref, o_ref, acc_ref, *, scale, inv_n,
+                          page_tokens, n_pages):
+    """Segment phase 1: accumulate the CACHED-SPAN contribution, one
+    page per step.  Unlike the prefix kernel, pages carry arbitrary
+    token spans: ``pos_ref[b, ip]`` is the page's global position base
+    and ``valid_ref[b, ip]`` its resident token count, so the mask is
+    per-(query, key) — residency AND global-position causality (a
+    fresh token between two cached segments must not see the later
+    segment; items' positions exceed every cached position, so the
+    same causal test covers them)."""
+    ip = pl.program_id(3)
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    b = pl.program_id(0)
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, :, 0].astype(jnp.float32)     # (page_tokens, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+    a = jax.nn.silu(logits) * inv_n
+    bq = q.shape[0]
+    j = jax.lax.broadcasted_iota(jnp.int32, (bq, page_tokens), 1)
+    qp = qpos_ref[0].reshape(bq, 1)            # global query positions
+    resident = j < valid_ref[b, ip]
+    causal = pos_ref[b, ip] + j <= qp
+    a = jnp.where(jnp.logical_and(resident, causal), a, 0.0)
+    acc_ref[...] += jax.lax.dot_general(
+        a, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ip == n_pages - 1)
+    def _done():
+        o_ref[0, 0] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_items", "bq", "bk", "n_total", "interpret"))
+def segment_rank_attn(q, k_pages, v_pages, page_table, page_pos,
+                      page_valid, q_pos, k_new, v_new, *, n_items: int,
+                      bq: int = 128, bk: int = 0, n_total: float = None,
+                      interpret: bool = False):
+    """Rank with psi gathered from an ordered list of cached SPANS
+    (beyond-prefix segment reuse, RcLLM-style): the prefix plus any
+    candidate-independent interior segments live in the page pool; the
+    fresh tokens interleave between them at their global positions.
+
+    q:                (B, H, Sq, D) FRESH tokens (fresh incr + items)
+    k_pages, v_pages: (N + 1, page_tokens, H, D) pool buffers — row N
+                      is the all-zero null page used to pad tables
+    page_table:       (B, n_pages) int32 page ids over the row's cached
+                      spans, in span order (pad with the null page)
+    page_pos:         (B, n_pages) int32 global position of each page's
+                      first token (0 for null-padded slots)
+    page_valid:       (B, n_pages) int32 resident tokens per page
+                      (0 for null-padded slots)
+    q_pos:            (B, Sq) int32 global positions of the fresh
+                      tokens, strictly increasing per row; the last
+                      ``n_items`` are the candidate items
+    k_new, v_new:     (B, H, Sq, D) fresh keys/values (same positions)
+
+    Phase 1 walks the span pages with the residency + global-position
+    causal mask; phase 2 is the UNCHANGED dense new-token kernel (the
+    fresh tokens share one position array, so local causality equals
+    global causality), chained onto the phase-1 partials.  With a
+    single span at positions [0, prefix_len) and
+    ``q_pos = prefix_len + arange(Sq)`` every mask bit equals the
+    prefix kernel's, so the degenerate call is bit-identical to
+    ``paged_prefix_rank_attn`` (tests/test_kernels.py).
+    """
+    B, H, Sq, D = q.shape
+    page_tokens = k_pages.shape[1]
+    n_pages = page_table.shape[1]
+    bq = min(bq, Sq)
+    bk = min(bk or page_tokens, Sq)
+    assert Sq % bq == 0 and Sq % bk == 0, (Sq, bq, bk)
+    nq, nk = Sq // bq, Sq // bk
+    scale = 1.0 / np.sqrt(D)
+    inv_n = 1.0 / (n_total or (n_pages * page_tokens + Sq))
+
+    # --- phase 1: cached spans via the segment-table index map ------------
+    grid1 = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,           # page_table, page_pos, page_valid
+        grid=(B, H, nq, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D),
+                         lambda b, h, iq, ip, tr, pr, vr: (b, h, iq, 0)),
+            pl.BlockSpec((1, bq),
+                         lambda b, h, iq, ip, tr, pr, vr: (b, iq)),
+            pl.BlockSpec((1, page_tokens, 1, D),
+                         lambda b, h, iq, ip, tr, pr, vr:
+                         (tr[b, ip], 0, h, 0)),
+            pl.BlockSpec((1, page_tokens, 1, D),
+                         lambda b, h, iq, ip, tr, pr, vr:
+                         (tr[b, ip], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, iq, ip, tr, pr, vr:
+                               (b, h, iq, 0)),
+        scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32)],
+    )
+    kernel1 = functools.partial(
+        _segment_pages_kernel, scale=scale, inv_n=inv_n,
+        page_tokens=page_tokens, n_pages=n_pages)
+    partial = pl.pallas_call(
+        kernel1, grid_spec=grid1,
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), jnp.float32),
+        interpret=interpret,
+    )(page_table, page_pos, page_valid, q, q_pos, k_pages, v_pages)
+
+    # --- phase 2: dense fresh tokens, identical to the prefix path --------
+    kernel2 = functools.partial(
+        _new_tokens_kernel, scale=scale, inv_n=inv_n, bq=bq, bk=bk,
+        n_incr=Sq - n_items, n_kv_blocks=nk)
+    return pl.pallas_call(
+        kernel2,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k_new, v_new, partial)
+
+
+def pack_segments(k_cached, v_cached, spans, page_tokens: int,
+                  n_pages: int = None):
+    """Test/reference helper: slice per-row cached tokens into span-
+    aware pool buffers, mimicking what the span-aware paged store does
+    at insert.  ``k_cached``/``v_cached`` are (B, H, C, D) with row
+    ``b``'s cached tokens packed contiguously in span order;
+    ``spans[b]`` is an ordered list of (global_start, length) pairs.
+    Every span pads to whole pages (the store's residency unit).
+    Returns (k_pages, v_pages, table, page_pos, page_valid) with the
+    all-zero null page as the last pool row."""
+    k_cached, v_cached = np.asarray(k_cached), np.asarray(v_cached)
+    B, H, C, D = k_cached.shape
+    per_row = [sum(-(-int(ln) // page_tokens) for _, ln in row)
+               for row in spans]
+    n_pages = n_pages or max(per_row)
+    total = sum(per_row)
+    kp = np.zeros((total + 1, page_tokens, H, D), k_cached.dtype)
+    vp = np.zeros_like(kp)
+    table = np.full((B, n_pages), total, np.int32)     # pad = null page
+    page_pos = np.zeros((B, n_pages), np.int32)
+    page_valid = np.zeros((B, n_pages), np.int32)
+    pid = 0
+    for b, row in enumerate(spans):
+        off = 0           # consumed cached tokens within this row
+        slot = 0
+        for start, ln in row:
+            for j in range(-(-int(ln) // page_tokens)):
+                lo, hi = j * page_tokens, min((j + 1) * page_tokens,
+                                              int(ln))
+                kp[pid, :hi - lo] = np.moveaxis(
+                    k_cached[b, :, off + lo:off + hi], 0, 1)
+                vp[pid, :hi - lo] = np.moveaxis(
+                    v_cached[b, :, off + lo:off + hi], 0, 1)
+                table[b, slot] = pid
+                page_pos[b, slot] = int(start) + lo
+                page_valid[b, slot] = hi - lo
+                pid += 1
+                slot += 1
+            off += int(ln)
+    return kp, vp, table, page_pos, page_valid
+
+
 def pack_pages(k_dense, v_dense, prefix_lens, page_tokens: int,
                n_pages: int = None):
     """Test/reference helper: slice dense per-row prefixes — (B, H, P,

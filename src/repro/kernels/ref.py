@@ -55,6 +55,46 @@ def prefix_rank_attn_ref(q, k, v, *, n_prefix: int, n_incr: int,
     return jnp.einsum("bhqk,bhkd->bhqd", a.astype(v.dtype), v)
 
 
+def segment_rank_attn_ref(q, k, v, *, q_pos, k_pos, n_items: int,
+                          n_total: float = None):
+    """Beyond-prefix (segment-reuse) ranking oracle.
+
+    The FULL interleaved sequence — cached spans and fresh tokens in
+    global position order — is ``k``/``v``: (B, H, S, D) with global
+    positions ``k_pos`` (B, S).  Queries are the fresh tokens only:
+    ``q`` (B, H, Sq, D) at positions ``q_pos`` (B, Sq), the last
+    ``n_items`` of which are candidate items.  Mask semantics:
+
+      * global-position causality — a fresh token attends every token
+        at or before its own position, so a fresh token between two
+        cached segments never sees the later segment;
+      * candidate items attend all non-item context + themselves ONLY
+        (the ``prefix_rank_attn_ref`` items rule, position-generalized).
+
+    With one cached span at positions [0, P) and fresh tokens at
+    [P, P+Sq) this reduces exactly to ``prefix_rank_attn_ref``.
+    """
+    B, H, Sq, D = q.shape
+    scale = 1.0 / np.sqrt(D)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    nt = n_total or k.shape[2]
+    a = jax.nn.silu(logits) / nt
+    qp = jnp.asarray(q_pos, jnp.int32)[:, :, None]      # (B, Sq, 1)
+    kp = jnp.asarray(k_pos, jnp.int32)[:, None, :]      # (B, 1, S)
+    causal = kp <= qp
+    if n_items:
+        is_item_q = (np.arange(Sq) >= Sq - n_items)[None, :, None]
+        first_item = jnp.asarray(q_pos, jnp.int32)[:, Sq - n_items]
+        is_item_k = kp >= first_item[:, None, None]
+        self_key = kp == qp
+        items_ok = jnp.where(is_item_q, (~is_item_k) | self_key, True)
+    else:
+        items_ok = True
+    mask = jnp.logical_and(causal, items_ok)
+    a = jnp.where(mask[:, None], a, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", a.astype(v.dtype), v)
+
+
 def decode_attn_ref(q, k, v):
     """Softmax flash-decode oracle (GQA).
 

@@ -46,6 +46,12 @@ def main(argv=None):
     ap.add_argument("--page-tokens", type=int, default=0,
                     help=">0 stores psi in a paged HBM pool and ranks "
                          "through the rank_with_pages path")
+    ap.add_argument("--segments", action="store_true",
+                    help="beyond-prefix reuse: the stream attaches per-"
+                         "user candidate-independent seg_lens and the "
+                         "side path caches them alongside the prefix "
+                         "(implies a paged window; defaults "
+                         "--page-tokens to 64 when unset)")
     ap.add_argument("--hosts", type=int, default=1,
                     help="stripe the instance pools over N hosts; keyed "
                          "traffic routes owner-map -> per-host ring")
@@ -54,6 +60,8 @@ def main(argv=None):
                          "dedicated hosts; psi ships cross-host to its "
                          "owning rank instance over the NIC fabric")
     args = ap.parse_args(argv)
+    if args.segments and not args.page_tokens:
+        args.page_tokens = 64  # segment spans live on the page grid
 
     cfg = get_config(args.arch, smoke=args.smoke and not args.sim)
     cost = GRCostModel(get_config(args.arch))
@@ -61,11 +69,14 @@ def main(argv=None):
     if args.sim:
         from repro.serving.simulator import run_sim
         store = UserBehaviorStore()
-        arr = request_stream(store, args.qps, args.requests / args.qps)
+        arr = request_stream(store, args.qps, args.requests / args.qps,
+                             segments=args.segments)
         s = run_sim(relay_config(
             trigger=TriggerConfig(n_instances=10),
             cluster=ClusterConfig(hosts=args.hosts,
-                                  prefill_hosts=args.prefill_hosts)),
+                                  prefill_hosts=args.prefill_hosts,
+                                  page_tokens=args.page_tokens,
+                                  segments=args.segments)),
             cost, arr)
         print(json.dumps(s, indent=1))
         return s
@@ -87,6 +98,7 @@ def main(argv=None):
                               else 0,
                               batch_wait_ms=args.batch_wait_ms,
                               page_tokens=args.page_tokens,
+                              segments=args.segments,
                               hosts=args.hosts,
                               prefill_hosts=args.prefill_hosts,
                               hbm_cache_bytes=hbm_bytes))
@@ -109,10 +121,11 @@ def main(argv=None):
             model, params, store, cost=cost,
             batching=BatchingConfig(max_batch=args.max_batch,
                                     max_wait_ms=args.batch_wait_ms),
-            page_tokens=args.page_tokens)
+            page_tokens=args.page_tokens, segments=args.segments)
         arrivals = []
         for i, (t, meta) in enumerate(request_stream(
-                store, args.qps, 1e9, refresh_prob=0.2)):
+                store, args.qps, 1e9, refresh_prob=0.2,
+                segments=args.segments)):
             if i >= args.requests:
                 break
             arrivals.append((t, meta))
@@ -144,10 +157,13 @@ def main(argv=None):
         return hits
     svc = RelayGRService(
         relay_cfg, cost,
-        executor_factory=lambda name: LiveExecutor(model, params, store))
+        executor_factory=lambda name: LiveExecutor(
+            model, params, store, page_tokens=args.page_tokens,
+            segments=args.segments))
     results = []
     for i, (t, meta) in enumerate(request_stream(
-            store, args.qps, 1e9, refresh_prob=0.2)):
+            store, args.qps, 1e9, refresh_prob=0.2,
+            segments=args.segments)):
         if i >= args.requests:
             break
         results.append(svc.submit(meta, now=t))

@@ -198,6 +198,27 @@ def test_knee_caps_degenerate_always_passing_criterion():
     assert HARD_CAP_QPS >= 1e6  # the real backstop is far out of reach
 
 
+def test_knee_grounds_bracket_when_seed_hi_fails():
+    """Regression: a service whose knee sits below every bisection
+    midpoint used to report knee_qps=0/best=0 without ever probing
+    ``lo`` — the bracket's lower bound was assumed, not measured.  A
+    capacity of 5.5 (just above the default lo=5) must be FOUND, and
+    the grounding probe at lo recorded."""
+    res = find_knee(_step_service(5.5), lambda s: s["ok"])
+    assert res.knee_qps >= 5.0, "lo passed but was never probed"
+    assert res.best == pytest.approx(5.0, abs=0.6)
+    assert any(q == pytest.approx(5.0) and ok for q, ok, _ in res.probes)
+
+
+def test_knee_reports_zero_when_even_lo_fails():
+    """When lo itself fails the criterion there is genuinely no
+    measured capacity: knee 0, and the lo probe is in the evidence."""
+    res = find_knee(_step_service(1.0), lambda s: s["ok"])
+    assert res.knee_qps == 0.0 and res.best == 0.0
+    assert any(q == pytest.approx(5.0) and not ok
+               for q, ok, _ in res.probes)
+
+
 # ---------------------------------------------------------------------------
 # capacity stream -> simulator
 # ---------------------------------------------------------------------------

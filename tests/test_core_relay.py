@@ -270,3 +270,109 @@ def test_slack_aware_admission():
     d = trig.admit(long, "i", 0.0)
     assert not d.admitted and d.reason == "insufficient-slack"
     assert trig.stats["slack_rejected"] == 1
+
+
+# ---------------------------------------------------------------------------
+# admission / cache-tier bugfix sweep regressions
+# ---------------------------------------------------------------------------
+
+
+AT_RISK = dict(prefix_len=8192)   # well past the default rank budget
+
+
+def test_instance_rate_limit_never_burns_pool_token():
+    """Regression: the pool bucket used to be debited BEFORE the
+    instance bucket was consulted, so hammering one saturated instance
+    silently drained pool-wide admission capacity.  With q_admit=1/inst
+    and a pool of 4, rejections on i0 must leave the other three
+    instances' admissions intact."""
+    cfg = TriggerConfig(q_m=1.0, m_slots=1, r2=1.0, n_instances=4)
+    trig = SequenceAwareTrigger(cfg, COST)
+    assert trig.q_admit == pytest.approx(1.0)
+    assert trig.q_max == pytest.approx(4.0)
+    got = [trig.admit(UserMeta(user_id=i, **AT_RISK), "i0", 0.0).admitted
+           for i in range(5)]
+    assert got == [True, False, False, False, False]
+    assert trig.stats["rate_limited_instance"] == 4
+    assert trig.stats["rate_limited_pool"] == 0
+    # the four instance-level rejections burned NO pool tokens: every
+    # other instance still admits from its own burst
+    for inst in ("i1", "i2", "i3"):
+        d = trig.admit(UserMeta(user_id=hash(inst), **AT_RISK), inst, 0.0)
+        assert d.admitted, f"{inst} starved by i0's rejections"
+    assert trig.stats["admitted"] == 4
+    assert trig.stats["rate_limited"] == 4
+
+
+def test_pool_rejection_refunds_instance_token():
+    """The symmetric leak: a pool-level rejection must hand the already
+    taken instance token back, or per-instance capacity erodes under
+    pool-wide contention."""
+    cfg = TriggerConfig(q_m=2.0, m_slots=1, r2=0.01, n_instances=100)
+    trig = SequenceAwareTrigger(cfg, COST)
+    assert trig.q_max == pytest.approx(2.0)   # n_special == 1
+    assert trig.admit(UserMeta(user_id=1, **AT_RISK), "a", 0.0).admitted
+    assert trig.admit(UserMeta(user_id=2, **AT_RISK), "b", 0.0).admitted
+    d = trig.admit(UserMeta(user_id=3, **AT_RISK), "a", 0.0)
+    assert not d.admitted and d.reason == "pool-rate-limited"
+    assert trig.stats["rate_limited_pool"] == 1
+    assert trig._instance_buckets["a"].tokens == pytest.approx(1.0), \
+        "pool rejection must refund the instance token"
+
+
+def test_oversized_spill_rejected_up_front():
+    """Deterministic core of the property below (runs even where
+    hypothesis is unavailable)."""
+    exp = DRAMExpander(ExpanderConfig(dram_budget_bytes=100))
+    for uid in range(3):
+        assert exp.spill(_entry(uid, 30))
+    assert not exp.spill(_entry(99, 101))
+    assert list(exp.entries) == [0, 1, 2], "doomed spill disturbed the tier"
+    assert exp.stats["lru_evictions"] == 0
+    assert exp.stats["rejected_spills"] == 1
+
+
+@given(st.lists(st.tuples(st.integers(0, 20), st.integers(1, 30)),
+                min_size=1, max_size=40),
+       st.integers(101, 10 ** 6))
+def test_oversized_spill_never_drains_tier(ops, big):
+    """Regression (mirror of the HBM rejected_inserts fix): a spill
+    that can NEVER fit the DRAM budget must be rejected up front — the
+    old path LRU-evicted every resident psi before the final fit check
+    bounced the entry anyway."""
+    exp = DRAMExpander(ExpanderConfig(dram_budget_bytes=100))
+    for uid, nbytes in ops:
+        exp.spill(_entry(uid, nbytes))
+    resident = list(exp.entries)
+    used, evictions = exp.used_bytes, exp.stats["lru_evictions"]
+    assert not exp.spill(_entry(999, big))
+    assert list(exp.entries) == resident, "doomed spill disturbed the tier"
+    assert exp.used_bytes == used
+    assert exp.stats["lru_evictions"] == evictions
+    assert exp.stats["rejected_spills"] == 1
+
+
+def test_admit_all_reports_real_risk():
+    """Regression: the admit-all ablation used to hard-code
+    at_risk=True, silently turning every short-sequence request into
+    keyed special-pool traffic — the ablation floods ADMISSION only."""
+    from repro.core.policies import AdmitAllTrigger
+    trig = AdmitAllTrigger(TriggerConfig(), COST)
+    d = trig.admit(UserMeta(user_id=1, prefix_len=64), "i", 0.0)
+    assert d.admitted and not d.at_risk
+    d = trig.admit(UserMeta(user_id=2, **AT_RISK), "i", 0.0)
+    assert d.admitted and d.at_risk
+
+
+def test_segment_value_score_counts_interior_segments():
+    """Beyond-prefix reuse: with the segments flag on, admission prices
+    the TOTAL reusable tokens (prefix + candidate-independent interior
+    segments), not just the prefix."""
+    trig = SequenceAwareTrigger(TriggerConfig(), COST)
+    meta = UserMeta(user_id=1, prefix_len=2048, incr_len=64,
+                    seg_lens=(24, 16))
+    assert trig.reusable_tokens(meta) == 2048   # disabled: prefix only
+    trig.segments = True
+    assert trig.reusable_tokens(meta) == 2048 + 40
+    assert trig.admit(meta, "i", 0.0).admitted
+    assert trig.stats["reusable_tokens_admitted"] == 2088

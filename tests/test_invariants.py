@@ -8,6 +8,7 @@ shipping without tripping a single suite.  This harness closes that
 hole: hypothesis samples random cluster configs across the full matrix
 
     hosts x page_tokens x batched x churn events x prefill_hosts
+    x segments (beyond-prefix span reuse over the paged window)
 
 plus timed arrival streams (repeat visitors for reuse, uniques for
 window pressure, mixed prefix lengths), runs the virtual-clock sim and
@@ -35,6 +36,7 @@ import numpy as np
 from _hyp import given, settings, st
 from repro.core import (ClusterConfig, GRCostModel, TriggerConfig, UserMeta,
                         relay_config)
+from repro.data.synthetic import segment_lens
 from repro.models import get_config
 from repro.serving.simulator import ClusterSim
 
@@ -64,6 +66,9 @@ CONFIGS = st.fixed_dictionaries({
     "qps": st.sampled_from([40.0, 120.0]),
     "n": st.integers(40, 80),
     "seed": st.integers(0, 10 ** 6),
+    # beyond-prefix segment reuse rides the paged window only; the flag
+    # is a no-op when page_tokens samples 0 (see _build)
+    "segments": st.booleans(),
 })
 
 
@@ -83,17 +88,24 @@ def _stream(n: int, qps: float, seed: int):
                else int(rng.integers(0, 10 ** 9)))
         out.append((t, UserMeta(
             user_id=uid,
-            prefix_len=PREFIX_LENS[uid % len(PREFIX_LENS)])))
+            prefix_len=PREFIX_LENS[uid % len(PREFIX_LENS)],
+            # inert annotation unless the config samples segments=True
+            seg_lens=segment_lens(uid, 64))))
     return out
 
 
 def _build(p) -> ClusterSim:
+    # segments require a paged window; the sampled flag is a no-op on
+    # the dense-store configs (other tests pass 5-key dicts — default
+    # to off for them)
+    segments = p.get("segments", False) and p["page_tokens"] > 0
     cfg = relay_config(
         trigger=_trigger(),
         cluster=ClusterConfig(
             hbm_cache_bytes=HBM, dram_budget_bytes=p["dram"],
             hosts=p["hosts"], prefill_hosts=p["prefill_hosts"],
-            page_tokens=p["page_tokens"], max_batch=p["max_batch"]))
+            page_tokens=p["page_tokens"], max_batch=p["max_batch"],
+            segments=segments))
     return ClusterSim(cfg, COST)
 
 

@@ -9,8 +9,9 @@ import pytest
 from repro.kernels import ops, ref
 from repro.kernels.decode_attn import decode_attn
 from repro.kernels.hstu_attn import hstu_attn
-from repro.kernels.paged_prefix_attn import (pack_pages,
-                                             paged_prefix_rank_attn)
+from repro.kernels.paged_prefix_attn import (pack_pages, pack_segments,
+                                             paged_prefix_rank_attn,
+                                             segment_rank_attn)
 from repro.kernels.prefix_rank_attn import prefix_rank_attn
 
 RNG = np.random.default_rng(7)
@@ -138,6 +139,141 @@ def test_paged_rank_attn_matches_oracle():
                                  interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                **TOL[jnp.float32])
+
+
+def _segment_case(patterns, n_items, pt, dtype, seed=11, n_pages=None):
+    """Build matched interleaved inputs from per-row chunk patterns.
+
+    ``patterns[b]`` is an ordered list of ('c', ln) cached-span /
+    ('f', ln) fresh-token chunks; every row must carry the same total
+    fresh count Sq and end with at least ``n_items`` fresh tokens (the
+    candidate items occupy the sequence tail).  Returns the fresh-token
+    q/k/v, the span-aware pool pack, the FULL dense interleaved
+    sequence (positions 0..S_b-1 per row, padded rows masked by a
+    sentinel position) and the position arrays — everything both the
+    kernel and the dense interleaved oracle need."""
+    rng = np.random.default_rng(seed)
+    B, H, D = len(patterns), 2, 64
+    SENTINEL = 1 << 20
+    Sq = sum(ln for kind, ln in patterns[0] if kind == "f")
+    spans, fpos, totals = [], [], []
+    for row in patterns:
+        assert sum(ln for kind, ln in row if kind == "f") == Sq
+        assert row[-1][0] == "f" and row[-1][1] >= n_items
+        pos, sp, fp = 0, [], []
+        for kind, ln in row:
+            if kind == "c":
+                sp.append((pos, ln))
+            else:
+                fp.extend(range(pos, pos + ln))
+            pos += ln
+        spans.append(sp)
+        fpos.append(fp)
+        totals.append(pos)
+    S_max = max(totals)
+    k_full = rng.normal(size=(B, H, S_max, D)).astype(np.float32)
+    v_full = rng.normal(size=(B, H, S_max, D)).astype(np.float32)
+    k_pos = np.full((B, S_max), SENTINEL, np.int32)
+    for b, S_b in enumerate(totals):
+        k_pos[b, :S_b] = np.arange(S_b)
+    q = rng.normal(size=(B, H, Sq, D)).astype(np.float32)
+    q_pos = np.asarray(fpos, np.int32)
+    idx = q_pos[:, None, :, None]
+    kn = np.take_along_axis(k_full, np.broadcast_to(
+        idx, (B, H, Sq, D)), axis=2)
+    vn = np.take_along_axis(v_full, np.broadcast_to(
+        idx, (B, H, Sq, D)), axis=2)
+    C_max = max(sum(ln for _, ln in sp) for sp in spans)
+    kc = np.zeros((B, H, C_max, D), np.float32)
+    vc = np.zeros_like(kc)
+    for b, sp in enumerate(spans):
+        off = 0
+        for start, ln in sp:
+            kc[b, :, off:off + ln] = k_full[b, :, start:start + ln]
+            vc[b, :, off:off + ln] = v_full[b, :, start:start + ln]
+            off += ln
+    paged = pack_segments(kc, vc, spans, pt, n_pages=n_pages)
+    to = lambda x: jnp.asarray(x, dtype)
+    return (to(q), to(kn), to(vn),
+            tuple(jnp.asarray(p) for p in paged), jnp.asarray(q_pos),
+            to(k_full), to(v_full), jnp.asarray(k_pos))
+
+
+@pytest.mark.parametrize("plens,bucket", [([128, 128], 128),
+                                          ([100, 37, 128], 128)])
+def test_segment_rank_attn_prefix_only_bitwise(plens, bucket):
+    """Degenerate interleaving (one span at [0, prefix_len), fresh
+    tokens after it): the segment kernel's masks reduce to the prefix
+    kernel's, so it reproduces ``paged_prefix_rank_attn`` — and through
+    it the dense reference chain — BIT FOR BIT.  This is the
+    segments-disabled parity discipline at the kernel level."""
+    pt, n_incr, n_items = 64, 32, 32
+    Sq = n_incr + n_items
+    q, kp, vp, kn, vn, paged = _paged_case(
+        plens, bucket, pt, n_incr, n_items, jnp.float32)
+    want = paged_prefix_rank_attn(q, *paged, kn, vn, n_incr=n_incr,
+                                  bq=32, bk=pt, n_total=bucket + Sq,
+                                  interpret=True)
+    # same prefixes as single spans in the segment layout
+    spans = [[(0, int(p))] for p in plens]
+    kc = np.zeros((len(plens), 2, bucket, 64), np.float32)
+    vc = np.zeros_like(kc)
+    for b, p in enumerate(plens):
+        kc[b, :, :p] = np.asarray(kp, np.float32)[b, :, :p]
+        vc[b, :, :p] = np.asarray(vp, np.float32)[b, :, :p]
+    seg = tuple(jnp.asarray(x) for x in
+                pack_segments(kc, vc, spans, pt, n_pages=bucket // pt))
+    q_pos = jnp.asarray(np.asarray(plens, np.int32)[:, None]
+                        + np.arange(Sq, dtype=np.int32)[None])
+    got = segment_rank_attn(q, *seg, q_pos, kn, vn, n_items=n_items,
+                            bq=32, bk=pt, n_total=bucket + Sq,
+                            interpret=True)
+    assert np.asarray(got).tobytes() == np.asarray(want).tobytes()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_rank_attn_matches_interleaved_oracle(dtype):
+    """Beyond-prefix reuse: cached interior segments interleaved with
+    fresh tokens (different layouts per row, one launch) match the
+    dense reference built from the same interleaving — fresh tokens
+    between two cached segments must NOT see the later segment."""
+    pt, n_items = 64, 32
+    patterns = [
+        [("c", 64), ("f", 32), ("c", 64), ("f", 32)],
+        [("c", 30), ("f", 10), ("c", 50), ("f", 22), ("c", 17),
+         ("f", 32)],
+    ]
+    q, kn, vn, seg, q_pos, k_full, v_full, k_pos = _segment_case(
+        patterns, n_items, pt, dtype)
+    Sq = q.shape[2]
+    n_pages = seg[2].shape[1]
+    nt = n_pages * pt + Sq
+    got = segment_rank_attn(q, *seg, q_pos, kn, vn, n_items=n_items,
+                            bq=32, bk=pt, n_total=nt, interpret=True)
+    want = ref.segment_rank_attn_ref(
+        q.astype(jnp.float32), k_full.astype(jnp.float32),
+        v_full.astype(jnp.float32), q_pos=q_pos, k_pos=k_pos,
+        n_items=n_items, n_total=nt)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_segment_ref_degenerates_to_prefix_ref():
+    """The interleaved oracle itself: one span at [0, P) + fresh tokens
+    after it equals the prefix oracle exactly (same mask bits)."""
+    P, n_incr, n_items = 96, 16, 48
+    B, H, D = 2, 2, 64
+    Sq = n_incr + n_items
+    rng = np.random.default_rng(23)
+    mk = lambda *s: jnp.asarray(rng.normal(size=s).astype(np.float32))
+    q, k, v = mk(B, H, Sq, D), mk(B, H, P + Sq, D), mk(B, H, P + Sq, D)
+    want = ref.prefix_rank_attn_ref(q, k, v, n_prefix=P, n_incr=n_incr)
+    q_pos = np.broadcast_to(P + np.arange(Sq, dtype=np.int32), (B, Sq))
+    k_pos = np.broadcast_to(np.arange(P + Sq, dtype=np.int32),
+                            (B, P + Sq))
+    got = ref.segment_rank_attn_ref(q, k, v, q_pos=q_pos, k_pos=k_pos,
+                                    n_items=n_items)
+    assert np.asarray(got).tobytes() == np.asarray(want).tobytes()
 
 
 def test_rank_mask_matches_model():

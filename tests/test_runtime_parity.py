@@ -390,3 +390,64 @@ def test_random_router_policy_breaks_affinity():
         hits += r.hit in (HitKind.HBM_HIT, HitKind.DRAM_HIT)
     # 5 special instances -> ~1/5 chance of accidental rendezvous
     assert hits / n < 0.5
+
+
+# ---------------------------------------------------------------------------
+# beyond-prefix segment reuse: disabled configs are trace-identical
+# ---------------------------------------------------------------------------
+
+
+def _seg_metas(kind):
+    """A fixed stream over 7 repeat users: ``kind`` selects whether the
+    metadata carries real segment annotations, empty ones, or none."""
+    seg = {"none": lambda u: (), "empty": lambda u: (),
+           "real": lambda u: (24, 16)}[kind]
+    return [(i * 0.02, UserMeta(user_id=10 + (i % 7), prefix_len=2048,
+                                seg_lens=seg(i)))
+            for i in range(40)]
+
+
+def _seg_cfg(segments):
+    return relay_config(
+        trigger=TriggerConfig(n_instances=5, r2=0.4, kv_p99_len=4096),
+        cluster=ClusterConfig(hbm_cache_bytes=4e9, page_tokens=64,
+                              segments=segments))
+
+
+def _seg_trace(segments, kind):
+    sim = ClusterSim(_seg_cfg(segments), COST)
+    s = sim.run(iter(_seg_metas(kind)))
+    trace = [(r.user_id, r.hit, r.e2e_ms, r.queue_ms, r.pre_ms,
+              r.load_ms, r.rank_ms) for r in sim.records]
+    return trace, s
+
+
+def test_segments_disabled_is_trace_identical():
+    """Parity discipline (same as hosts=1 / page_tokens=0): with the
+    segments flag OFF, seg_lens annotations on the stream are inert;
+    with the flag ON but no annotations, every path degenerates to
+    prefix-only.  Both must match the baseline trace bit-for-bit."""
+    base, s0 = _seg_trace(False, "none")
+    annotated, s1 = _seg_trace(False, "real")
+    empty, s2 = _seg_trace(True, "empty")
+    assert annotated == base
+    assert empty == base
+    assert s1 == s0 and s2 == s0
+
+
+def test_segments_enabled_raises_reused_fraction():
+    """The point of the mode: same stream, same window — segment reuse
+    strictly raises the reused-token fraction without losing hits."""
+    base, s0 = _seg_trace(False, "real")
+    segd, s1 = _seg_trace(True, "real")
+    assert s1["reused_frac"] > s0["reused_frac"]
+    assert s1["hbm_hit"] >= s0["hbm_hit"]
+    # hit classification unchanged per request
+    assert [t[1] for t in segd] == [t[1] for t in base]
+
+
+def test_segments_require_paged_window():
+    with pytest.raises(ValueError):
+        ClusterSim(relay_config(
+            trigger=TriggerConfig(n_instances=5, r2=0.4),
+            cluster=ClusterConfig(segments=True)), COST)

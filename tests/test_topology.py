@@ -330,6 +330,25 @@ def test_random_router_reproducible_across_processes():
     assert hits / 300 < 0.5
 
 
+def test_random_router_empty_special_pool_degrades_to_normal():
+    """Regression: churn emptying the special pool used to crash the
+    random ablation with ZeroDivisionError on the empty modulus; keyed
+    traffic must instead degrade to the normal-pool path, exactly like
+    ``AffinityRouter`` does."""
+    from repro.core.policies import RandomSpecialRouter
+    r = RandomSpecialRouter(["s0"], ["n0", "n1"], seed=1)
+    keyed = Request.rank(1, UserMeta(user_id=7, prefix_len=4096))
+    assert r.route(keyed) == "s0"
+    # churn takes the last special instance down
+    r.topology.hosts["host-0"].special.clear()
+    before = r.stats["normal"]
+    got = r.route(keyed)
+    assert got in ("n0", "n1")
+    assert r.stats["normal"] == before + 1
+    # deterministic degradation: repeat calls agree
+    assert r.route(keyed) == got
+
+
 # ---------------------------------------------------------------------------
 # batched pre-inference (the side path)
 # ---------------------------------------------------------------------------
