@@ -42,7 +42,7 @@ SLO_MS = 135.0
 #: every serving mode the harness understands (the BENCH_relay set)
 ALL_MODES = ("baseline", "relay", "relay_dram", "relay_batched",
              "relay_paged", "relay_segments", "relay_multihost",
-             "relay_disagg")
+             "relay_disagg", "relay_cold")
 
 
 def mode_config(mode: str, L: int, *, hosts: Optional[int] = None,
@@ -78,7 +78,14 @@ def mode_config(mode: str, L: int, *, hosts: Optional[int] = None,
     groups stay shallow and the NIC hop still beats the retrieval
     slack at the admission ceiling) and two NIC links, so neither
     compute nor the fabric caps admission below the colocated
-    600/s pool ceiling (Eq. 3b).
+    600/s pool ceiling (Eq. 3b).  ``relay_cold`` is ``relay_segments``
+    with the full memory hierarchy under it: a bounded DRAM expander
+    (4 GB, ~120 psi — small enough that skewed traffic overflows it)
+    plus a 500 GB host-local cold tier (SSD / remote psi store) that
+    absorbs DRAM evictions as demotions and revives cold-resident
+    users through an async cold->DRAM->HBM promotion priced on the
+    cold bandwidth class — tail users that every DRAM-only mode
+    re-prefills come back as cache hits.
 
     ``hosts`` / ``prefill_hosts`` override the mode's default topology
     (the capacity matrix's hosts axis); ``None`` keeps the default.
@@ -89,8 +96,8 @@ def mode_config(mode: str, L: int, *, hosts: Optional[int] = None,
     r2 = 0.8 if relay else 0.2   # 4 active instances either way
     hbm_cache = 4e9
     batched = mode in ("relay_batched", "relay_paged", "relay_segments",
-                       "relay_multihost", "relay_disagg")
-    paged = mode in ("relay_paged", "relay_segments")
+                       "relay_multihost", "relay_disagg", "relay_cold")
+    paged = mode in ("relay_paged", "relay_segments", "relay_cold")
     multihost = mode in ("relay_multihost", "relay_disagg")
     if hosts is None:
         hosts = 2 if multihost else 1
@@ -103,7 +110,9 @@ def mode_config(mode: str, L: int, *, hosts: Optional[int] = None,
                               t_life_s=0.5),
         cluster=ClusterConfig(
             relay_enabled=relay,
-            dram_budget_bytes=500e9 if mode == "relay_dram" else 0.0,
+            dram_budget_bytes=(500e9 if mode == "relay_dram"
+                               else 4e9 if mode == "relay_cold" else 0.0),
+            cold_budget_bytes=500e9 if mode == "relay_cold" else 0.0,
             hbm_cache_bytes=hbm_cache,
             max_batch=8 if batched else 0,
             batch_wait_ms=2.0,
@@ -111,7 +120,7 @@ def mode_config(mode: str, L: int, *, hosts: Optional[int] = None,
             prefill_hosts=prefill_hosts,
             prefill_m_slots=20 if prefill_hosts else 0,
             page_tokens=64 if paged else 0,
-            segments=mode == "relay_segments"),
+            segments=mode in ("relay_segments", "relay_cold")),
     )
 
 
@@ -146,8 +155,8 @@ def run_point(mode, L, qps, *, cost=None, dur=SIM_S, seed=0, refresh=None,
     ``fixed_stream``; ``distribution=True`` adds the extended
     percentiles the capacity curves commit."""
     cost = cost or COST
-    refresh = (0.5 if mode == "relay_dram" else 0.0) if refresh is None \
-        else refresh
+    refresh = (0.5 if mode in ("relay_dram", "relay_cold") else 0.0) \
+        if refresh is None else refresh
     cfg = mode_config(mode, L, hosts=hosts, prefill_hosts=prefill_hosts)
     if pipeline is not None:
         cfg = dataclasses.replace(cfg, pipeline=pipeline)
@@ -199,7 +208,7 @@ class MatrixSpec:
     measured knee), so every mode's curve brackets ITS OWN saturation
     point instead of sharing one global sweep."""
     modes: Tuple[str, ...] = ("baseline", "relay", "relay_batched",
-                              "relay_disagg")
+                              "relay_disagg", "relay_cold")
     lengths: Tuple[int, ...] = (2048, 4096)
     workloads: Tuple[WorkloadSpec, ...] = DEFAULT_WORKLOADS
     curve_fractions: Tuple[float, ...] = (0.5, 0.75, 0.9, 1.0, 1.15)
@@ -264,7 +273,7 @@ def cell_name(mode: str, L: int, wl: WorkloadSpec,
 CURVE_FIELDS = ("offered_qps", "n", "p50_ms", "p90_ms", "p95_ms", "p99_ms",
                 "mean_ms", "max_ms", "rank_p99_ms", "pre_p99_ms",
                 "load_p99_ms", "throughput_qps", "goodput_qps",
-                "success_rate", "hbm_hit", "dram_hit", "miss",
+                "success_rate", "hbm_hit", "dram_hit", "cold_hit", "miss",
                 "special_util", "reused_frac")
 
 
@@ -303,6 +312,7 @@ def run_cell(mode: str, L: int, wl: WorkloadSpec, *,
         "mode": mode, "L": L, "workload": wl.to_dict(),
         "workload_name": wl.name,
         "head_share_top100": round(wl.head_share(100), 4),
+        "tail_share_top100": round(wl.tail_share(100), 4),
         "hosts": hosts,
         "knee_qps": round(knee, 1),
         "knee_goodput_qps": round(res.best, 1),

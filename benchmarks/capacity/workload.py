@@ -61,6 +61,11 @@ class WorkloadSpec:
         users — the report's head-heaviness label."""
         return ZipfPopularity(self.population, self.skew).cdf(top)
 
+    def tail_share(self, top: int = 100) -> float:
+        """Analytic share of requests from BEYOND the ``top`` hottest
+        users — the tail traffic only the sub-DRAM tiers can keep warm."""
+        return ZipfPopularity(self.population, self.skew).tail_share(top)
+
     def stream(self, L: int, qps: float, duration_s: float, *,
                seed: int = 0, dim: int = 256, n_items: int = 512,
                incr_len: int = 64) -> Iterator[Tuple[float, UserMeta]]:

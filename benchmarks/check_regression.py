@@ -18,7 +18,14 @@ per-mode diff when any metric regresses past its stated tolerance:
   * cross-mode — ``relay_paged`` must keep ``relay_batched``'s HBM hit
     rate (same trigger, same byte budget: paging may not cost
     admissions) and the COMMITTED file must hold their ``slo_qps``
-    within 5% of each other, the paged-window acceptance bound.
+    within 5% of each other, the paged-window acceptance bound;
+  * cold tier — ``relay_cold`` must strictly beat ``relay_segments``
+    on the tail-probe reuse fraction (hbm + dram + cold at 1.15x the
+    segments knee) and hold >= 95% of its committed ``slo_qps``; on
+    the committed capacity matrix every skewed POISSON cell's
+    ``relay_cold`` knee must be >= the ``relay_batched`` knee (the
+    Zipf-tail lift; MMPP knees carry burst-phase noise larger than
+    the lift and are gated by the knee floor only).
 
 Replaces the old sanity-only ``slo_qps >= 0.8 * relay`` check: every
 mode is now gated against its own committed trajectory, so a perf
@@ -29,9 +36,10 @@ Capacity gating (``--capacity-candidate``): a fresh
 ``python -m benchmarks.capacity`` headline is diffed against the
 committed ``BENCH_capacity.json`` over the intersection of matrix
 cells — per-cell knee QPS must reach ``--qps-floor`` of the committed
-knee, and every curve's goodput must rise monotonically up to its
-knee (a goodput dip below the knee means admission is collapsing
-before saturation — a scheduler bug, not a tolerance matter).
+knee, and every POISSON cell's goodput must rise monotonically up to
+its knee (a goodput dip below the knee means admission is collapsing
+before saturation — a scheduler bug, not a tolerance matter; under
+MMPP the dip inference doesn't hold, see ``compare_capacity``).
 
 Both gates refuse (exit 2, distinct from a regression's exit 1) to
 diff headlines produced under different workloads: the meta blocks
@@ -47,7 +55,7 @@ import json
 import sys
 
 GATED_LATENCY = ("p99_ms", "rank_p99_ms")
-GATED_HITS = ("hbm_hit", "dram_hit", "miss")
+GATED_HITS = ("hbm_hit", "dram_hit", "cold_hit", "miss")
 
 #: BENCH_relay.json meta fields that pin the workload a headline was
 #: measured under; two headlines disagreeing on any of these are
@@ -103,6 +111,8 @@ def compare(reference: dict, candidate: dict, *, latency_tol: float,
                          f"<= {lim:.3f} (+{latency_tol:.0%})",
                          cand.get(f) is not None and cand[f] <= lim))
         for f in GATED_HITS:
+            if f not in ref:
+                continue   # pre-cold-tier committed file: nothing to gate
             rows.append((mode, f, ref[f], cand.get(f),
                          f"± {hit_tol}",
                          cand.get(f) is not None
@@ -199,6 +209,39 @@ def compare(reference: dict, candidate: dict, *, latency_tol: float,
                      rm["slo_qps"], rd["slo_qps"],
                      ">= 90% of relay_multihost",
                      rd["slo_qps"] >= 0.90 * rm["slo_qps"]))
+
+    # cold-tier acceptance: relay_cold is relay_segments with a bounded
+    # DRAM tier and a host-local cold store under it.  The tier's point
+    # is the TAIL: past the admission knee, rate-limited returning
+    # users must be served out of the hierarchy, so relay_cold's
+    # tail-probe reuse fraction (hbm + dram + cold at 1.15x
+    # relay_segments' slo_qps) must strictly exceed relay_segments'
+    # (candidate and committed), and the committed slo_qps may not fall
+    # below 95% of relay_segments (the disk path must not tax the
+    # knee)
+    if "relay_cold" in reference and "relay_segments" in reference:
+        rs = candidate.get("relay_segments")
+        rc = candidate.get("relay_cold")
+        if rs and rc and "tail_reuse_frac" in rs \
+                and "tail_reuse_frac" in rc:
+            rows.append(("relay_cold",
+                         "tail_reuse_frac > relay_segments",
+                         rs["tail_reuse_frac"], rc["tail_reuse_frac"],
+                         "strictly greater",
+                         rc["tail_reuse_frac"] > rs["tail_reuse_frac"]))
+        rs = reference["relay_segments"]
+        rc = reference["relay_cold"]
+        if "tail_reuse_frac" in rs and "tail_reuse_frac" in rc:
+            rows.append(("relay_cold",
+                         "tail_reuse_frac > relay_segments (committed)",
+                         rs["tail_reuse_frac"], rc["tail_reuse_frac"],
+                         "strictly greater",
+                         rc["tail_reuse_frac"] > rs["tail_reuse_frac"]))
+        rows.append(("relay_cold",
+                     "slo_qps vs relay_segments (committed)",
+                     rs["slo_qps"], rc["slo_qps"],
+                     ">= 95% of relay_segments",
+                     rc["slo_qps"] >= 0.95 * rs["slo_qps"]))
     return rows
 
 
@@ -241,11 +284,44 @@ def compare_capacity(reference: dict, candidate: dict, *,
                      f">= {lim:.1f} ({knee_floor:.0%} of committed)",
                      cand.get("knee_qps") is not None
                      and cand["knee_qps"] >= lim))
+        # goodput monotonicity is a Poisson-only inference: under MMPP
+        # the burst phase realigns with every offered-rate rescale (the
+        # stream is re-seeded per probe), so goodput below the knee
+        # legitimately swings tens of percent between adjacent probes —
+        # a dip there is burst alignment, not admission collapse.
+        # Bursty cells stay gated by the knee floor above.
+        if ref.get("workload", {}).get("arrival", "poisson") != "poisson":
+            continue
         rows.append((name, "goodput monotone to knee",
                      "monotone", "monotone" if
                      _goodput_monotone(cand, curve_tol) else "DIP",
                      f"no >{curve_tol:.0%} dip below running max",
                      _goodput_monotone(cand, curve_tol)))
+
+    # cold-tier acceptance (committed matrix): on every skewed
+    # (Zipf-tail) POISSON cell the full hierarchy must LIFT the knee
+    # over the DRAM-less batched deployment — returning tail users
+    # revived off the cold store instead of re-prefilled is the whole
+    # point of the tier.  MMPP cells are excluded for the same reason
+    # as the monotonicity gate: their knees carry burst-phase noise
+    # larger than the lift itself on 12 s sims (they remain gated by
+    # the per-cell knee floor).
+    for name, ref in sorted(ref_cells.items()):
+        if not name.startswith("relay_cold/"):
+            continue
+        wl = ref.get("workload", {})
+        if wl.get("skew", 0.0) <= 0.0:
+            continue
+        if wl.get("arrival", "poisson") != "poisson":
+            continue
+        peer = "relay_batched/" + name.split("/", 1)[1]
+        pr = ref_cells.get(peer)
+        if pr is None:
+            continue
+        rows.append((name, f"knee_qps >= {peer} (committed)",
+                     pr["knee_qps"], ref["knee_qps"],
+                     "cold tier lifts the Zipf-tail knee",
+                     ref["knee_qps"] >= pr["knee_qps"]))
     return rows
 
 

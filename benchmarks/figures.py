@@ -392,7 +392,7 @@ def bench_relay_summary(quick: bool = False) -> Dict:
         "workload": "uniform"}}
     for mode in ("baseline", "relay", "relay_dram", "relay_batched",
                  "relay_paged", "relay_segments", "relay_multihost",
-                 "relay_disagg"):
+                 "relay_disagg", "relay_cold"):
         s = _run(mode, L, qps)
         entry = {
             "p50_ms": round(s["p50_ms"], 3),
@@ -402,6 +402,7 @@ def bench_relay_summary(quick: bool = False) -> Dict:
             "goodput_qps": round(s["goodput_qps"], 1),
             "hbm_hit": round(s["hbm_hit"], 4),
             "dram_hit": round(s["dram_hit"], 4),
+            "cold_hit": round(s.get("cold_hit", 0.0), 4),
             "miss": round(s["miss"], 4),
             "reused_frac": round(s["reused_frac"], 4),
         }
@@ -412,6 +413,23 @@ def bench_relay_summary(quick: bool = False) -> Dict:
             _max_qps(mode, L, dur=4.0 if quick else SIM_S, coarse=quick),
             1)
         out[mode] = entry
+    # tail-user probe: the cold tier only differentiates once admission
+    # rate-limits (below the pool ceiling every admitted request
+    # pre-infers and trivially hits HBM), so the headline includes the
+    # reuse fraction PAST the knee — at 1.15x relay_segments' measured
+    # slo_qps under the rapid-refresh workload — where rate-limited
+    # returning users must be served out of the memory hierarchy.  The
+    # regression gate requires relay_cold to beat relay_segments here:
+    # hbm + dram + cold reuse, the tail users the DRAM-less modes
+    # re-rank from scratch.
+    q_tail = round(1.15 * out["relay_segments"]["slo_qps"], 1)
+    for mode in ("relay_segments", "relay_cold"):
+        s = _run(mode, L, q_tail, refresh=0.5,
+                 dur=4.0 if quick else SIM_S)
+        out[mode]["tail_qps"] = q_tail
+        out[mode]["tail_reuse_frac"] = round(
+            s["hbm_hit"] + s["dram_hit"] + s.get("cold_hit", 0.0), 4)
+        out[mode]["tail_cold_hit"] = round(s.get("cold_hit", 0.0), 4)
     return out
 
 

@@ -1,9 +1,11 @@
-"""Quickstart: the RelayGR relay in 40 lines.
+"""Quickstart: the RelayGR relay in 50 lines.
 
 Builds the HSTU GR backbone, pre-infers a user's long-term behaviour
-prefix (psi), relays it through the HBM cache, and scores candidates
-with `rank_with_cache` — asserting the paper's epsilon-equivalence
-against full inference.
+prefix (psi), relays it through the HBM sliding-window cache, and
+scores candidates with `rank_with_cache` — asserting the paper's
+epsilon-equivalence against full inference — then prints the window's
+stats ledger (the same unified counter family every cache tier
+reports: inserts / live / evictions / handoffs + extras).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cache import HBMCacheStore, kv_nbytes
 from repro.models import get_model
 
 model = get_model("hstu-gr", smoke=True)
@@ -27,12 +30,28 @@ _, psi = jax.jit(model.prefill)(params, {"tokens": prefix})
 kv_mb = sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(psi)) / 2**20
 print(f"psi: per-layer KV cache, {kv_mb:.2f} MiB for 128 tokens")
 
-# 2) fine-grained ranking (later, same instance): reuse psi
-scores_relay = model.rank_with_cache(params, psi, incr, items)
+# 2) the relay baton: psi waits in the HBM sliding window until the
+#    ranking request arrives (T_life-bounded in production)
+window = HBMCacheStore(budget_bytes=64 * 2 ** 20)
+window.insert(user_id=1, value=psi, nbytes=kv_nbytes(psi), now=0.0,
+              prefix_len=prefix.shape[1])
+psi_cached = window.lookup(1).value
+window.consume(1)                       # ranking takes the baton
 
-# 3) the paper's correctness contract: |relay - full| <= eps
+# 3) fine-grained ranking (later, same instance): reuse psi
+scores_relay = model.rank_with_cache(params, psi_cached, incr, items)
+
+# 4) the paper's correctness contract: |relay - full| <= eps
 scores_full = model.full_rank(params, prefix, incr, items)
 err = float(jnp.abs(scores_relay - scores_full).max())
 print(f"scores: {scores_relay.shape}, |relay - full| = {err:.2e}")
 assert err < 1e-4
 print("relay-race inference == full inference (eps-bound holds)")
+
+# 5) the window's ledger: the unified counter family (inserts == live
+#    + evictions + handoffs; every tier in the hierarchy reports the
+#    same core, see src/repro/core/README.md)
+print("hbm window ledger:",
+      {k: window.stats[k] for k in ("inserts", "hits", "misses",
+                                    "evictions", "handoffs")},
+      f"live={window.live_count}")

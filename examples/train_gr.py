@@ -1,5 +1,7 @@
 """Train the GR backbone on the synthetic next-item-prediction pipeline
-(a few hundred steps, CPU-sized model).
+(a few hundred steps, CPU-sized model), logging the training ledger —
+loss / grad-norm / lr / s-per-step every --log-every steps — and writing a
+checkpoint the serving examples can reload.
 
 Run:  PYTHONPATH=src python examples/train_gr.py
 Production shapes go through repro.launch.dryrun / the production mesh.

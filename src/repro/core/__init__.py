@@ -15,6 +15,7 @@ from .cache import (CacheEntry, HBMCacheStore, PagedHBMStore, kv_nbytes,
                     make_hbm_store)
 from .paging import PageLayout, PagePool, PagedPsi
 from .clock import Clock, VirtualClock, WallClock
+from .coldstore import ColdStore, ColdStoreConfig
 from .costmodel import GRCostModel, HardwareModel
 from .engine import InstanceConfig, RankingInstance
 from .executors import (EXECUTORS, BatchedLiveExecutor, Executor,

@@ -86,6 +86,10 @@ class CacheEntry:
     # partial tail eviction) is span-agnostic; ``spans`` preserves the
     # true layout for the kernel's position/validity tables.
     spans: Optional[Tuple[Tuple[int, int], ...]] = None
+    # cold-tier revival marker: set when this copy was promoted out of
+    # the cold store; the first rank it serves classifies as COLD_HIT
+    # (then the flag clears — later lifecycles are ordinary warm hits)
+    cold_sourced: bool = False
 
 
 class HBMCacheStore:

@@ -60,6 +60,15 @@ class HardwareModel:
     # link, and the runtime serializes concurrent transfers on each
     # host's link (NIC contention) rather than paying latency only.
     nic_bw: float = 1.25e10            # B/s per-host shipping fabric
+    # Cold-tier store bandwidth (host-local NVMe SSD or a remote psi
+    # store's per-host share): the third link class under the NIC.
+    # Demotions (DRAM eviction -> cold) and promotions (cold -> DRAM
+    # prefetch) serialize on each host's cold link exactly like
+    # shipments serialize on its NIC — SSDs are not full duplex, so the
+    # cold link is a single queue.  cold_rtt_ms models submission /
+    # seek latency per I/O, analogous to net_rtt_ms per fabric hop.
+    cold_bw: float = 6.0e9             # B/s host SSD / remote-store share
+    cold_rtt_ms: float = 0.5           # per cold-store I/O
     host_feature_ms: float = 2.0       # CPU feature processing per request
     embed_bytes_per_token: int = 1024  # host->device embedding traffic
 
@@ -199,26 +208,36 @@ class GRCostModel:
 
     # ---- off-critical-path psi transfers (NIC bandwidth model) -------------
 
-    def link_occupancy_ms(self, nbytes: int) -> float:
-        """Time one transfer *occupies* a host's NIC link: the
-        serialization term of a cross-host move.  The runtime's per-host
-        link model charges this window against the sender's and
-        receiver's links so concurrent shipments and rebalance
-        migrations contend for bandwidth instead of overlapping for
-        free; RTT is propagation and does not occupy the link."""
-        return max(int(nbytes), 0) / self.hw.nic_bw * 1e3
+    def link_occupancy_ms(self, nbytes: int, *, link: str = "nic") -> float:
+        """Time one transfer *occupies* a host's link of the given
+        bandwidth class — ``"nic"`` (shipping fabric) or ``"cold"``
+        (SSD / remote psi store): the serialization term of a move.
+        The runtime's per-host link model charges this window against
+        the involved links so concurrent shipments, migrations and
+        cold-tier moves contend for bandwidth instead of overlapping
+        for free; RTT is propagation and does not occupy the link."""
+        bw = self.hw.cold_bw if link == "cold" else self.hw.nic_bw
+        return max(int(nbytes), 0) / bw * 1e3
 
-    def psi_transfer_ms(self, prefix_len: int, *,
-                        cross_host: bool = True) -> float:
+    def psi_transfer_ms(self, prefix_len: int, *, cross_host: bool = True,
+                        link: str = "nic") -> float:
         """THE pricing entry point for any psi that leaves its instance
         off the critical path — rebalance migrations (ownership
-        handoff) and disaggregated-prefill psi shipping both price
-        through here, so the two paths can never drift.  A cross-host
-        move rides the dedicated shipping fabric (``hw.nic_bw`` +
-        RTT); an intra-host move (ring change within one server) only
-        re-crosses the local H2D/DRAM path.  Never charged per-request:
-        invariant I1 still forbids critical-path remote fetches
-        (``remote_fetch_ms``, the congested-network penalty)."""
+        handoff), disaggregated-prefill psi shipping, and cold-tier
+        demotions/promotions all price through here, so the paths can
+        never drift.  ``link="nic"`` (default): a cross-host move rides
+        the dedicated shipping fabric (``hw.nic_bw`` + RTT); an
+        intra-host move (ring change within one server) only re-crosses
+        the local H2D/DRAM path.  ``link="cold"``: one cold-store I/O
+        (DRAM <-> host SSD / remote store) — ``hw.cold_bw`` +
+        submission latency; ``cross_host`` is ignored because a
+        cross-host cold move composes this with a NIC leg.  Never
+        charged per-request: invariant I1 still forbids critical-path
+        remote fetches (``remote_fetch_ms``)."""
+        if link == "cold":
+            return (self.hw.cold_rtt_ms
+                    + self.link_occupancy_ms(self.kv_bytes(prefix_len),
+                                             link="cold"))
         if cross_host:
             return (self.hw.net_rtt_ms
                     + self.link_occupancy_ms(self.kv_bytes(prefix_len)))

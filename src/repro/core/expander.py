@@ -74,10 +74,27 @@ class DRAMExpander:
         self.used_bytes = 0
         self.flight = SingleFlight()
         self.active_reloads = 0
-        self.stats = {"spills": 0, "reloads": 0, "redundant_avoided": 0,
+        # Optional cold-tier hook: when a runtime wires a sink, LRU
+        # evictees are DEMOTED down the hierarchy (the sink prices and
+        # lands the copy asynchronously) instead of dropped.  Returns
+        # whether the sink accepted the entry.
+        self.demote_sink = None
+        # Unified tier counter family (same core as HBMCacheStore and
+        # ColdStore, so stats() renders one coherent table):
+        #   inserts == live + evictions + demotions + handoffs + promotions
+        # evictions  — copies dropped from the hierarchy (LRU without a
+        #              cold tier, same-user replacement, unfit drops);
+        # demotions  — LRU evictees accepted by the cold-tier sink;
+        # promotions — copies moved UP (DRAM -> HBM reload completed);
+        # handoffs   — extracted for rebalance migration.
+        # The rest are tier-specific extras (note lru_evictions counts
+        # ALL LRU removals, demoted or dropped).
+        self.stats = {"inserts": 0, "evictions": 0, "demotions": 0,
+                      "promotions": 0, "handoffs": 0,
+                      "spills": 0, "reloads": 0, "redundant_avoided": 0,
                       "dram_hits": 0, "dram_misses": 0, "lru_evictions": 0,
                       "reload_throttled": 0, "unfit_dropped": 0,
-                      "rejected_spills": 0, "handoffs": 0}
+                      "rejected_spills": 0}
 
     # --- spill (after consumption, off the critical path) -------------------
     def spill(self, entry: CacheEntry) -> bool:
@@ -110,16 +127,22 @@ class DRAMExpander:
                                         tokens_resident=entry.prefix_len)
         if entry.user_id in self.entries:
             self._remove(entry.user_id)
+            self.stats["evictions"] += 1       # replaced same-user copy
         while (self.used_bytes + entry.nbytes > self.cfg.dram_budget_bytes
                and self.entries):
             old, _ = self.entries.popitem(last=False)  # LRU
             self.used_bytes -= _.nbytes
             self.stats["lru_evictions"] += 1
+            if self.demote_sink is not None and self.demote_sink(_):
+                self.stats["demotions"] += 1   # spilled DOWN, not dropped
+            else:
+                self.stats["evictions"] += 1
         if entry.nbytes <= self.cfg.dram_budget_bytes:
             entry.state = CacheState.DRAM
             self.entries[entry.user_id] = entry
             self.used_bytes += entry.nbytes
             self.stats["spills"] += 1
+            self.stats["inserts"] += 1
             return True
         return False
 
@@ -177,6 +200,7 @@ class DRAMExpander:
             # a full H2D transfer just to be rejected and fall back
             self._remove(user_id)
             self.stats["unfit_dropped"] += 1
+            self.stats["evictions"] += 1
             return "miss", None
         if self.active_reloads >= self.cfg.max_reload_concurrency:
             self.stats["reload_throttled"] += 1
@@ -208,11 +232,17 @@ class DRAMExpander:
                 if not hbm.fits(e.nbytes, e.prefix_len):
                     self._remove(user_id)
                     self.stats["unfit_dropped"] += 1
+                    self.stats["evictions"] += 1
                 return evicted
             self._remove(user_id)
             e.state = CacheState.HBM
-            hbm.entries[user_id].dram_backed = False  # the copy moved out
+            # the copy moved UP and out of this tier; a cold-revived
+            # entry keeps its marker so the rank it unblocks classifies
+            # as a cold hit
+            hbm.entries[user_id].dram_backed = False
+            hbm.entries[user_id].cold_sourced = e.cold_sourced
             self.stats["reloads"] += 1
+            self.stats["promotions"] += 1
         return evicted
 
     def finish(self, user_id: int):

@@ -66,6 +66,7 @@ from repro.serving.metrics import SLOTracker
 
 from .cache import HBMCacheStore, make_hbm_store
 from .clock import Clock, VirtualClock, WallClock
+from .coldstore import ColdStore, ColdStoreConfig
 from .costmodel import GRCostModel
 from .executors import Executor, get_executor
 from .expander import DRAMExpander, ExpanderConfig
@@ -112,6 +113,21 @@ class ClusterConfig:
     # prefix-only path.
     segments: bool = False
     hosts: int = 1                       # servers the pools stripe over
+    # >0 -> hierarchical cold tier (MTServe-style): one host-local SSD /
+    # remote-store ColdStore per rank host under the DRAM expanders.
+    # DRAM LRU evictions DEMOTE to cold (asynchronously, priced on the
+    # host's cold link) instead of dropping, and a trigger-admitted
+    # request for a cold-resident user starts an async cold->DRAM
+    # PROMOTION on the pre path so the rank stage sees a DRAM hit / a
+    # cheap partial reload instead of full re-inference.  0 (default)
+    # disables the tier — bit-identical to the two-tier runtime.
+    cold_budget_bytes: float = 0.0
+    # cold-link congestion gate: when a host's cold link backlog (time
+    # until the queue drains) exceeds this, new demotions are dropped
+    # and new promotions skip straight to prefill compute — disk I/O
+    # that would land hopelessly late must not be queued at all, or a
+    # saturated SSD turns into an unbounded promise backlog
+    cold_backlog_ms: float = 50.0
     rebalance: str = "handoff"           # churn policy: handoff | none
     # >0 -> disaggregated prefill: dedicate N hosts (one pooled prefill
     # engine each) to the pre-infer side path; produced psi is SHIPPED
@@ -293,8 +309,8 @@ class InstanceRuntime:
             if bcfg is not None and hasattr(executor, "pre_infer_group")
             else None)
         self.stats = {"pre_infers": 0, "ranks": 0, "hbm_hits": 0,
-                      "dram_hits": 0, "fallbacks": 0, "spills": 0,
-                      "rejected_inserts": 0}
+                      "dram_hits": 0, "cold_hits": 0, "fallbacks": 0,
+                      "spills": 0, "rejected_inserts": 0}
         # event-mode resource state (owned by the driving RelayRuntime)
         self.loop: Optional["RelayRuntime"] = None
         self.free_slots = cfg.m_slots
@@ -361,8 +377,16 @@ class InstanceRuntime:
         self.stats["ranks"] += 1
         if action == "hbm" and entry is not None:
             self.hbm.consume(user_id)
-            hit = HitKind.DRAM_HIT if load_ms > 0 else HitKind.HBM_HIT
-            self.stats["dram_hits" if load_ms > 0 else "hbm_hits"] += 1
+            if entry.cold_sourced:
+                # this lifecycle was revived out of the cold tier — the
+                # rank it unblocks is a cold hit; the flag then clears
+                # so later (warm) lifecycles classify normally
+                entry.cold_sourced = False
+                hit = HitKind.COLD_HIT
+                self.stats["cold_hits"] += 1
+            else:
+                hit = HitKind.DRAM_HIT if load_ms > 0 else HitKind.HBM_HIT
+                self.stats["dram_hits" if load_ms > 0 else "hbm_hits"] += 1
             # paged store: pins the entry's pages until the launch
             # releases them, so a deferred batched group can never read
             # a page the sliding window recycled under it
@@ -554,6 +578,36 @@ class RelayRuntime:
                     cl.expander_policy, ExpanderConfig(
                         dram_budget_bytes=cl.dram_budget_bytes,
                         max_reload_concurrency=cl.pcie_concurrency))
+        # hierarchical cold tier (MTServe-style, ROADMAP "Hierarchical
+        # cache below DRAM"): one host-local SSD / remote-store
+        # ColdStore per rank host.  DRAM LRU evictees demote into it
+        # asynchronously (priced on the host's cold link, which
+        # contends like the NIC) and a trigger-admitted visit from a
+        # cold-resident user promotes the copy back up off the critical
+        # path.  cold_budget_bytes=0 builds none of this — the
+        # two-tier runtime stays bit-identical.
+        self.cold_enabled = cl.cold_budget_bytes > 0
+        self.cold_stores: Dict[str, ColdStore] = {}
+        # a departed host's store: its entries re-home LAZILY (on next
+        # touch), never eagerly at host_leave
+        self._orphan_cold: Dict[str, ColdStore] = {}
+        self.cold_links: Dict[str, Dict[str, float]] = {}
+        self.cold = {"demotions": 0, "demote_landed": 0,
+                     "demote_dropped": 0, "demote_throttled": 0,
+                     "promotions": 0, "promote_dropped": 0,
+                     "promote_throttled": 0, "lazy_handoffs": 0,
+                     "late_miss": 0, "ms": 0.0}
+        self._promote_inflight: Dict[int, int] = {}
+        self._promote_raced: set = set()
+        if self.cold_enabled:
+            for hname, h in self.topology.hosts.items():
+                if h.role != "prefill":
+                    self.cold_stores[hname] = ColdStore(
+                        ColdStoreConfig(budget_bytes=cl.cold_budget_bytes))
+            # cold-aware admission: a cold-resident user's side path is
+            # a promotion + reload, not a prefill — the trigger's slack
+            # test prices THAT instead of the full pre-infer estimate
+            self.trigger.cold_estimator = self._cold_pre_estimate
         self.instances: Dict[str, InstanceRuntime] = {}
         for host in self.topology.hosts.values():
             for name in host.instances:
@@ -679,6 +733,11 @@ class RelayRuntime:
         inst = InstanceRuntime(icfg, self._factory(name),
                                expander=self.host_expanders.get(host))
         inst.loop = self
+        if self.cold_enabled and role != "prefill":
+            # DRAM LRU evictees demote down to the host's cold store
+            # (asynchronously, priced on the host cold link) instead of
+            # dropping out of the hierarchy
+            inst.expander.demote_sink = self._demote_sink(host)
         return inst
 
     # --- host membership churn (rebalancing, owner handoff) -------------------
@@ -712,6 +771,12 @@ class RelayRuntime:
                     dram_budget_bytes=cl.dram_budget_bytes,
                     max_reload_concurrency=cl.pcie_concurrency))
         self.router.add_host(host)
+        if self.cold_enabled:
+            # the new server brings an (empty) cold store; entries the
+            # join re-homes stay put until their next touch — the
+            # rebalance walk below never moves cold copies eagerly
+            self.cold_stores[host.name] = ColdStore(ColdStoreConfig(
+                budget_bytes=self.cfg.cluster.cold_budget_bytes))
         for name in host.instances:
             self.instances[name] = self._make_instance(
                 name, name in host.special, host.name)
@@ -767,6 +832,17 @@ class RelayRuntime:
         if handoff and dep_expander is not None:
             for uid in list(dep_expander.entries):
                 self._handoff_dram(dep_expander, name, uid, now)
+        # Cold entries hand off LAZILY: unlike the HBM/DRAM walks above,
+        # a departing host's cold store is parked as an orphan (still
+        # addressable as a remote store) and each entry re-homes on its
+        # NEXT TOUCH — eager eviction of a multi-TB SSD namespace at
+        # host_leave would serialize the whole tier through one NIC.
+        # Under rebalance="none" the namespace is simply lost with the
+        # host (the naive deployment the handoff policy exists to beat).
+        dep_cold = self.cold_stores.pop(name, None)
+        if dep_cold is not None and dep_cold.entries and handoff:
+            self._orphan_cold[name] = dep_cold
+        self.topology.mark_departed(name)
         # re-dispatch orphaned work at its new owner (group members fall
         # back to plain jobs: their dead-host psi snapshots are gone, so
         # the new instance re-resolves the cache action from scratch)
@@ -974,6 +1050,228 @@ class RelayRuntime:
                 inst.stats["spills"] += 1
         self._wake_waiters(t, inst, entry.user_id)
 
+    # --- cold tier (host SSD / remote psi store under DRAM) -------------------
+
+    def _cold_link(self, host: str) -> Dict[str, float]:
+        """Link state of one host's cold store (SSD namespace / remote-
+        store share).  Unlike the full-duplex NIC this is ONE queue —
+        reads and writes serialize against each other — and a departed
+        host's link survives so lazy-handoff reads stay accounted."""
+        link = self.cold_links.get(host)
+        if link is None:
+            link = {"free": 0.0, "transfers": 0, "bytes": 0,
+                    "busy_ms": 0.0, "wait_ms": 0.0}
+            self.cold_links[host] = link
+        return link
+
+    def _cold_transfer(self, now: float, host: str, nbytes: int,
+                       prefix_len: int) -> Tuple[float, float]:
+        """One cold-tier I/O (demotion write or promotion read) on
+        ``host``'s cold link.  The uncontended cost is exactly the
+        unified entry point ``GRCostModel.psi_transfer_ms(prefix_len,
+        link="cold")``; this is its serialized form — the occupancy
+        window charges the link so concurrent demotions and promotions
+        contend for disk bandwidth, the same relationship
+        ``_link_transfer`` has to the NIC pricing.  Returns (arrival
+        time, wall ms)."""
+        nbytes = int(nbytes) or self.cost.kv_bytes(prefix_len)
+        occ = self.cost.link_occupancy_ms(nbytes, link="cold") / 1e3
+        link = self._cold_link(host)
+        start = max(now, link["free"])
+        link["free"] = start + occ
+        link["transfers"] += 1
+        link["bytes"] += nbytes
+        link["busy_ms"] += occ * 1e3
+        link["wait_ms"] += (start - now) * 1e3
+        arrival = start + occ + self.cost.hw.cold_rtt_ms / 1e3
+        return arrival, (arrival - now) * 1e3
+
+    def _demote_sink(self, host: str):
+        """The hook wired into a host's DRAM expander: LRU evictees are
+        offered here; True means the copy entered the demotion pipeline
+        (counted by the expander as a demotion, not an eviction)."""
+        def sink(entry, host=host):
+            return self._demote(self.now, host, entry)
+        return sink
+
+    def _cold_backlog_ok(self, now: float, host: str) -> bool:
+        """Congestion gate: False when the host's cold link is backed
+        up past ``cold_backlog_ms`` of queued I/O."""
+        link = self._cold_link(host)
+        return (link["free"] - now) * 1e3 \
+            <= self.cfg.cluster.cold_backlog_ms
+
+    def _promote_viable(self, now: float, meta: UserMeta, src_host: str,
+                        dst_host: Optional[str], *,
+                        burned_ms: float = 0.0) -> bool:
+        """Deadline test for a candidate promotion: queued link backlog
+        + cold read (+ NIC leg for a foreign/departed source) + the
+        DRAM->HBM reload must fit inside what is LEFT of the
+        pre-signal -> rank window (``burned_ms`` is the queue time the
+        pre job already spent), otherwise the psi lands behind its own
+        rank request and the revival was pure wasted I/O."""
+        link = self._cold_link(src_host)
+        est = max(0.0, link["free"] - now) * 1e3 \
+            + self.cost.psi_transfer_ms(meta.prefix_len, link="cold") \
+            + self.cost.dram_load_ms(meta.prefix_len)
+        if src_host != dst_host:
+            est += self.cost.psi_transfer_ms(meta.prefix_len,
+                                             cross_host=True)
+        pp = self.cfg.pipeline
+        return est <= (pp.retrieval_ms + pp.preprocess_ms
+                       - pp.trigger_signal_ms - burned_ms)
+
+    def _demote(self, now: float, host: str, entry) -> bool:
+        store = self.cold_stores.get(host)
+        if store is None or entry.value is None \
+                or entry.nbytes > store.cfg.budget_bytes:
+            return False
+        if not self._cold_backlog_ok(now, host):
+            self.cold["demote_throttled"] += 1
+            return False
+        arrival, ms = self._cold_transfer(now, host, entry.nbytes,
+                                          entry.prefix_len or 1)
+        self.cold["demotions"] += 1
+        self.cold["ms"] += ms
+        self.schedule(arrival, "demote_done", host=host, entry=entry)
+        return True
+
+    def _on_demote_done(self, t: float, host: str, entry) -> None:
+        # the write completed: the copy becomes cold-resident NOW (a
+        # promotion probe during the in-flight window missed — the disk
+        # copy was not readable yet)
+        store = self.cold_stores.get(host) or self._orphan_cold.get(host)
+        if store is None or not store.insert(entry):
+            self.cold["demote_dropped"] += 1
+            return
+        self.cold["demote_landed"] += 1
+        # single cold ownership: a fresher demotion supersedes any stale
+        # copy the same user left on another host's store (e.g. before
+        # a rebalance moved their key)
+        for s in list(self.cold_stores.values()) \
+                + list(self._orphan_cold.values()):
+            if s is not store:
+                s.drop(entry.user_id)
+
+    def _cold_find(self, uid: int, prefer: Optional[str] = None):
+        """Locate a user's cold copy without accounting: the preferred
+        (destination) host's store first, then the other live stores,
+        then orphaned stores of departed hosts.  Returns (src_host,
+        store) or None."""
+        if prefer is not None:
+            store = self.cold_stores.get(prefer)
+            if store is not None and store.peek(uid) is not None:
+                return prefer, store
+        for host, store in self.cold_stores.items():
+            if host != prefer and store.peek(uid) is not None:
+                return host, store
+        for host, store in self._orphan_cold.items():
+            if store.peek(uid) is not None:
+                return host, store
+        return None
+
+    def _cold_pre_estimate(self, meta: UserMeta) -> Optional[float]:
+        """Admission-time side-path estimate for a cold-resident user:
+        a promotion read + DRAM->HBM reload replaces the full prefill
+        compute (plus a NIC leg when the copy sits on a foreign or
+        departed host).  None when the user has no cold copy."""
+        found = self._cold_find(meta.user_id)
+        if found is None:
+            return None
+        ms = (self.cost.psi_transfer_ms(meta.prefix_len, link="cold")
+              + self.cost.dram_load_ms(meta.prefix_len))
+        src_host, _ = found
+        owner_host = self.topology.host_of(self.router.route_key(
+            meta.user_id))
+        if src_host != owner_host:
+            ms += self.cost.psi_transfer_ms(meta.prefix_len,
+                                            cross_host=True)
+        return ms
+
+    def _promote_open(self, uid: int) -> None:
+        self._promote_inflight[uid] = self._promote_inflight.get(uid, 0) + 1
+
+    def _promote_close(self, uid: int) -> None:
+        n = self._promote_inflight.get(uid, 0)
+        if n <= 1:
+            self._promote_inflight.pop(uid, None)
+        else:
+            self._promote_inflight[uid] = n - 1
+
+    def _start_promotion(self, t: float, inst: InstanceRuntime,
+                         meta: UserMeta, src_host: str, store) -> None:
+        """Async cold->DRAM promotion on the pre path (the relay's side
+        lane): a cold read on the source host's cold link, plus one NIC
+        fabric leg when the copy lives on a foreign or departed host —
+        the LAZY handoff moment: the entry re-homes now, on touch, not
+        eagerly at host_leave."""
+        uid = meta.user_id
+        dst_host = self.topology.host_of(inst.name)
+        if src_host == dst_host:
+            entry = store.take(uid)          # store counts a promotion
+            arrival, ms = self._cold_transfer(t, src_host, entry.nbytes,
+                                              entry.prefix_len or 1)
+        else:
+            entry = store.extract(uid)       # extract != evict: handoff
+            read_t, ms1 = self._cold_transfer(t, src_host, entry.nbytes,
+                                              entry.prefix_len or 1)
+            arrival, ms2 = self._link_transfer(read_t, src_host, dst_host,
+                                               entry.nbytes,
+                                               entry.prefix_len or 1)
+            ms = ms1 + ms2
+            self.cold["lazy_handoffs"] += 1
+            if not store.entries:
+                # last lazily handed-off entry left a departed host's
+                # namespace: release the orphan
+                self._orphan_cold.pop(src_host, None)
+        self.cold["promotions"] += 1
+        self.cold["ms"] += ms
+        self._promote_open(uid)
+        self.schedule(arrival, "promote_done", inst=inst, meta=meta,
+                      entry=entry)
+        # the disk read needs no NPU: give the model slot back for the
+        # whole cold-link wait (the pre lifecycle stays open via
+        # inflight_pre) — holding it would let a congested cold link
+        # starve the instance of compute slots
+        inst.release_slot(t)
+
+    def _on_promote_done(self, t: float, inst: InstanceRuntime,
+                         meta: UserMeta, entry) -> None:
+        uid = meta.user_id
+        self._promote_close(uid)
+        entry.cold_sourced = True
+        if self.instances.get(inst.name) is not inst:
+            # the destination churned away mid-promotion: the copy
+            # re-homes to the current owner's DRAM tier instead
+            inst.inflight_pre.discard(uid)
+            try:
+                target = self.router.route_key(uid)
+            except Exception:
+                self.cold["promote_dropped"] += 1
+                return
+            self.schedule(t, "handoff_done", target=target, entry=entry,
+                          tier="dram")
+            return
+        if not inst.expander.spill(entry):
+            # the DRAM tier rejected the promoted copy: the revival is
+            # lost and the pre lifecycle closes as a miss (the model
+            # slot went back when the promotion started)
+            self.cold["promote_dropped"] += 1
+            inst.inflight_pre.discard(uid)
+            self._wake_waiters(t, inst, uid)
+            return
+        # continue exactly like the DRAM pre-reload path: stream the
+        # copy into the HBM window over PCIe so the rank stage sees a
+        # resident (cold-sourced) psi
+        d = inst.expander.entries[uid]
+        d.reload_tokens = inst.hbm.missing_tokens(uid, d.prefix_len)
+        ms = inst.executor.reload_ms(meta, tokens=d.reload_tokens)
+
+        def start(t2, inst=inst, meta=meta, ms=ms):
+            self.schedule(t2 + ms / 1e3, "pre_reload_done", inst=inst,
+                          meta=meta, ms=ms, slotless=True)
+        inst.pcie_acquire(t, start)
+
     # --- pipeline stage handlers ----------------------------------------------
 
     def _on_arrival(self, t: float, meta: UserMeta, sink=None) -> None:
@@ -993,15 +1291,18 @@ class RelayRuntime:
         uid = meta.user_id
         if self.disagg and target in self.instances \
                 and self.instances[target].role == "prefill":
-            # psi already host-local at the OWNER (resident window or
-            # DRAM copy)?  Then the colocated side path — lifecycle
-            # touch or local reload — handles it without burning
+            # psi already host-local at the OWNER (resident window,
+            # DRAM copy, or a cold-tier copy a promotion can revive)?
+            # Then the colocated side path — lifecycle touch, local
+            # reload, or cold promotion — handles it without burning
             # prefill compute or a NIC shipment
             owner = self.router.route_key(uid)
             oinst = self.instances.get(owner)
             if oinst is not None and (
                     oinst.hbm.resident(uid) is not None
-                    or uid in oinst.expander.entries):
+                    or uid in oinst.expander.entries
+                    or (self.cold_enabled
+                        and self._cold_find(uid) is not None)):
                 target = owner
         if target not in self.instances:
             # the bound instance churned away between binding and the
@@ -1014,7 +1315,10 @@ class RelayRuntime:
             # flight over the network", not "in flight locally": a rank
             # racing the shipment is served as a miss, never parked
             self._ship_open(uid)
-        inst.enqueue({"kind": "pre", "meta": meta}, t)
+        # t_signal rides along so deadline-aware side-path decisions
+        # (the cold promotion's viability test) can subtract the queue
+        # time already burned from the pre-signal -> rank window
+        inst.enqueue({"kind": "pre", "meta": meta, "t_signal": t}, t)
 
     def _pre_target(self, uid: int) -> str:
         """Current side-path placement for a user: a prefill engine in
@@ -1057,7 +1361,8 @@ class RelayRuntime:
     def _on_job_start(self, t: float, inst: InstanceRuntime, job: dict
                       ) -> None:
         if job["kind"] == "pre":
-            self._start_pre(t, inst, job["meta"])
+            self._start_pre(t, inst, job["meta"],
+                            t_signal=job.get("t_signal"))
             return
         if job["kind"] == "batch":
             self._start_batch(t, inst, job["group"])
@@ -1097,7 +1402,17 @@ class RelayRuntime:
 
             inst.pcie_acquire(t, start_reload)
         else:  # miss
-            if uid in inst.inflight_pre:
+            if self._promote_inflight.get(uid):
+                # promotion-vs-deadline race: the psi is still on the
+                # disk path (cold read / NIC leg) — serve the miss NOW,
+                # mirroring the shipping late_miss semantics, rather
+                # than stall the rank on an I/O-bound arrival; the
+                # promotion still lands for future reuse
+                self.cold["late_miss"] += 1
+                self._promote_raced.add(uid)
+                inst.expander.finish(uid)
+                self._finish_rank(t, inst, job, "miss", None)
+            elif uid in inst.inflight_pre:
                 # out-of-order: rank arrived before its pre-infer finished
                 inst.expander.finish(uid)
                 self._park(t, inst, uid, job)
@@ -1113,8 +1428,8 @@ class RelayRuntime:
                 inst.expander.finish(uid)
                 self._finish_rank(t, inst, job, "miss", None)
 
-    def _start_pre(self, t: float, inst: InstanceRuntime, meta: UserMeta
-                   ) -> None:
+    def _start_pre(self, t: float, inst: InstanceRuntime, meta: UserMeta,
+                   t_signal: Optional[float] = None) -> None:
         uid = meta.user_id
         if inst.role == "prefill":
             owner = self.instances.get(self.router.route_key(uid))
@@ -1147,6 +1462,33 @@ class RelayRuntime:
 
             inst.pcie_acquire(t, start)
             return
+        if self.cold_enabled and inst.role != "prefill":
+            dst_host = self.topology.host_of(inst.name)
+            found = self._cold_find(uid, prefer=dst_host)
+            # serving-path probe accounting (the admission estimator
+            # peeks without counting): hit on the store that holds the
+            # copy, miss against the destination host's store
+            if found is not None:
+                found[1].stats["hits"] += 1
+            elif dst_host in self.cold_stores:
+                self.cold_stores[dst_host].stats["misses"] += 1
+            if found is not None:
+                burned = 0.0 if t_signal is None else (t - t_signal) * 1e3
+                if self._promote_viable(t, meta, found[0],
+                                        self.topology.host_of(inst.name),
+                                        burned_ms=burned):
+                    # cold-resident: an async promotion (cold read ->
+                    # DRAM -> PCIe reload) replaces the prefill
+                    # compute; the rank either finds the revived psi
+                    # or races it and is served as a miss (never
+                    # stalls on the disk)
+                    self._start_promotion(t, inst, meta, *found)
+                    return
+                # the read would land after the rank (link backlog +
+                # transfer + reload exceed the pre-signal->rank
+                # window): a doomed promotion converts a would-be
+                # compute hit into a full miss — recompute instead
+                self.cold["promote_throttled"] += 1
         if inst.pre_batcher is not None:
             self._batch_pre(t, inst, meta)
             return
@@ -1527,9 +1869,20 @@ class RelayRuntime:
             self._ship_raced.discard(uid)
             if inst is not None:
                 inst.hbm.consume(uid)
+        if uid in self._promote_raced \
+                and not self._promote_inflight.get(uid):
+            # same contract for a promotion the rank outran: the
+            # revived copy arrives consumed (and un-marks itself — the
+            # lifecycle it was promoted for already missed)
+            self._promote_raced.discard(uid)
+            if inst is not None:
+                e = inst.hbm.consume(uid)
+                if e is not None:
+                    e.cold_sourced = False
 
     def _on_pre_reload_done(self, t: float, inst: InstanceRuntime,
-                            meta: UserMeta, ms: float) -> None:
+                            meta: UserMeta, ms: float,
+                            slotless: bool = False) -> None:
         uid = meta.user_id
         inst.inflight_pre.discard(uid)
         if self._ship_inflight.get(uid):
@@ -1544,7 +1897,10 @@ class RelayRuntime:
             # the reload raced a rebalance: the promoted psi belongs to
             # the new owner now — hand it off instead of keeping it
             self._handoff_hbm(inst, uid, t)
-        inst.release_slot(t)
+        if not slotless:
+            # a cold promotion released its model slot at the disk
+            # read; only the slot-holding DRAM pre-reload returns one
+            inst.release_slot(t)
         self._wake_waiters(t, inst, uid)
 
     def _on_reload_done(self, t: float, inst: InstanceRuntime, job: dict,
@@ -1610,6 +1966,7 @@ class RelayRuntime:
             "goodput_qps": int(ok.sum()) / max(dur, 1e-9),
             "hbm_hit": hits[HitKind.HBM_HIT.value] / n,
             "dram_hit": hits[HitKind.DRAM_HIT.value] / n,
+            "cold_hit": hits[HitKind.COLD_HIT.value] / n,
             "miss": hits[HitKind.MISS_FALLBACK.value] / n,
             "pre_p99_ms": float(np.percentile(
                 [r.pre_ms for r in self.records], 99)),
@@ -1660,11 +2017,31 @@ class RelayRuntime:
                "shipping": {**self.shipping,
                             "inflight": sum(self._ship_inflight.values())},
                "nic": {h: dict(n) for h, n in self.nics.items()},
+               # cold tier: the runtime ledger plus every store's
+               # unified counter family (inserts/live/evictions/
+               # handoffs/promotions); departed hosts' orphaned
+               # namespaces report until their last entry re-homes
+               "cold": {**self.cold,
+                        "inflight": sum(self._promote_inflight.values()),
+                        "stores": {
+                            **{h: {**s.stats, "live": s.live_count}
+                               for h, s in self.cold_stores.items()},
+                            **{f"{h} (departed)": {**s.stats,
+                                                   "live": s.live_count}
+                               for h, s in self._orphan_cold.items()}}},
+               "cold_links": {h: dict(l)
+                              for h, l in self.cold_links.items()},
                "slo": self.slo.summary(now=self.now)}
         inst = {}
         for name, i in self.instances.items():
-            inst[name] = {**i.stats, "hbm": dict(i.hbm.stats),
-                          "dram": dict(i.expander.stats)}
+            # every tier reports the same counter core (inserts / live /
+            # evictions / handoffs + tier extras) so this renders as
+            # one coherent hierarchy table
+            inst[name] = {**i.stats,
+                          "hbm": {**i.hbm.stats,
+                                  "live": i.hbm.live_count},
+                          "dram": {**i.expander.stats,
+                                   "live": len(i.expander.entries)}}
             if i.batcher is not None:
                 inst[name]["batch"] = dict(i.batcher.stats)
         agg["instances"] = inst

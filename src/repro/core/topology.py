@@ -139,6 +139,12 @@ class ClusterTopology:
         self.owner_map = OwnerMap(self._rank_names(), epoch=0)
         self.views: Dict[str, OwnerMap] = {
             name: self.owner_map.copy() for name in self.hosts}
+        # departed-host registry (name -> epoch at leave): a host that
+        # left stops owning keys immediately, but resources that hand
+        # off LAZILY (its cold-tier namespace) stay addressable until
+        # their last entry re-homes on touch — consumers use this to
+        # tell "departed" apart from "never existed"
+        self.departed: Dict[str, int] = {}
         self._instance_host: Dict[str, str] = {}
         for h in hosts:
             for inst in h.instances:
@@ -211,7 +217,14 @@ class ClusterTopology:
         self.owner_map = OwnerMap(self._rank_names(), epoch=self.epoch + 1)
         seed = sorted(self.hosts)[0]
         self.views[seed] = self.owner_map.copy()
+        self.departed[name] = self.epoch
         return host
+
+    def mark_departed(self, name: str) -> None:
+        """Record a host as departed (idempotent; callers that remove
+        hosts through a router wrapper rather than ``leave`` use this
+        to keep the registry complete)."""
+        self.departed.setdefault(name, self.epoch)
 
     def register_instance(self, instance: str, host: str,
                           special: bool) -> None:

@@ -100,6 +100,14 @@ class SequenceAwareTrigger:
         # the slack test then admits only when pre-infer AND the
         # shipment both fit the retrieval/preprocess window.
         self.ship_estimator = None
+        # hierarchical cold tier: the runtime installs a probe that
+        # returns the promotion-path estimate (cold read + reload, ms)
+        # for a cold-RESIDENT user, or None.  For those users the side
+        # path is a revival, not a prefill — the slack test prices the
+        # (much cheaper) disk path instead of the compute estimate, so
+        # long-prefix tail users that prefill would price out of the
+        # deadline stay admittable once their psi exists cold.
+        self.cold_estimator = None
         # segment-aware value scoring (beyond-prefix reuse): when the
         # runtime flips this on, admission scores the TOTAL reusable
         # tokens (prefix + candidate-independent interior segments),
@@ -109,7 +117,7 @@ class SequenceAwareTrigger:
         self.stats = {"assessed": 0, "at_risk": 0, "admitted": 0,
                       "rate_limited": 0, "rate_limited_pool": 0,
                       "rate_limited_instance": 0, "slack_rejected": 0,
-                      "reusable_tokens_admitted": 0}
+                      "cold_scored": 0, "reusable_tokens_admitted": 0}
 
     # --- side-path risk test (metadata only) -------------------------------
     def assess(self, meta: UserMeta) -> Decision:
@@ -143,11 +151,20 @@ class SequenceAwareTrigger:
             return Decision(False, False, d.est_full_ms, "safe")
         reuse = self.reusable_tokens(meta)
         if self.cfg.slack_budget_ms:
-            pre_est = self.cost.pre_infer_ms(reuse)
-            if self.ship_estimator is not None:
-                # psi must land at the OWNER before ranking arrives:
-                # the shipping hop is on the relay's deadline path
-                pre_est += self.ship_estimator(meta)
+            cold_est = (self.cold_estimator(meta)
+                        if self.cold_estimator is not None else None)
+            if cold_est is not None:
+                # cold-resident: the side path promotes the existing
+                # psi (disk read + reload) instead of prefilling — no
+                # compute, no shipping hop
+                self.stats["cold_scored"] += 1
+                pre_est = cold_est
+            else:
+                pre_est = self.cost.pre_infer_ms(reuse)
+                if self.ship_estimator is not None:
+                    # psi must land at the OWNER before ranking arrives:
+                    # the shipping hop is on the relay's deadline path
+                    pre_est += self.ship_estimator(meta)
             if pre_est > self.cfg.slack_budget_ms:
                 self.stats["slack_rejected"] += 1
                 return Decision(False, True, d.est_full_ms,

@@ -25,12 +25,14 @@ class CacheState(str, enum.Enum):
     PENDING = "pending"        # pre-infer admitted, compute in flight
     HBM = "hbm"                # resident in device memory (live window)
     DRAM = "dram"              # spilled to server-local DRAM
+    COLD = "cold"              # demoted to host SSD / remote psi store
     EVICTED = "evicted"
 
 
 class HitKind(str, enum.Enum):
     HBM_HIT = "hbm_hit"
     DRAM_HIT = "dram_hit"      # required a DRAM->HBM reload
+    COLD_HIT = "cold_hit"      # revived from the cold tier this lifecycle
     MISS_FALLBACK = "miss"     # full inference on the critical path
 
 

@@ -172,6 +172,13 @@ class ZipfPopularity:
             return np.log(rank) / np.log(n)
         return (rank ** (1.0 - s) - 1.0) / (n ** (1.0 - s) - 1.0)
 
+    def tail_share(self, rank: float) -> float:
+        """Analytic share of requests landing BEYOND the top-``rank``
+        users (1 - cdf): the fraction of traffic from the long tail a
+        head-sized cache cannot hold — capacity reports use this to
+        label how much load the sub-DRAM tiers are responsible for."""
+        return 1.0 - self.cdf(rank)
+
     def sample(self, rng: np.random.Generator, n: int = 1) -> np.ndarray:
         """Draw ``n`` user ids (int64 array)."""
         u = rng.random(n)

@@ -59,6 +59,14 @@ def main(argv=None):
                     help=">0 disaggregates the pre-infer side path onto "
                          "dedicated hosts; psi ships cross-host to its "
                          "owning rank instance over the NIC fabric")
+    ap.add_argument("--cold-budget", type=float, default=0.0,
+                    help=">0 adds a host-local cold tier (SSD / remote "
+                         "psi store) of this many bytes under DRAM: "
+                         "evictions demote instead of dropping, and a "
+                         "cold-resident user's admission starts an async "
+                         "cold->DRAM promotion")
+    ap.add_argument("--dram-budget", type=float, default=500e9,
+                    help="per-host DRAM expander budget in bytes")
     args = ap.parse_args(argv)
     if args.segments and not args.page_tokens:
         args.page_tokens = 64  # segment spans live on the page grid
@@ -76,7 +84,9 @@ def main(argv=None):
             cluster=ClusterConfig(hosts=args.hosts,
                                   prefill_hosts=args.prefill_hosts,
                                   page_tokens=args.page_tokens,
-                                  segments=args.segments)),
+                                  segments=args.segments,
+                                  dram_budget_bytes=args.dram_budget,
+                                  cold_budget_bytes=args.cold_budget)),
             cost, arr)
         print(json.dumps(s, indent=1))
         return s
@@ -101,7 +111,9 @@ def main(argv=None):
                               segments=args.segments,
                               hosts=args.hosts,
                               prefill_hosts=args.prefill_hosts,
-                              hbm_cache_bytes=hbm_bytes))
+                              hbm_cache_bytes=hbm_bytes,
+                              dram_budget_bytes=args.dram_budget,
+                              cold_budget_bytes=args.cold_budget))
 
     def report(results):
         hits, lat = {}, []
@@ -171,6 +183,8 @@ def main(argv=None):
     print(json.dumps(svc.stats()["trigger"], indent=1))
     if args.prefill_hosts:
         print(json.dumps({"shipping": svc.stats()["shipping"]}, indent=1))
+    if args.cold_budget:
+        print(json.dumps({"cold": svc.stats()["cold"]}, indent=1))
     return hits
 
 

@@ -316,3 +316,37 @@ def test_compare_capacity_knee_floor_and_monotone_curve():
                             curve_tol=0.02)
     assert rows == [("capacity", "<cells>", 1, 0,
                      "cell-key intersection non-empty", False)]
+
+
+def test_compare_capacity_mmpp_cells_exempt_from_shape_gates():
+    """Bursty-arrival cells keep the knee floor but skip the
+    Poisson-only inferences (goodput monotonicity, cold knee lift):
+    MMPP burst phase realigns with every offered-rate rescale, so a
+    sub-knee goodput dip there is alignment noise, not admission
+    collapse."""
+    dip_curve = [{"offered_qps": 50.0, "goodput_qps": 50.0},
+                 {"offered_qps": 75.0, "goodput_qps": 30.0},
+                 {"offered_qps": 100.0, "goodput_qps": 99.0}]
+    mk = lambda arrival, knee=100.0: {
+        "knee_qps": knee, "curve": dip_curve,
+        "workload": {"skew": 1.1, "arrival": arrival}}
+    ref = {"cells": {
+        "relay_cold/L2048/zipf1.1-mmpp": mk("mmpp", knee=60.0),
+        "relay_batched/L2048/zipf1.1-mmpp": mk("mmpp", knee=100.0),
+        "relay_cold/L2048/zipf1.1-poisson": mk("poisson"),
+        "relay_batched/L2048/zipf1.1-poisson": mk("poisson", knee=90.0)}}
+    rows = compare_capacity(ref, ref, knee_floor=0.85, curve_tol=0.02)
+    by_cell = {}
+    for mode, field, *_, ok in rows:
+        by_cell.setdefault(mode, {})[field] = ok
+    mmpp = by_cell["relay_cold/L2048/zipf1.1-mmpp"]
+    poisson = by_cell["relay_cold/L2048/zipf1.1-poisson"]
+    # knee floor gates everyone; the shape gates only the poisson cell
+    assert mmpp["knee_qps"] and poisson["knee_qps"]
+    assert "goodput monotone to knee" not in mmpp
+    assert not poisson["goodput monotone to knee"]       # the dip fails
+    # cold knee lift: skipped for mmpp (60 < 100 would fail), enforced
+    # and passing for poisson (100 >= 90)
+    lift = [f for f in poisson if f.startswith("knee_qps >=")]
+    assert lift and poisson[lift[0]]
+    assert not any(f.startswith("knee_qps >=") for f in mmpp)

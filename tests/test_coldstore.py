@@ -1,0 +1,311 @@
+"""Cold-tier correctness: bit-identity through demotion/promotion and
+the promotion-vs-rank race.
+
+Three groups:
+
+  * ``ColdStore`` unit properties (hypothesis via the tests/_hyp shim):
+    an inserted psi comes back byte-identical through ``take``, and the
+    unified counter family conserves
+    ``inserts == live + evictions + handoffs + promotions`` under any
+    insert/take/extract/drop interleaving.
+
+  * Full-hierarchy round trips: psi leaves a (paged) HBM window, spills
+    to the DRAM expander, demotes into the cold store under LRU
+    pressure, promotes back out, and re-pages into a fresh window —
+    and the ranking-visible bytes are identical at every hop.  Includes
+    the multi-span segment case (beyond-prefix reuse entries whose
+    spans pad to whole pages) because that is where a sloppy
+    materialize/re-page cycle would silently corrupt the layout.
+
+  * Regression: a rank racing its OWN in-flight cold promotion is
+    served as a miss immediately (``cold["late_miss"]``) instead of
+    stalling on disk I/O, and the promoted copy still lands —
+    consumed-on-arrival, serving future requests, never a premature
+    eviction.
+"""
+
+import numpy as np
+from _hyp import given, settings, st
+
+from repro.core import (ClusterConfig, GRCostModel, TriggerConfig,
+                        UserMeta, relay_config)
+from repro.core.cache import CacheEntry, HBMCacheStore, PagedHBMStore
+from repro.core.coldstore import ColdStore, ColdStoreConfig
+from repro.core.expander import DRAMExpander, ExpanderConfig
+from repro.core.paging import PageLayout, ceil_div
+from repro.core.runtime import Record
+from repro.core.types import CacheState
+from repro.models import get_config
+from repro.serving.simulator import ClusterSim
+
+COST = GRCostModel(get_config("hstu_gr"))
+
+
+def _psi_bytes(value):
+    """Canonical byte string of a dense (K, V) psi pytree."""
+    k, v = value
+    return np.asarray(k).tobytes() + np.asarray(v).tobytes()
+
+
+def _dense_psi(rng, n_layers, tokens, heads, dim):
+    shape = (n_layers, 1, tokens, heads, dim)
+    k = rng.standard_normal(shape).astype(np.float32)
+    v = rng.standard_normal(shape).astype(np.float32)
+    return k, v
+
+
+def _store_conserved(s: ColdStore):
+    st_ = s.stats
+    assert st_["inserts"] == (s.live_count + st_["evictions"]
+                              + st_["handoffs"] + st_["promotions"]), st_
+    assert s.used_bytes == sum(e.nbytes for e in s.entries.values())
+    assert s.used_bytes <= s.cfg.budget_bytes
+
+
+# ---------------------------------------------------------------------------
+# unit properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(
+    st.sampled_from(["insert", "take", "extract", "drop", "lookup"]),
+    st.integers(0, 5), st.integers(1, 40)), max_size=60))
+def test_coldstore_conservation(ops):
+    """inserts == live + evictions + handoffs + promotions after ANY
+    interleaving, and used_bytes tracks the live set exactly."""
+    s = ColdStore(ColdStoreConfig(budget_bytes=100))
+    for t, (op, uid, nbytes) in enumerate(ops):
+        if op == "insert":
+            s.insert(CacheEntry(uid, "psi", nbytes, float(t),
+                                prefix_len=uid))
+        elif op == "take":
+            s.take(uid)
+        elif op == "extract":
+            s.extract(uid)
+        elif op == "drop":
+            s.drop(uid)
+        else:
+            s.lookup(uid)
+        _store_conserved(s)
+    probes = s.stats["hits"] + s.stats["misses"]
+    assert probes == sum(1 for op, _, _ in ops if op == "lookup")
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31), st.integers(1, 3), st.integers(1, 64),
+       st.integers(1, 4), st.integers(1, 8))
+def test_coldstore_roundtrip_bitwise(seed, n_layers, tokens, heads, dim):
+    """insert -> take returns the psi byte-identical: the cold tier is
+    storage, never a transform."""
+    rng = np.random.default_rng(seed)
+    value = _dense_psi(rng, n_layers, tokens, heads, dim)
+    ref = _psi_bytes(value)
+    e = CacheEntry(7, value, len(ref), 0.0, prefix_len=tokens,
+                   spans=((0, tokens),))
+    s = ColdStore(ColdStoreConfig(budget_bytes=len(ref)))
+    assert s.insert(e)
+    assert s.peek(7).state is CacheState.COLD
+    out = s.take(7)
+    assert out is not None and _psi_bytes(out.value) == ref
+    assert out.spans == ((0, tokens),) and out.prefix_len == tokens
+    _store_conserved(s)
+
+
+def test_coldstore_rejects_unfit_and_replaces_stale():
+    s = ColdStore(ColdStoreConfig(budget_bytes=100))
+    assert not s.insert(CacheEntry(1, "psi", 101, 0.0))   # can never fit
+    assert s.stats["rejected_inserts"] == 1
+    assert not s.insert(CacheEntry(2, None, 10, 0.0))     # no payload
+    assert s.insert(CacheEntry(3, "old", 60, 0.0))
+    assert s.insert(CacheEntry(3, "new", 60, 1.0))        # same-user refresh
+    assert s.stats["evictions"] == 1 and s.live_count == 1
+    assert s.peek(3).value == "new"
+    _store_conserved(s)
+
+
+# ---------------------------------------------------------------------------
+# full-hierarchy round trips
+# ---------------------------------------------------------------------------
+
+
+def _layout(n_layers=2, heads=2, dim=4, page_tokens=16):
+    return PageLayout(page_tokens=page_tokens, slabs=2 * n_layers,
+                      token_bytes=heads * dim * 4)
+
+
+def _padded_tokens(spans, page_tokens):
+    return sum(page_tokens * ceil_div(int(ln), page_tokens)
+               for _, ln in spans)
+
+
+def _paged_roundtrip(spans, seed=0, n_layers=2, heads=2, dim=4,
+                     page_tokens=16):
+    """Window -> DRAM -> cold -> DRAM -> fresh window; returns the
+    reference bytes and the bytes the final window would rank with."""
+    rng = np.random.default_rng(seed)
+    lay = _layout(n_layers, heads, dim, page_tokens)
+    tokens = _padded_tokens(spans, page_tokens)
+    value = _dense_psi(rng, n_layers, tokens, heads, dim)
+    hbm = PagedHBMStore(lay.entry_bytes(tokens) * 2, lay)
+    assert hbm.insert(11, value, lay.entry_bytes(tokens), 0.0,
+                      prefix_len=tokens, spans=spans) == []
+    entry = hbm.entries[11]
+    ref = _psi_bytes(entry.value.materialize())   # pool-truth reference
+
+    # spill: the expander materializes the paged psi to a dense copy
+    exp = DRAMExpander(ExpanderConfig(dram_budget_bytes=entry.nbytes))
+    cold = ColdStore(ColdStoreConfig(budget_bytes=10 * entry.nbytes))
+    exp.demote_sink = cold.insert
+    hbm.consume(11)   # spills happen post-consumption (paged _evict
+    assert exp.spill(hbm.pop(11))   # only materializes a served psi)
+    d = exp.entries[11]
+    assert not isinstance(d.value, PagedHBMStore)
+    assert _psi_bytes(d.value) == ref and d.spans == spans
+
+    # LRU pressure demotes it into the cold store...
+    filler = CacheEntry(12, _dense_psi(rng, n_layers, tokens, heads, dim),
+                        entry.nbytes, 1.0, prefix_len=tokens)
+    assert exp.spill(filler)
+    assert exp.stats["demotions"] == 1 and cold.stats["inserts"] == 1
+    _store_conserved(cold)
+
+    # ...and a promotion brings it back up, byte-identical
+    up = cold.take(11)
+    assert _psi_bytes(up.value) == ref and up.spans == spans
+    exp2 = DRAMExpander(ExpanderConfig(dram_budget_bytes=10 * entry.nbytes))
+    assert exp2.spill(up)
+    hbm2 = PagedHBMStore(lay.entry_bytes(tokens) * 2, lay)
+    exp2.complete_reload(11, hbm2, 2.0)
+    back = hbm2.resident(11)
+    assert back is not None and back.spans == spans
+    return ref, _psi_bytes(back.value.materialize())
+
+
+def test_roundtrip_prefix_only_paged():
+    ref, back = _paged_roundtrip(((0, 48),))
+    assert back == ref
+
+
+def test_roundtrip_multispan_segments():
+    """The beyond-prefix case: spans pad to whole pages independently;
+    a demotion/promotion cycle must reproduce the padded layout (zero
+    tails included) bit-for-bit, or the paged kernel's position tables
+    would read garbage."""
+    ref, back = _paged_roundtrip(((0, 40), (64, 20), (160, 7)))
+    assert back == ref
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31),
+       st.lists(st.integers(1, 40), min_size=1, max_size=4),
+       st.sampled_from([8, 16]))
+def test_roundtrip_multispan_property(seed, lens, page_tokens):
+    spans, cursor = [], 0
+    for ln in lens:
+        spans.append((cursor, ln))
+        cursor += 3 * ln
+    ref, back = _paged_roundtrip(tuple(spans), seed=seed,
+                                 page_tokens=page_tokens)
+    assert back == ref
+
+
+def test_roundtrip_dense_store():
+    """Same cycle over the unpaged window: the value object rides the
+    hierarchy untouched."""
+    rng = np.random.default_rng(3)
+    value = _dense_psi(rng, 2, 32, 2, 4)
+    ref = _psi_bytes(value)
+    hbm = HBMCacheStore(10 ** 6)
+    hbm.insert(5, value, len(ref), 0.0, prefix_len=32)
+    hbm.consume(5)
+    exp = DRAMExpander(ExpanderConfig(dram_budget_bytes=len(ref)))
+    cold = ColdStore(ColdStoreConfig(budget_bytes=10 ** 6))
+    exp.demote_sink = cold.insert
+    assert exp.spill(hbm.pop(5))
+    assert exp.spill(CacheEntry(6, "filler", len(ref), 1.0))
+    up = cold.take(5)
+    assert up is not None and _psi_bytes(up.value) == ref
+    up.cold_sourced = True   # the runtime marks revivals (_on_promote_done)
+    hbm2 = HBMCacheStore(10 ** 6)
+    exp2 = DRAMExpander(ExpanderConfig(dram_budget_bytes=10 ** 6))
+    assert exp2.spill(up)
+    exp2.complete_reload(5, hbm2, 2.0)
+    assert _psi_bytes(hbm2.resident(5).value) == ref
+    # the marker rode the whole cycle: the rank this copy unblocks
+    # classifies as a cold hit
+    assert hbm2.resident(5).cold_sourced
+
+
+# ---------------------------------------------------------------------------
+# promotion-vs-rank race regression
+# ---------------------------------------------------------------------------
+
+
+def _race_runtime():
+    trig = TriggerConfig(n_instances=5, r2=0.8, t_life_s=0.5,
+                         kv_p99_len=4096, hbm_bytes=4e9, r1=0.5,
+                         q_m=1e3 / COST.pre_infer_ms(3072))
+    cfg = relay_config(trigger=trig, cluster=ClusterConfig(
+        hbm_cache_bytes=2e9, dram_budget_bytes=150e6,
+        cold_budget_bytes=400e9))
+    return ClusterSim(cfg, COST).runtime
+
+
+def test_rank_racing_own_promotion_served_as_miss():
+    """A cold-resident user whose rank request lands while the cold
+    read is still in flight must be served as a miss NOW — never parked
+    on disk I/O — and the promoted copy still lands for future reuse,
+    consumed-on-arrival (its lifecycle already missed)."""
+    rt = _race_runtime()
+    uid = 424242
+    meta = UserMeta(user_id=uid, prefix_len=2048)
+    target = rt.router.route_key(uid)
+    host = rt.topology.host_of(target)
+    store = rt.cold_stores[host]
+    assert store.insert(CacheEntry(uid, "psi", COST.kv_bytes(2048), 0.0,
+                                   prefix_len=2048))
+
+    # pre signal at t=0 starts the (viable) promotion; the rank arrives
+    # 1 ms later — long before the ~5 ms cold read completes
+    rec = Record(user_id=uid, t_arrival=0.0, prefix_len=2048,
+                 ctx_tokens=2048 + meta.incr_len)
+    rt.schedule(0.0, "pre_signal", meta=meta, target=target)
+    rt.schedule(0.001, "rank_arrival", meta=meta, rec=rec)
+    rt.drain()
+
+    inst = rt.instances[target]
+    assert rec.hit == "miss"
+    assert rt.cold["late_miss"] == 1 and rt.cold["promotions"] == 1
+    # no stall: the raced rank paid neither park time on the in-flight
+    # psi nor a reload leg — it fell back to full inference immediately
+    assert rec.pre_ms == 0.0 and rec.load_ms == 0.0
+    assert rec.rank_ms > 0.0 and rec.t_done > 0.0
+    # the promotion still landed: resident, pre-consumed, and no longer
+    # marked cold_sourced (the lifecycle it was revived for is over)
+    e = inst.hbm.resident(uid)
+    assert e is not None and e.consumed and not e.cold_sourced
+    assert not rt._promote_raced and not rt._promote_inflight
+    assert inst.hbm.stats["premature_evictions"] == 0
+    # drained ledger: the store counted exactly one promotion out
+    assert store.stats["promotions"] == 1 and store.live_count == 0
+    _store_conserved(store)
+
+
+def test_promotion_wins_when_rank_arrives_on_time():
+    """Control for the race test: with the full 62 ms pre-signal ->
+    rank window the promotion lands first and the rank classifies as a
+    cold hit (then the marker clears — later visits are warm hits)."""
+    rt = _race_runtime()
+    uid = 424243
+    meta = UserMeta(user_id=uid, prefix_len=2048)
+    target = rt.router.route_key(uid)
+    store = rt.cold_stores[rt.topology.host_of(target)]
+    assert store.insert(CacheEntry(uid, "psi", COST.kv_bytes(2048), 0.0,
+                                   prefix_len=2048))
+    summary = rt.run([(0.0, meta)])
+    assert summary["cold_hit"] > 0.0
+    assert rt.cold["promotions"] == 1 and rt.cold["late_miss"] == 0
+    assert rt.records[0].hit == "cold_hit"
+    e = rt.instances[target].hbm.resident(uid)
+    assert e is not None and not e.cold_sourced

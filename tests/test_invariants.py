@@ -9,6 +9,7 @@ hole: hypothesis samples random cluster configs across the full matrix
 
     hosts x page_tokens x batched x churn events x prefill_hosts
     x segments (beyond-prefix span reuse over the paged window)
+    x cold tier (host-local SSD / remote psi store under DRAM)
 
 plus timed arrival streams (repeat visitors for reuse, uniques for
 window pressure, mixed prefix lengths), runs the virtual-clock sim and
@@ -62,6 +63,10 @@ CONFIGS = st.fixed_dictionaries({
     "page_tokens": st.sampled_from([0, 64]),
     "max_batch": st.sampled_from([0, 4]),
     "dram": st.sampled_from([0.0, 500e9]),
+    # 150e6 is DELIBERATELY tiny (~4 psi): it forces DRAM LRU churn so
+    # demotions/promotions actually fire inside the fuzzed streams
+    "cold": st.sampled_from([0.0, 400e9]),
+    "dram_small": st.booleans(),
     "churn": st.sampled_from(["none", "leave", "join", "leave-prefill"]),
     "qps": st.sampled_from([40.0, 120.0]),
     "n": st.integers(40, 80),
@@ -99,10 +104,20 @@ def _build(p) -> ClusterSim:
     # the dense-store configs (other tests pass 5-key dicts — default
     # to off for them)
     segments = p.get("segments", False) and p["page_tokens"] > 0
+    dram = p["dram"]
+    if p.get("dram_small") and dram > 0:
+        # shrink the expander to ~4 psi so LRU pressure (and, with a
+        # cold tier, the demotion/promotion machinery) actually runs
+        dram = 150e6
     cfg = relay_config(
         trigger=_trigger(),
         cluster=ClusterConfig(
-            hbm_cache_bytes=HBM, dram_budget_bytes=p["dram"],
+            # hbm override: the non-vacuousness test shrinks the window
+            # so returning users actually fall out of HBM (the LRU at
+            # 2e9 holds ~59 psi — more than any recurring pool here,
+            # which would leave the cold probe dead code)
+            hbm_cache_bytes=p.get("hbm", HBM), dram_budget_bytes=dram,
+            cold_budget_bytes=p.get("cold", 0.0),
             hosts=p["hosts"], prefill_hosts=p["prefill_hosts"],
             page_tokens=p["page_tokens"], max_batch=p["max_batch"],
             segments=segments))
@@ -125,7 +140,7 @@ def _assert_invariants(sim: ClusterSim, n_arrivals: int) -> None:
         for c in (r.queue_ms, r.pre_ms, r.load_ms, r.rank_ms):
             assert np.isfinite(c) and c >= 0.0
 
-    owners_hbm, owners_dram, expanders = {}, {}, {}
+    owners_hbm, owners_dram, owners_cold, expanders = {}, {}, {}, {}
     for name, inst in rt.instances.items():
         # cache conservation through the eviction/handoff turnstiles
         hs = inst.hbm.stats
@@ -149,10 +164,39 @@ def _assert_invariants(sim: ClusterSim, n_arrivals: int) -> None:
             owners_hbm[uid] = name
         expanders[id(inst.expander)] = inst.expander
     for exp in expanders.values():
+        # DRAM tier conservation through every turnstile: LRU drops,
+        # cold demotions, upward reloads, rebalance handoffs
+        es = exp.stats
+        assert es["inserts"] == (len(exp.entries) + es["evictions"]
+                                 + es["demotions"] + es["handoffs"]
+                                 + es["promotions"]), \
+            f"DRAM conservation broken: {es}"
         for uid in exp.entries:
             assert uid not in owners_dram, \
                 f"user {uid} in two DRAM tiers"
             owners_dram[uid] = id(exp)
+
+    # cold-tier conservation: every insert is live, evicted, handed
+    # off, or promoted back up; every demotion landed or was dropped;
+    # nothing is still on a cold link after the drain; no user's cold
+    # copy lives in two stores
+    cold = rt.stats()["cold"]
+    assert cold["demotions"] == cold["demote_landed"] \
+        + cold["demote_dropped"], cold
+    assert cold["inflight"] == 0, cold
+    all_stores = dict(rt.cold_stores)
+    all_stores.update(rt._orphan_cold)
+    for host, store in all_stores.items():
+        cs = store.stats
+        assert cs["inserts"] == (store.live_count + cs["evictions"]
+                                 + cs["handoffs"] + cs["promotions"]), \
+            f"{host}: cold conservation broken: {cs}"
+        for uid in store.entries:
+            assert uid not in owners_cold, \
+                f"user {uid} cold-resident on {owners_cold[uid]} AND {host}"
+            owners_cold[uid] = host
+    for link in rt.cold_links.values():
+        assert link["wait_ms"] >= 0.0 and link["bytes"] >= 0
 
     # shipping conservation: every shipment either landed or was
     # dropped by churn — nothing is still in the network after drain
@@ -232,3 +276,45 @@ def test_prefill_zero_is_not_disaggregated():
     assert rt.prefill == [] and not rt.disagg and not rt.nic_serialize
     ship = rt.stats()["shipping"]
     assert all(v == 0 for v in ship.values()), ship
+
+
+def test_cold_zero_builds_no_cold_tier():
+    """Guard the config contract: cold_budget_bytes=0 builds no cold
+    stores, wires no demote sinks or admission estimator, and leaves
+    an all-zero cold ledger — the bit-identity precondition."""
+    sim = _build({"hosts": 2, "prefill_hosts": 0, "page_tokens": 0,
+                  "max_batch": 0, "dram": 500e9, "dram_small": True})
+    sim.run(iter(_stream(30, 120.0, 1)))
+    rt = sim.runtime
+    assert not rt.cold_enabled
+    assert rt.cold_stores == {} and rt._orphan_cold == {}
+    assert rt.cold_links == {}
+    assert rt.trigger.cold_estimator is None
+    assert all(i.expander.demote_sink is None
+               for i in rt.instances.values())
+    cold = rt.stats()["cold"]
+    assert all(v == 0 for k, v in cold.items() if k != "stores"), cold
+    assert cold["stores"] == {}
+
+
+def test_cold_tier_exercised_not_vacuous():
+    """The fuzz matrix must actually reach the cold machinery: a tiny
+    DRAM tier over a rapid-refresh stream demotes on LRU pressure and
+    promotes on return visits, and the conservation invariants hold."""
+    rng = np.random.default_rng(7)
+    sim = _build({"hosts": 1, "prefill_hosts": 0, "page_tokens": 0,
+                  "max_batch": 0, "dram": 500e9, "dram_small": True,
+                  "cold": 400e9, "hbm": 300e6})
+    pool = [1000 + i for i in range(60)]
+    arrivals, t = [], 0.0
+    for _ in range(300):
+        t += rng.exponential(1.0 / 60.0)
+        uid = (int(rng.choice(pool)) if rng.random() < 0.9
+               else int(rng.integers(0, 10 ** 9)))
+        arrivals.append((t, UserMeta(user_id=uid, prefix_len=2048)))
+    sim.run(iter(arrivals))
+    _assert_invariants(sim, len(arrivals))
+    cold = sim.runtime.stats()["cold"]
+    assert cold["demote_landed"] > 0, cold
+    assert cold["promotions"] > 0, cold
+    assert sim.runtime.summary()["cold_hit"] > 0.0

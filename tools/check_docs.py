@@ -1,0 +1,185 @@
+"""Docs smoke: every shell command quoted in the given markdown files
+must resolve against the tree it documents.
+
+``python tools/check_docs.py README.md docs/benchmarks.md``
+
+For each fenced ``bash``/``sh``/``text``-less code block, every
+``python`` invocation is checked statically (nothing is executed):
+
+  * ``python -m pkg.mod``   — the module must exist under ``src/`` or
+    the repo root (package ``__init__``/``__main__`` aware);
+  * ``python path/to.py``   — the script file must exist;
+  * ``--flags``             — every long option passed must appear in
+    an ``add_argument("--...")`` call in the target module's source
+    (following one ``from X import main`` delegation hop, the
+    ``examples/*.py`` thin-driver idiom);
+  * ``pip install -r F``    — the requirements file must exist.
+
+Relative markdown links ``[text](path)`` must also resolve on disk.
+Exits non-zero listing every stale command, so a renamed flag or
+moved module fails CI instead of rotting in the docs.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import shlex
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)#\s]+)(?:#[^)]*)?\)")
+ADD_ARG_RE = re.compile(r"add_argument\(\s*[\"'](--[\w-]+)[\"']")
+DELEGATE_RE = re.compile(r"^from\s+([\w.]+)\s+import\s+main\b", re.M)
+
+SHELL_LANGS = {"", "bash", "sh", "shell", "console"}
+
+
+def module_file(dotted: str) -> str | None:
+    """Resolve ``pkg.mod`` to a source file under src/ or the repo
+    root without importing anything (imports would drag in jax)."""
+    rel = dotted.replace(".", os.sep)
+    for root in (os.path.join(REPO, "src"), REPO):
+        for cand in (rel + ".py",
+                     os.path.join(rel, "__main__.py"),
+                     os.path.join(rel, "__init__.py")):
+            p = os.path.join(root, cand)
+            if os.path.isfile(p):
+                return p
+    return None
+
+
+def declared_flags(path: str, hops: int = 1) -> set:
+    """Long options the module's argparse setup declares; follows one
+    ``from X import main`` delegation (the examples/ driver idiom)."""
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    flags = set(ADD_ARG_RE.findall(src))
+    if not flags and hops:
+        m = DELEGATE_RE.search(src)
+        if m:
+            target = module_file(m.group(1))
+            if target:
+                flags = declared_flags(target, hops - 1)
+    return flags
+
+
+def shell_commands(md_path: str):
+    """Yield (lineno, command) for each statement in shell fences."""
+    lang, buf = None, []
+    with open(md_path, encoding="utf-8") as f:
+        for i, line in enumerate(f, 1):
+            m = FENCE_RE.match(line)
+            if m:
+                lang = None if lang is not None else m.group(1)
+                continue
+            if lang is None or lang not in SHELL_LANGS:
+                continue
+            stmt = line.split("#", 1)[0].strip()
+            if stmt:
+                yield i, stmt
+
+
+def check_command(stmt: str) -> list:
+    """Return a list of problem strings for one shell statement."""
+    try:
+        toks = shlex.split(stmt)
+    except ValueError as exc:
+        return [f"unparseable: {exc}"]
+    while toks and ("=" in toks[0] and not toks[0].startswith("-")):
+        toks = toks[1:]           # strip ENV=VAL prefixes
+    if not toks:
+        return []
+    prog = os.path.basename(toks[0])
+
+    if prog == "pip":
+        probs = []
+        for j, t in enumerate(toks):
+            if t == "-r" and j + 1 < len(toks) \
+                    and not os.path.isfile(os.path.join(REPO, toks[j + 1])):
+                probs.append(f"missing requirements file {toks[j + 1]}")
+        return probs
+    if not prog.startswith("python"):
+        return []                 # only python invocations are gated
+
+    args = toks[1:]
+    target = None
+    if args and args[0] == "-m":
+        if len(args) < 2:
+            return ["python -m with no module"]
+        target = module_file(args[1])
+        if target is None:
+            # third-party entry point (e.g. pytest): importable is
+            # enough; its flags aren't ours to gate
+            import importlib.util
+            sys.path.insert(0, os.path.join(REPO, "src"))
+            try:
+                found = importlib.util.find_spec(args[1]) is not None
+            except (ImportError, ValueError):
+                found = False
+            finally:
+                sys.path.pop(0)
+            return [] if found else \
+                [f"module {args[1]} not found (repo or site-packages)"]
+        rest = args[2:]
+    elif args and not args[0].startswith("-"):
+        path = os.path.join(REPO, args[0])
+        if not os.path.isfile(path):
+            return [f"script {args[0]} does not exist"]
+        target = path
+        rest = args[1:]
+    else:
+        return []
+
+    used = {a.split("=", 1)[0] for a in rest if a.startswith("--")}
+    if not used:
+        return []
+    known = declared_flags(target)
+    if not known:                 # module takes no argparse flags
+        return [f"{os.path.relpath(target, REPO)} declares no flags but "
+                f"docs pass {sorted(used)}"]
+    return [f"unknown flag {f} for {os.path.relpath(target, REPO)}"
+            for f in sorted(used - known)]
+
+
+def check_links(md_path: str) -> list:
+    base = os.path.dirname(os.path.abspath(md_path))
+    probs = []
+    with open(md_path, encoding="utf-8") as f:
+        for i, line in enumerate(f, 1):
+            for ref in LINK_RE.findall(line):
+                if "://" in ref or ref.startswith("mailto:"):
+                    continue
+                if not os.path.exists(os.path.join(base, ref)):
+                    probs.append((i, f"broken link: {ref}"))
+    return probs
+
+
+def main(argv) -> int:
+    files = argv or ["README.md", "docs/benchmarks.md"]
+    failures, n_cmds = [], 0
+    for md in files:
+        path = os.path.join(REPO, md) if not os.path.isabs(md) else md
+        if not os.path.isfile(path):
+            failures.append(f"{md}: file missing")
+            continue
+        for lineno, stmt in shell_commands(path):
+            n_cmds += 1
+            for prob in check_command(stmt):
+                failures.append(f"{md}:{lineno}: {prob}    [{stmt}]")
+        for lineno, prob in check_links(path):
+            failures.append(f"{md}:{lineno}: {prob}")
+    if failures:
+        print(f"check_docs: {len(failures)} stale reference(s):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"check_docs: {n_cmds} commands + all relative links resolve "
+          f"across {len(files)} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
