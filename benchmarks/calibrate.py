@@ -12,6 +12,10 @@ model loads via ``repro.core.costmodel.load_batch_calibration`` /
 ``GRCostModel.with_calibration`` — replacing the fixed 0.2 with the
 measured per-shape numbers so the simulator's ``relay_batched`` /
 ``relay_multihost`` traces price batching the way THIS hardware does.
+``--h2d`` additionally measures device-pool H2D — scatter-insert of k
+fresh pages vs re-shipping the whole pool buffer (what every launch
+pays without ``--device-pool``) — and emits the ``"h2d"`` block
+``GRCostModel.scatter_ms`` prices from.
 
 A TPU deployment re-runs this at its real model scale; the CPU smoke
 numbers exist so the calibration path itself stays exercised in CI
@@ -89,6 +93,76 @@ def measure(buckets: Sequence[int], batches: Sequence[int],
     return cal, rows
 
 
+def measure_h2d(pool_pages: Sequence[int], insert_pages: Sequence[int],
+                repeats: int = 3, page_tokens: int = 64
+                ) -> Tuple[Dict, List[Tuple]]:
+    """Measure device-pool H2D: scatter-insert (only the fresh pages
+    cross the link, donated in-place update) vs full-pool re-ship (what
+    every ``rank_with_pages`` launch pays WITHOUT the device-resident
+    pool) per (pool pages, inserted pages) geometry.
+
+    Emits the ``"h2d"`` calibration block ``GRCostModel.scatter_ms``
+    reads via ``with_calibration``: ``scatter_bw`` / ``reship_bw`` are
+    the median measured link bandwidths (bytes/s), ``grid`` keeps the
+    per-geometry wall times for inspection."""
+    import jax
+
+    from repro.core.paging import DevicePagePool, PageLayout
+    from repro.models import get_config
+
+    cfg = get_config("hstu_gr", smoke=True)
+    layout = PageLayout.from_model_config(cfg, page_tokens)
+    page_bytes = layout.page_bytes
+    dtype = np.float32 if cfg.dtype == "float32" else np.float16
+
+    rows, grid = [], {}
+    scatter_bws, reship_bws = [], []
+    rng = np.random.default_rng(0)
+    for npages in pool_pages:
+        buf = rng.standard_normal(
+            (npages + 1, page_tokens, cfg.n_heads,
+             cfg.head_dim)).astype(dtype)
+        buf[npages] = 0.0                       # null page
+        per_pool = {}
+        for k in insert_pages:
+            if k > npages:
+                continue
+            pages = list(range(k))
+            pool = DevicePagePool(npages, page_bytes)
+            pool.scatter(pages, buf)            # compile/warm + buffer init
+            pool.device_buffer.block_until_ready()
+
+            def t_scatter():
+                t0 = time.perf_counter()
+                pool.scatter(pages, buf)
+                pool.device_buffer.block_until_ready()
+                return (time.perf_counter() - t0) * 1e3
+
+            def t_reship():
+                t0 = time.perf_counter()
+                jax.device_put(buf).block_until_ready()
+                return (time.perf_counter() - t0) * 1e3
+
+            t_reship()                          # warm the transfer path
+            s_ms = float(np.median([t_scatter() for _ in range(repeats)]))
+            r_ms = float(np.median([t_reship() for _ in range(repeats)]))
+            scatter_bws.append(k * page_bytes / (s_ms / 1e3))
+            reship_bws.append(buf.nbytes / (r_ms / 1e3))
+            per_pool[str(k)] = {"scatter_ms": round(s_ms, 4),
+                                "reship_ms": round(r_ms, 4)}
+            rows.append((f"h2d/pool{npages}/insert{k}", s_ms * 1e3,
+                         f"scatter={s_ms:.3f}ms reship={r_ms:.3f}ms "
+                         f"x{r_ms / max(s_ms, 1e-9):.0f}"))
+        grid[str(npages)] = per_pool
+    h2d = {"scatter_bw": float(np.median(scatter_bws)) if scatter_bws
+           else 0.0,
+           "reship_bw": float(np.median(reship_bws)) if reship_bws
+           else 0.0,
+           "page_tokens": page_tokens, "page_bytes": page_bytes,
+           "grid": grid}
+    return h2d, rows
+
+
 def main(argv=None) -> Dict:
     ap = argparse.ArgumentParser(
         description="measure rank_group wall times per (bucket, batch) "
@@ -98,16 +172,33 @@ def main(argv=None) -> Dict:
                     help="comma-separated prefix buckets to measure")
     ap.add_argument("--batches", default="1,2,4,8")
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--h2d", action="store_true",
+                    help="also measure device-pool H2D: scatter-insert "
+                         "vs full-pool re-ship per (pool pages, "
+                         "inserted pages); adds the 'h2d' block "
+                         "GRCostModel.scatter_ms prices from")
+    ap.add_argument("--pool-pages", default="256,1024",
+                    help="pool geometries for --h2d")
+    ap.add_argument("--insert-pages", default="1,8,64",
+                    help="scatter sizes for --h2d")
     ap.add_argument("--quick", action="store_true",
                     help="one bucket, depths (1,2), single repeat "
                          "(CI smoke: exercises the path, not the numbers)")
     args = ap.parse_args(argv)
     buckets = [int(b) for b in args.buckets.split(",")]
     batches = [int(b) for b in args.batches.split(",")]
+    pool_pages = [int(b) for b in args.pool_pages.split(",")]
+    insert_pages = [int(b) for b in args.insert_pages.split(",")]
     if args.quick:
         buckets, batches, args.repeats = buckets[:1], [1, 2], 1
+        pool_pages, insert_pages = pool_pages[:1], insert_pages[:2]
 
     cal, rows = measure(buckets, batches, repeats=args.repeats)
+    if args.h2d:
+        h2d, h2d_rows = measure_h2d(pool_pages, insert_pages,
+                                    repeats=args.repeats)
+        cal["h2d"] = h2d
+        rows += h2d_rows
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -41,14 +41,15 @@ SLO_MS = 135.0
 
 #: every serving mode the harness understands (the BENCH_relay set)
 ALL_MODES = ("baseline", "relay", "relay_dram", "relay_batched",
-             "relay_paged", "relay_segments", "relay_multihost",
-             "relay_disagg", "relay_cold")
+             "relay_paged", "relay_devpool", "relay_segments",
+             "relay_multihost", "relay_disagg", "relay_cold")
 
 
 def mode_config(mode: str, L: int, *, hosts: Optional[int] = None,
                 prefill_hosts: Optional[int] = None) -> RelayConfig:
     """mode: baseline | relay | relay_dram | relay_batched | relay_paged
-    | relay_multihost | relay_disagg
+    | relay_devpool | relay_segments | relay_multihost | relay_disagg
+    | relay_cold
 
     ``relay_batched`` is the ``relay`` deployment with continuous
     micro-batching switched on (same trigger/cache -> equal hit rates);
@@ -57,6 +58,15 @@ def mode_config(mode: str, L: int, *, hosts: Optional[int] = None,
     trigger and byte budget, psi block-granular — hit rates must match
     ``relay_batched`` with slo_qps within tolerance (page-rounded load
     times are the only modelled difference at page-aligned L).
+    ``relay_devpool`` is ``relay_paged`` with the device-resident page
+    pool: inserts/reloads scatter only fresh pages and rank launches
+    pass the pool by reference instead of re-shipping it.  In the
+    simulator the pool data plane is byte-free, so the trace — hit
+    rates, latency, slo_qps — must be IDENTICAL to ``relay_paged``
+    (the h2d win is a live-serving property, gated by the CI smoke's
+    ``launch_reships == 0`` assert and measured by
+    ``benchmarks/calibrate.py --h2d``); the row exists so the sim
+    config path stays exercised and regression-gated.
     ``relay_segments`` is ``relay_paged`` with beyond-prefix reuse
     (RcLLM): the stream attaches per-user candidate-independent
     ``seg_lens``, the side path caches those interior segments
@@ -95,9 +105,11 @@ def mode_config(mode: str, L: int, *, hosts: Optional[int] = None,
     relay = mode != "baseline"
     r2 = 0.8 if relay else 0.2   # 4 active instances either way
     hbm_cache = 4e9
-    batched = mode in ("relay_batched", "relay_paged", "relay_segments",
-                       "relay_multihost", "relay_disagg", "relay_cold")
-    paged = mode in ("relay_paged", "relay_segments", "relay_cold")
+    batched = mode in ("relay_batched", "relay_paged", "relay_devpool",
+                       "relay_segments", "relay_multihost",
+                       "relay_disagg", "relay_cold")
+    paged = mode in ("relay_paged", "relay_devpool", "relay_segments",
+                     "relay_cold")
     multihost = mode in ("relay_multihost", "relay_disagg")
     if hosts is None:
         hosts = 2 if multihost else 1
@@ -120,6 +132,7 @@ def mode_config(mode: str, L: int, *, hosts: Optional[int] = None,
             prefill_hosts=prefill_hosts,
             prefill_m_slots=20 if prefill_hosts else 0,
             page_tokens=64 if paged else 0,
+            device_pool=mode == "relay_devpool",
             segments=mode in ("relay_segments", "relay_cold")),
     )
 

@@ -136,6 +136,26 @@ def compare(reference: dict, candidate: dict, *, latency_tol: float,
                      abs(rp["slo_qps"] - rb["slo_qps"])
                      <= 0.05 * rb["slo_qps"]))
 
+    # device-pool acceptance: relay_devpool is relay_paged with the
+    # device-resident data plane — a pure launch-path property that is
+    # byte-free in the simulator, so its sim trace must ride
+    # relay_paged's (hit rates tight, committed slo within 5%); the
+    # live h2d win itself is gated by the CI smoke's
+    # ``launch_reships == 0`` assert, not this table
+    if "relay_devpool" in reference and "relay_paged" in reference:
+        rp = candidate.get("relay_paged")
+        rd = candidate.get("relay_devpool")
+        if rp and rd:
+            rows.append(("relay_devpool", "hbm_hit == relay_paged",
+                         rp["hbm_hit"], rd["hbm_hit"], "± 0.005",
+                         abs(rd["hbm_hit"] - rp["hbm_hit"]) <= 0.005))
+        rp = reference["relay_paged"]
+        rd = reference["relay_devpool"]
+        rows.append(("relay_devpool", "slo_qps vs relay_paged (committed)",
+                     rp["slo_qps"], rd["slo_qps"], "within 5%",
+                     abs(rd["slo_qps"] - rp["slo_qps"])
+                     <= 0.05 * rp["slo_qps"]))
+
     # beyond-prefix acceptance: relay_segments is relay_paged with
     # candidate-independent interior segments cached alongside the
     # prefix — the point of the mode is MORE reused tokens per hit, so

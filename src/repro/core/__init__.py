@@ -13,7 +13,7 @@ from repro.serving.batching import (BatchAggregator, BatchingConfig,
 
 from .cache import (CacheEntry, HBMCacheStore, PagedHBMStore, kv_nbytes,
                     make_hbm_store)
-from .paging import PageLayout, PagePool, PagedPsi
+from .paging import DevicePagePool, PageLayout, PagePool, PagedPsi
 from .clock import Clock, VirtualClock, WallClock
 from .coldstore import ColdStore, ColdStoreConfig
 from .costmodel import GRCostModel, HardwareModel

@@ -44,8 +44,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .paging import (PageLayout, PagePool, PagedPsi, ceil_div,
-                     slice_into_pages)
+from .paging import (DevicePagePool, PageLayout, PagePool, PagedPsi,
+                     ceil_div, slice_into_pages)
 from .types import CacheState
 
 
@@ -264,16 +264,28 @@ class PagedHBMStore(HBMCacheStore):
       * in live mode the pool owns a real ``(n_pages + 1, page_tokens,
         H, D)`` buffer (lazily shaped from the first psi; the extra
         last row is the all-zero null page used to pad page tables to a
-        bucket) and ``PagedPsi`` handles point into it.
+        bucket) and ``PagedPsi`` handles point into it;
+      * with ``device_pool=True`` the pool is a ``DevicePagePool``:
+        the host buffer stays the staging area / host-read source, and
+        every page write additionally scatters into the device-resident
+        mirror (one donated update per insert/resume) so rank launches
+        pass the pool by reference instead of re-shipping it.
     """
 
-    def __init__(self, budget_bytes: int, layout: PageLayout):
+    def __init__(self, budget_bytes: int, layout: PageLayout,
+                 device_pool: bool = False):
         super().__init__(budget_bytes)
         self.layout = layout
-        self.pool = PagePool(
+        pool_cls = DevicePagePool if device_pool else PagePool
+        self.pool = pool_cls(
             n_pages=int(budget_bytes) // layout.page_bytes,
             page_bytes=layout.page_bytes)
         self.buffer: Optional[np.ndarray] = None   # lazily shaped
+        # device-pool routing: when the runtime wires an executor here
+        # (``InstanceRuntime``), page-data movement goes through its
+        # insert_pages/free_pages hooks; unwired device pools scatter
+        # directly.  None + host pool is the pure-host path.
+        self.device_hooks = None
         # gather a dense host copy of psi when it leaves the pool, so
         # the evictee can spill to DRAM; deployments without a DRAM
         # tier turn this off (InstanceRuntime) — the copy would be
@@ -299,6 +311,29 @@ class PagedHBMStore(HBMCacheStore):
         H, D = k.shape[3], k.shape[4]
         self.buffer = np.zeros(
             (self.pool.n_pages + 1, self.layout.page_tokens, H, D), k.dtype)
+
+    def _land_pages(self, pages) -> None:
+        """Route freshly staged pages to the device-resident pool —
+        every write path (fresh insert, resumed reload, handoff
+        re-insert, cold-promotion landing) converges here, so the
+        device mirror can never miss a page a launch may reference."""
+        if self.buffer is None:
+            return                          # sim mode: no page data
+        pages = [int(p) for p in pages]
+        if self.device_hooks is not None:
+            self.device_hooks.insert_pages(self.pool, pages, self.buffer)
+        elif isinstance(self.pool, DevicePagePool):
+            self.pool.scatter(pages, self.buffer)
+
+    def _free_pages(self, pages) -> None:
+        """Single exit turnstile for page frees (through the executor
+        hook when wired, so device- and host-pool deployments free
+        through the same conserved accounting)."""
+        pages = [int(p) for p in pages]
+        if self.device_hooks is not None:
+            self.device_hooks.free_pages(self.pool, pages)
+        else:
+            self.pool.free(pages)
 
     # --- insert: fresh / refresh / resume -----------------------------------
 
@@ -355,8 +390,9 @@ class PagedHBMStore(HBMCacheStore):
         if self.buffer is not None and _is_kv_pytree(value):
             slice_into_pages(self.buffer, table, value,
                              self.layout.page_tokens)
+            self._land_pages(table.reshape(-1))
             entry.value = PagedPsi(table, tokens, self.layout, self.buffer,
-                                   spans=entry.spans)
+                                   spans=entry.spans, pool=self.pool)
         self.entries[user_id] = entry
         self.used_bytes += entry.nbytes
         self.stats["inserts"] += 1
@@ -387,8 +423,12 @@ class PagedHBMStore(HBMCacheStore):
             t0 = pps_res * self.layout.page_tokens
             slice_into_pages(self.buffer, table, value,
                              self.layout.page_tokens, t0=t0)
+            # partial-reload resume: only the missing TAIL pages move
+            # over the link — the resident head never re-ships
+            self._land_pages(fresh.reshape(-1))
             entry.value = PagedPsi(table, entry.prefix_len, self.layout,
-                                   self.buffer, spans=entry.spans)
+                                   self.buffer, spans=entry.spans,
+                                   pool=self.pool)
         added = missing * self.layout.page_bytes
         entry.tokens_resident = entry.prefix_len
         entry.nbytes += added
@@ -422,7 +462,7 @@ class PagedHBMStore(HBMCacheStore):
                 # the next reload for this user resumes from it
                 keep = pps_res - per_slab
                 tail = old.page_table[:, keep:pps_res].reshape(-1)
-                self.pool.free([int(p) for p in tail])
+                self._free_pages(tail)
                 freed = per_slab * self.layout.slabs
                 old.tokens_resident = keep * self.layout.page_tokens
                 old.nbytes -= freed * self.layout.page_bytes
@@ -476,8 +516,7 @@ class PagedHBMStore(HBMCacheStore):
             if isinstance(e.value, PagedPsi):
                 full = e.tokens_resident >= e.prefix_len
                 e.value = e.value.materialize() if full else None
-            self.pool.free([int(p) for p in
-                            e.page_table[:, :pps_res].reshape(-1)])
+            self._free_pages(e.page_table[:, :pps_res].reshape(-1))
             e.page_table = None
         return super().extract(user_id)
 
@@ -489,7 +528,7 @@ class PagedHBMStore(HBMCacheStore):
         pps = self.layout.pages_per_slab(entry.tokens_resident)
         psi = PagedPsi(entry.page_table[:, :pps].copy(),
                        entry.tokens_resident, self.layout, self.buffer,
-                       spans=entry.spans)
+                       spans=entry.spans, pool=self.pool)
         self.pool.pin(psi.pages)
         return psi
 
@@ -516,17 +555,18 @@ class PagedHBMStore(HBMCacheStore):
                              and not e.dram_backed
                              and e.tokens_resident >= e.prefix_len)
                 e.value = e.value.materialize() if spillable else None
-            self.pool.free([int(p) for p in
-                            e.page_table[:, :pps_res].reshape(-1)])
+            self._free_pages(e.page_table[:, :pps_res].reshape(-1))
             e.page_table = None
             e.tokens_resident = 0
         return super()._evict(user_id)
 
 
-def make_hbm_store(budget_bytes: int, layout: Optional[PageLayout] = None
-                   ) -> HBMCacheStore:
+def make_hbm_store(budget_bytes: int, layout: Optional[PageLayout] = None,
+                   device_pool: bool = False) -> HBMCacheStore:
     """Window factory: dense store, or the paged pool when a layout is
-    given (``ClusterConfig.page_tokens > 0``)."""
+    given (``ClusterConfig.page_tokens > 0``).  ``device_pool`` makes
+    the pool's data plane a device-resident array mutated in place by
+    scatter-on-insert (``ClusterConfig.device_pool``)."""
     if layout is None:
         return HBMCacheStore(budget_bytes)
-    return PagedHBMStore(budget_bytes, layout)
+    return PagedHBMStore(budget_bytes, layout, device_pool=device_pool)

@@ -33,7 +33,11 @@ def load_batch_calibration(path: str) -> Dict:
 
     Keys are strings (JSON); values are the marginal cost of each
     non-dominant member as a fraction of the dominant member's solo
-    latency.  Feed the result to ``GRCostModel.with_calibration``."""
+    latency.  A table written under ``--h2d`` additionally carries an
+    ``"h2d"`` block — measured scatter-insert vs full-pool-reship
+    bandwidths per (pool pages, inserted pages), consumed by
+    ``GRCostModel.scatter_ms``.  Feed the result to
+    ``GRCostModel.with_calibration``."""
     with open(path) as f:
         table = json.load(f)
     if "buckets" not in table:
@@ -90,7 +94,9 @@ class GRCostModel:
 
     def with_calibration(self, table) -> "GRCostModel":
         """Return a copy whose batched launch costs come from a measured
-        table (``load_batch_calibration`` result or a path to one)."""
+        table (``load_batch_calibration`` result or a path to one).
+        A table with an ``"h2d"`` block also calibrates
+        ``scatter_ms`` (measured host->device page-landing bandwidth)."""
         if isinstance(table, str):
             table = load_batch_calibration(table)
         return dataclasses.replace(self, batch_calibration=table)
@@ -187,18 +193,32 @@ class GRCostModel:
         return max(per) * (1.0 + factor * (len(per) - 1))
 
     def dram_load_ms(self, prefix_len: int) -> float:
-        """DRAM -> HBM reload of psi (expander hit)."""
-        return self.kv_bytes(prefix_len) / self.hw.h2d_bw * 1e3
+        """DRAM -> HBM reload of psi (expander hit) — one move on the
+        unified ``"h2d"`` link class (``psi_transfer_ms``), so reloads
+        and scatter-on-insert landings can never drift apart."""
+        return self.psi_transfer_ms(prefix_len, link="h2d")
 
     def paged_load_ms(self, tokens: int, page_tokens: int) -> float:
         """DRAM -> HBM reload at page granularity: only the missing
         ``tokens`` move (a resumed partial reload passes the remainder,
         not the whole prefix), rounded up to whole pages — the
-        last-page padding is the only over-transfer."""
+        last-page padding is the only over-transfer.  Same ``"h2d"``
+        link class as ``dram_load_ms``."""
         if tokens <= 0:
             return 0.0
         pages = ceil_div(int(tokens), int(page_tokens))
-        return self.kv_bytes(pages * int(page_tokens)) / self.hw.h2d_bw * 1e3
+        return self.psi_transfer_ms(pages * int(page_tokens), link="h2d")
+
+    def scatter_ms(self, nbytes: int) -> float:
+        """Host->device landing cost of freshly staged pool pages (the
+        device pool's scatter-on-insert).  Uses the measured ``h2d``
+        calibration (``benchmarks/calibrate.py --h2d`` via
+        ``with_calibration``: effective scatter bandwidth including the
+        per-call dispatch overhead) when loaded, else the raw
+        ``hw.h2d_bw`` link class."""
+        cal = (self.batch_calibration or {}).get("h2d") or {}
+        bw = float(cal.get("scatter_bw", 0.0)) or self.hw.h2d_bw
+        return max(int(nbytes), 0) / bw * 1e3
 
     def remote_fetch_ms(self, prefix_len: int) -> float:
         """Cross-server cache fetch — the path RelayGR's invariant I1
@@ -210,13 +230,16 @@ class GRCostModel:
 
     def link_occupancy_ms(self, nbytes: int, *, link: str = "nic") -> float:
         """Time one transfer *occupies* a host's link of the given
-        bandwidth class — ``"nic"`` (shipping fabric) or ``"cold"``
-        (SSD / remote psi store): the serialization term of a move.
-        The runtime's per-host link model charges this window against
-        the involved links so concurrent shipments, migrations and
-        cold-tier moves contend for bandwidth instead of overlapping
-        for free; RTT is propagation and does not occupy the link."""
-        bw = self.hw.cold_bw if link == "cold" else self.hw.nic_bw
+        bandwidth class — ``"nic"`` (shipping fabric), ``"cold"``
+        (SSD / remote psi store) or ``"h2d"`` (the shared host->device
+        link: DRAM->HBM reloads and scatter-on-insert page landings):
+        the serialization term of a move.  The runtime's per-host link
+        model charges this window against the involved links so
+        concurrent shipments, migrations and cold-tier moves contend
+        for bandwidth instead of overlapping for free; RTT is
+        propagation and does not occupy the link."""
+        bw = {"cold": self.hw.cold_bw,
+              "h2d": self.hw.h2d_bw}.get(link, self.hw.nic_bw)
         return max(int(nbytes), 0) / bw * 1e3
 
     def psi_transfer_ms(self, prefix_len: int, *, cross_host: bool = True,
@@ -231,17 +254,22 @@ class GRCostModel:
         the local H2D/DRAM path.  ``link="cold"``: one cold-store I/O
         (DRAM <-> host SSD / remote store) — ``hw.cold_bw`` +
         submission latency; ``cross_host`` is ignored because a
-        cross-host cold move composes this with a NIC leg.  Never
-        charged per-request: invariant I1 still forbids critical-path
-        remote fetches (``remote_fetch_ms``)."""
+        cross-host cold move composes this with a NIC leg.
+        ``link="h2d"``: a host->device landing — DRAM->HBM reloads and
+        the device pool's scatter-on-insert both ride the shared H2D
+        link class (``hw.h2d_bw``), no fabric RTT; ``cross_host`` is
+        ignored (the move is local by definition).  Never charged
+        per-request: invariant I1 still forbids critical-path remote
+        fetches (``remote_fetch_ms``)."""
         if link == "cold":
             return (self.hw.cold_rtt_ms
                     + self.link_occupancy_ms(self.kv_bytes(prefix_len),
                                              link="cold"))
-        if cross_host:
-            return (self.hw.net_rtt_ms
-                    + self.link_occupancy_ms(self.kv_bytes(prefix_len)))
-        return self.dram_load_ms(prefix_len)
+        if link == "h2d" or not cross_host:
+            return self.link_occupancy_ms(self.kv_bytes(prefix_len),
+                                          link="h2d")
+        return (self.hw.net_rtt_ms
+                + self.link_occupancy_ms(self.kv_bytes(prefix_len)))
 
     def handoff_ms(self, prefix_len: int, cross_host: bool = True) -> float:
         """Back-compat alias: rebalance handoffs are priced by the

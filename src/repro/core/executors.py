@@ -49,7 +49,7 @@ from repro.serving.batching import (BatchingConfig, PendingRank, bucket_of,
 
 from .cache import kv_nbytes
 from .costmodel import GRCostModel
-from .paging import PageLayout, PagedPsi, ceil_div
+from .paging import DevicePagePool, PageLayout, PagedPsi, ceil_div
 from .types import UserMeta
 
 
@@ -96,16 +96,37 @@ def _page_launch_args(jnp, psis: Sequence[PagedPsi], np_bucket: int):
     """Stack per-member page tables — (slabs, n) int32 — into the
     (B, L, 2, np_bucket) launch table, padding with the pool's null
     (all-zero) page so padded tokens contribute silu(0) = 0 exactly,
-    matching the dense bucketed path's zero-padded psi."""
+    matching the dense bucketed path's zero-padded psi.
+
+    The pool buffer: a ``DevicePagePool`` passes its device-resident
+    array by REFERENCE (zero host->device traffic per launch); a
+    host-buffer pool re-ships the whole pool, counted in the owning
+    pool's ``h2d`` ledger.  A member whose table exceeds ``np_bucket``
+    is an error — truncating would silently drop cached pages from the
+    gather (callers widen the launch bucket to the group's largest
+    member instead)."""
     buf = psis[0].buffer
     null = buf.shape[0] - 1
     rows = []
     for psi in psis:
         slabs, n = psi.table.shape
+        if n > np_bucket:
+            raise ValueError(
+                f"page table has {n} pages/slab but the launch bucket "
+                f"is {np_bucket}: truncation would silently drop cached "
+                f"pages — widen the bucket to the group's largest member")
         t = np.full((slabs, np_bucket), null, np.int32)
-        t[:, :min(n, np_bucket)] = psi.table[:, :np_bucket]
+        t[:, :n] = psi.table
         rows.append(t.reshape(slabs // 2, 2, np_bucket))
-    return jnp.asarray(buf), jnp.asarray(np.stack(rows))
+    pool = psis[0].pool
+    if isinstance(pool, DevicePagePool):
+        launch_buf = pool.device_view(buf)
+    else:
+        launch_buf = jnp.asarray(buf)      # O(pool bytes) per launch
+        if pool is not None:
+            pool.h2d["launch_reships"] += 1
+            pool.h2d["reshipped_bytes"] += int(buf.nbytes)
+    return launch_buf, jnp.asarray(np.stack(rows))
 
 
 def _gather_psi(jnp, buf, tables):
@@ -241,7 +262,7 @@ class LiveExecutor:
 
     def __init__(self, model, params, store,
                  cost: Optional[GRCostModel] = None, page_tokens: int = 0,
-                 segments: bool = False):
+                 segments: bool = False, device_pool: bool = False):
         import jax
         self._jax = jax
         self.model = model
@@ -250,6 +271,12 @@ class LiveExecutor:
         self.cost = cost or GRCostModel(model.cfg)
         self.page_tokens = int(page_tokens)
         self.segments = bool(segments)
+        # device-resident page pool: the serving window allocates a
+        # DevicePagePool and routes page writes through the
+        # insert_pages/free_pages hooks below, so rank_with_pages
+        # launches pass the pool by reference instead of re-shipping
+        # the host buffer (InstanceRuntime wires store <-> executor)
+        self.device_pool = bool(device_pool) and self.page_tokens > 0
         # the executor owns compute geometry: a paged window must page
         # THIS model's psi, not the (possibly full-scale) cost model's
         self.page_layout = (PageLayout.from_model_config(
@@ -342,6 +369,27 @@ class LiveExecutor:
             return self.cost.paged_load_ms(t, self.page_tokens)
         return self.cost.dram_load_ms(t)
 
+    # --- device-pool hooks ---------------------------------------------------
+    # The paged window routes its page-data movement through the
+    # executor (the owner of the jax device), so every path that writes
+    # pages — fresh insert, resumed partial reload, handoff re-insert,
+    # cold-promotion landing — lands them in the device-resident pool
+    # with ONE donated scatter, and every free goes back through the
+    # same conserved free-list accounting.
+
+    def insert_pages(self, pool: DevicePagePool, pages: Sequence[int],
+                     host_buffer: np.ndarray) -> int:
+        """Scatter freshly written ``pages`` (already staged in the
+        host buffer) into the device-resident pool.  Returns the bytes
+        moved over the H2D link (== len(pages) * page_bytes)."""
+        return pool.scatter(pages, host_buffer)
+
+    def free_pages(self, pool, pages: Sequence[int]) -> None:
+        """Return pages to the pool's free list (pin/zombie protection
+        applies unchanged).  No device write: a freed page is
+        unreachable until realloc re-stages and re-scatters it."""
+        pool.free(pages)
+
 
 @register_executor("batched")
 class BatchedLiveExecutor(LiveExecutor):
@@ -370,9 +418,11 @@ class BatchedLiveExecutor(LiveExecutor):
     def __init__(self, model, params, store,
                  cost: Optional[GRCostModel] = None,
                  batching: Optional[BatchingConfig] = None,
-                 page_tokens: int = 0, segments: bool = False):
+                 page_tokens: int = 0, segments: bool = False,
+                 device_pool: bool = False):
         super().__init__(model, params, store, cost,
-                         page_tokens=page_tokens, segments=segments)
+                         page_tokens=page_tokens, segments=segments,
+                         device_pool=device_pool)
         self.batching = batching or BatchingConfig()
         self._warmed: set = set()
 
@@ -418,10 +468,16 @@ class BatchedLiveExecutor(LiveExecutor):
         if isinstance(group[0].psi, PagedPsi):
             # rank_with_pages: ONE launch keyed (page-count bucket,
             # batch grid); K/V stay in the page pool and are gathered
-            # through the stacked page tables inside the jit
+            # through the stacked page tables inside the jit.  The
+            # bucket widens to the group's largest member: a segmented
+            # entry's whole-page span padding can push its table past
+            # the prefix-derived bucket, and truncating it would drop
+            # cached pages from the gather (prefix-only members never
+            # exceed the prefix bucket, so this is exact for them)
             pt = group[0].psi.layout.page_tokens
-            buf, tables = _page_launch_args(
-                jnp, [w.psi for w in rows], page_bucket(bucket, pt))
+            npb = max([page_bucket(bucket, pt)]
+                      + [_pages_of(w.psi.n_tokens, w.psi) for w in rows])
+            buf, tables = _page_launch_args(jnp, [w.psi for w in rows], npb)
             scores = self._rank_pages(self.params, buf, tables, incr, items)
         elif group[0].psi is not None:        # homogeneous by aggregator key
             kv = stack_psi(jnp, [w.psi for w in rows], bucket)

@@ -27,6 +27,13 @@ rank launch are *pinned*: freeing a pinned page parks it in a zombie
 set (still occupying the pool, still "live") and the release after the
 launch returns it to the free list — so a batched group can never read
 a page the window recycled under it.
+
+``DevicePagePool`` keeps the same bookkeeping but makes the data plane
+a device-resident jax array mutated in place: freshly written pages
+scatter in via a donated ``.at[pages].set(...)`` update and rank
+launches pass the pool by reference (zero per-launch re-ship); the
+``h2d`` ledger on every pool accounts the host->device traffic either
+way.
 """
 
 from __future__ import annotations
@@ -98,6 +105,14 @@ class PagePool:
         self._zombies: set = set()          # freed while pinned
         self.stats = {"pages_allocated": 0, "pages_freed": 0,
                       "alloc_failures": 0, "peak_pages": 0}
+        # host->device traffic ledger.  On a DevicePagePool the scatter
+        # side counts every page landed in the device-resident buffer
+        # (``bytes_scattered`` == bytes of freshly written pages) and
+        # ``launch_reships`` stays 0; on a host-buffer pool the launch
+        # path counts each whole-pool re-ship instead.
+        self.h2d = {"bytes_scattered": 0, "pages_scattered": 0,
+                    "scatters": 0, "launch_reships": 0,
+                    "reshipped_bytes": 0}
 
     @property
     def free_pages(self) -> int:
@@ -148,6 +163,86 @@ class PagePool:
                 self._pins[p] = n
 
 
+_SCATTER_JIT = None
+
+
+def _scatter_jit():
+    """Jitted donated page scatter, shared by every DevicePagePool so
+    the compile cache is per-(pool shape, batch grid), not per-pool.
+    Donating the pool argument lets XLA update the buffer in place —
+    the pool is never copied on insert."""
+    global _SCATTER_JIT
+    if _SCATTER_JIT is None:
+        import jax
+        _SCATTER_JIT = jax.jit(lambda buf, idx, vals: buf.at[idx].set(vals),
+                               donate_argnums=(0,))
+    return _SCATTER_JIT
+
+
+class DevicePagePool(PagePool):
+    """Page pool whose data plane is a device-resident array mutated in
+    place: inserts and reload completions ``scatter`` only the freshly
+    written pages into the resident buffer via a donated
+    ``.at[pages].set(...)`` update, and rank launches pass the buffer by
+    reference — zero per-launch host->device re-ship.
+
+    Bookkeeping (free list, pins, zombies, conservation) is inherited
+    unchanged, so stale-page reuse is impossible by construction: a
+    freed page cannot re-enter a table until the allocator hands it out
+    again, and every allocation is rewritten (host slice + scatter)
+    before any launch can reference it — the stale device bytes of a
+    recycled page are unreadable in between.  The owner's host buffer
+    stays the staging area and source of truth for host-side reads
+    (``PagedPsi.materialize`` on evict-spill / handoff-extract); the
+    device buffer mirrors it incrementally, starting from device-side
+    zeros so ``h2d["bytes_scattered"]`` counts exactly the inserted
+    page bytes."""
+
+    def __init__(self, n_pages: int, page_bytes: int):
+        super().__init__(n_pages, page_bytes)
+        self.device_buffer = None           # lazily shaped, jax array
+
+    def ensure_device(self, host_buffer: np.ndarray):
+        """Create the resident buffer on first use — device-side zeros
+        (matching the zero-filled host pool), so creation itself moves
+        no bytes over the link."""
+        if self.device_buffer is None:
+            import jax.numpy as jnp
+            self.device_buffer = jnp.zeros(host_buffer.shape,
+                                           host_buffer.dtype)
+        return self.device_buffer
+
+    def device_view(self, host_buffer: np.ndarray):
+        """The resident pool buffer a launch passes by reference."""
+        return self.ensure_device(host_buffer)
+
+    def scatter(self, pages: Sequence[int], host_buffer: np.ndarray) -> int:
+        """Land freshly written ``pages`` (already sliced into
+        ``host_buffer``) in the device-resident pool.  The page-id axis
+        pads to a power-of-two grid by repeating the first page (same
+        index, same value — set() is idempotent), bounding the jit
+        cache to log2(n_pages) entries.  Returns the logical bytes
+        moved (padding repeats a page already being sent; only the
+        logical traffic is accounted)."""
+        pages = [int(p) for p in pages]
+        if not pages:
+            return 0
+        import jax.numpy as jnp
+        self.ensure_device(host_buffer)
+        grid = 1
+        while grid < len(pages):
+            grid *= 2
+        idx = np.asarray(pages + [pages[0]] * (grid - len(pages)), np.int32)
+        self.device_buffer = _scatter_jit()(
+            self.device_buffer, jnp.asarray(idx),
+            jnp.asarray(host_buffer[idx]))
+        nbytes = len(pages) * self.page_bytes
+        self.h2d["bytes_scattered"] += nbytes
+        self.h2d["pages_scattered"] += len(pages)
+        self.h2d["scatters"] += 1
+        return nbytes
+
+
 class PagedPsi:
     """Handle to a paged psi: the page table plus the pool buffer.
 
@@ -161,11 +256,16 @@ class PagedPsi:
     """
 
     def __init__(self, table: np.ndarray, n_tokens: int, layout: PageLayout,
-                 buffer: Optional[np.ndarray], spans=None):
+                 buffer: Optional[np.ndarray], spans=None,
+                 pool: Optional[PagePool] = None):
         self.table = np.asarray(table, np.int32)
         self.n_tokens = int(n_tokens)
         self.layout = layout
         self.buffer = buffer
+        # owning pool (when handed out by a PagedHBMStore): lets the
+        # launch path pass a DevicePagePool's resident buffer by
+        # reference instead of re-shipping the host pool per launch
+        self.pool = pool
         # beyond-prefix reuse: ordered (global_start, valid_len) cached
         # spans; None for prefix-only psi.  Each span occupies whole
         # pages (``n_tokens`` is the padded total), so the consumer can

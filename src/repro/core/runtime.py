@@ -70,7 +70,7 @@ from .coldstore import ColdStore, ColdStoreConfig
 from .costmodel import GRCostModel
 from .executors import Executor, get_executor
 from .expander import DRAMExpander, ExpanderConfig
-from .paging import PageLayout
+from .paging import DevicePagePool, PageLayout
 from .policies import make_expander, make_router, make_trigger
 from .topology import (ClusterTopology, Host, make_prefill_hosts,
                        stripe_hosts)
@@ -104,6 +104,15 @@ class ClusterConfig:
     max_batch: int = 0                   # >0 -> continuous micro-batching
     batch_wait_ms: float = 2.0           # aggregator flush deadline
     page_tokens: int = 0                 # >0 -> paged HBM window (pool pages)
+    # device-resident page pool (requires page_tokens > 0): page data
+    # lives in a device array mutated in place — inserts and reload
+    # completions scatter only the fresh pages (donated update) and
+    # rank_with_pages launches pass the pool by reference, so
+    # per-launch host->device traffic is 0 instead of O(pool bytes).
+    # Scores are bit-identical to the host-buffer pool either way
+    # (tests/test_device_pool.py); the h2d ledger in ``stats()``
+    # accounts the traffic.
+    device_pool: bool = False
     # beyond-prefix segment reuse (RcLLM): the side path computes and
     # caches the prefix PLUS candidate-independent interior segments
     # (``UserMeta.seg_lens``) as a span-aware paged entry; ranking then
@@ -254,6 +263,7 @@ class InstanceConfig:
     expander_policy: str = "dram"
     page_layout: Optional[PageLayout] = None   # paged HBM window geometry
     segments: bool = False              # span-aware (beyond-prefix) entries
+    device_pool: bool = False           # device-resident page pool
     role: str = "rank"                  # "rank" | "prefill" (side path only)
 
 
@@ -282,7 +292,18 @@ class InstanceRuntime:
         # completion), so it skips the paged-pool machinery.
         layout = (None if cfg.role == "prefill" else
                   getattr(executor, "page_layout", None) or cfg.page_layout)
-        self.hbm = make_hbm_store(int(cfg.hbm_cache_bytes), layout)
+        # device-resident pool: opted in by the deployment config OR by
+        # a live executor built with device_pool=True (the executor owns
+        # the device, so its choice wins when the config is silent)
+        device = bool(cfg.device_pool
+                      or getattr(executor, "device_pool", False))
+        self.hbm = make_hbm_store(int(cfg.hbm_cache_bytes), layout,
+                                  device_pool=device and layout is not None)
+        if (isinstance(getattr(self.hbm, "pool", None), DevicePagePool)
+                and hasattr(executor, "insert_pages")):
+            # route the window's page-data movement (insert / resume /
+            # free) through the executor's device-pool hooks
+            self.hbm.device_hooks = executor
         if hasattr(self.hbm, "materialize_on_evict"):
             # no DRAM tier -> evictees are discarded, never spilled:
             # skip the dense gather on the eviction path
@@ -522,6 +543,9 @@ class RelayRuntime:
             # pages); a dense window has no span-addressable storage
             raise ValueError("ClusterConfig.segments requires a paged "
                              "HBM window (page_tokens > 0)")
+        if cl.device_pool and cl.page_tokens <= 0:
+            raise ValueError("ClusterConfig.device_pool requires a paged "
+                             "HBM window (page_tokens > 0)")
         self.trigger = make_trigger(
             cl.trigger_policy, self.cfg.trigger, cost,
             ship_ms=((lambda m: cost.psi_transfer_ms(m.prefix_len,
@@ -726,7 +750,8 @@ class RelayRuntime:
             pcie_concurrency=cl.pcie_concurrency,
             expander_policy=cl.expander_policy,
             page_layout=None if role == "prefill" else self._layout,
-            segments=cl.segments, role=role)
+            segments=cl.segments,
+            device_pool=cl.device_pool and role != "prefill", role=role)
         icfg.dram.dram_budget_bytes = (0.0 if role == "prefill"
                                        else cl.dram_budget_bytes)
         icfg.dram.max_reload_concurrency = cl.pcie_concurrency
@@ -2032,6 +2057,14 @@ class RelayRuntime:
                "cold_links": {h: dict(l)
                               for h, l in self.cold_links.items()},
                "slo": self.slo.summary(now=self.now)}
+        # host->device traffic ledger, summed over the paged windows:
+        # scatter-on-insert bytes vs whole-pool launch re-ships.  On
+        # the device-pool path ``launch_reships`` MUST read 0 and
+        # ``bytes_scattered`` equals the freshly inserted page bytes
+        # (the acceptance surface of the device-resident pool).
+        h2d = {"bytes_scattered": 0, "pages_scattered": 0, "scatters": 0,
+               "launch_reships": 0, "reshipped_bytes": 0}
+        device_resident = False
         inst = {}
         for name, i in self.instances.items():
             # every tier reports the same counter core (inserts / live /
@@ -2044,5 +2077,12 @@ class RelayRuntime:
                                    "live": len(i.expander.entries)}}
             if i.batcher is not None:
                 inst[name]["batch"] = dict(i.batcher.stats)
+            pool = getattr(i.hbm, "pool", None)
+            if pool is not None:
+                inst[name]["hbm"]["h2d"] = dict(pool.h2d)
+                for k in h2d:
+                    h2d[k] += pool.h2d[k]
+                device_resident |= isinstance(pool, DevicePagePool)
+        agg["h2d"] = {**h2d, "device_resident": device_resident}
         agg["instances"] = inst
         return agg

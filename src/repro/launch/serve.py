@@ -52,6 +52,14 @@ def main(argv=None):
                          "side path caches them alongside the prefix "
                          "(implies a paged window; defaults "
                          "--page-tokens to 64 when unset)")
+    ap.add_argument("--device-pool", action="store_true",
+                    help="keep the paged KV pool device-resident: "
+                         "inserts/reloads scatter only fresh pages "
+                         "(donated in-place update) and rank launches "
+                         "pass the pool by reference — per-launch H2D "
+                         "re-ship drops to zero (implies a paged "
+                         "window; defaults --page-tokens to 64 when "
+                         "unset)")
     ap.add_argument("--hosts", type=int, default=1,
                     help="stripe the instance pools over N hosts; keyed "
                          "traffic routes owner-map -> per-host ring")
@@ -68,8 +76,8 @@ def main(argv=None):
     ap.add_argument("--dram-budget", type=float, default=500e9,
                     help="per-host DRAM expander budget in bytes")
     args = ap.parse_args(argv)
-    if args.segments and not args.page_tokens:
-        args.page_tokens = 64  # segment spans live on the page grid
+    if (args.segments or args.device_pool) and not args.page_tokens:
+        args.page_tokens = 64  # segment spans / device pool need pages
 
     cfg = get_config(args.arch, smoke=args.smoke and not args.sim)
     cost = GRCostModel(get_config(args.arch))
@@ -85,6 +93,7 @@ def main(argv=None):
                                   prefill_hosts=args.prefill_hosts,
                                   page_tokens=args.page_tokens,
                                   segments=args.segments,
+                                  device_pool=args.device_pool,
                                   dram_budget_bytes=args.dram_budget,
                                   cold_budget_bytes=args.cold_budget)),
             cost, arr)
@@ -109,6 +118,7 @@ def main(argv=None):
                               batch_wait_ms=args.batch_wait_ms,
                               page_tokens=args.page_tokens,
                               segments=args.segments,
+                              device_pool=args.device_pool,
                               hosts=args.hosts,
                               prefill_hosts=args.prefill_hosts,
                               hbm_cache_bytes=hbm_bytes,
@@ -126,6 +136,21 @@ def main(argv=None):
               f"p99={np.percentile(lat, 99):.1f}")
         return hits
 
+    def report_h2d(svc):
+        if not args.page_tokens:
+            return
+        h2d = svc.stats()["h2d"]
+        print(json.dumps({"h2d": h2d}, indent=1))
+        if args.device_pool:
+            # the whole point of the device-resident pool: rank
+            # launches pass the pool by reference, so a single re-ship
+            # is a wiring regression
+            assert h2d["device_resident"], "device pool not wired"
+            assert h2d["launch_reships"] == 0, (
+                f"device-pool launch re-shipped the pool "
+                f"{h2d['launch_reships']}x")
+            assert h2d["bytes_scattered"] > 0
+
     if args.batched:
         # one shared executor across the pool -> one jit cache; pre-warm
         # the (bucket, batch) grid the sampled stream will actually hit
@@ -133,7 +158,8 @@ def main(argv=None):
             model, params, store, cost=cost,
             batching=BatchingConfig(max_batch=args.max_batch,
                                     max_wait_ms=args.batch_wait_ms),
-            page_tokens=args.page_tokens, segments=args.segments)
+            page_tokens=args.page_tokens, segments=args.segments,
+            device_pool=args.device_pool)
         arrivals = []
         for i, (t, meta) in enumerate(request_stream(
                 store, args.qps, 1e9, refresh_prob=0.2,
@@ -166,12 +192,13 @@ def main(argv=None):
         batch = {n: i.batcher.stats for n, i in svc.instances.items()
                  if i.batcher is not None and i.batcher.stats["requests"]}
         print(json.dumps({"batch": batch}, indent=1))
+        report_h2d(svc)
         return hits
     svc = RelayGRService(
         relay_cfg, cost,
         executor_factory=lambda name: LiveExecutor(
             model, params, store, page_tokens=args.page_tokens,
-            segments=args.segments))
+            segments=args.segments, device_pool=args.device_pool))
     results = []
     for i, (t, meta) in enumerate(request_stream(
             store, args.qps, 1e9, refresh_prob=0.2,
@@ -185,6 +212,7 @@ def main(argv=None):
         print(json.dumps({"shipping": svc.stats()["shipping"]}, indent=1))
     if args.cold_budget:
         print(json.dumps({"cold": svc.stats()["cold"]}, indent=1))
+    report_h2d(svc)
     return hits
 
 
