@@ -14,16 +14,18 @@ See ``benchmarks/capacity/README.md`` for the matrix schema.
 """
 
 from .knee import HARD_CAP_QPS, KneeResult, find_knee
-from .matrix import (ALL_MODES, COST, HSTU, N_INST, SIM_S, SLO_MS,
-                     MatrixSpec, cell_name, meets_slo, mode_config,
-                     run_cell, run_matrix, run_point)
+from .matrix import (ALL_MODES, COST, HSTU, ISO_BURST_QPS, N_INST, SIM_S,
+                     SLO_MS, MatrixSpec, cell_name, isolation_cell,
+                     meets_slo, mode_config, run_cell, run_matrix,
+                     run_point, run_tenant_point)
 from .report import PROVENANCE_FIELDS, curves_csv, headline, render, write
 from .workload import DEFAULT_POPULATION, WorkloadSpec, fixed_stream
 
 __all__ = [
     "ALL_MODES", "COST", "DEFAULT_POPULATION", "HARD_CAP_QPS", "HSTU",
-    "KneeResult", "MatrixSpec", "N_INST", "PROVENANCE_FIELDS", "SIM_S",
-    "SLO_MS", "WorkloadSpec", "cell_name", "curves_csv", "find_knee",
-    "fixed_stream", "headline", "meets_slo", "mode_config", "render",
-    "run_cell", "run_matrix", "run_point", "write",
+    "ISO_BURST_QPS", "KneeResult", "MatrixSpec", "N_INST",
+    "PROVENANCE_FIELDS", "SIM_S", "SLO_MS", "WorkloadSpec", "cell_name",
+    "curves_csv", "find_knee", "fixed_stream", "headline",
+    "isolation_cell", "meets_slo", "mode_config", "render", "run_cell",
+    "run_matrix", "run_point", "run_tenant_point", "write",
 ]

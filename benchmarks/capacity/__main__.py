@@ -18,7 +18,7 @@ import json
 import sys
 import time
 
-from .matrix import MatrixSpec, run_matrix
+from .matrix import MatrixSpec, isolation_cell, run_matrix
 from .report import render, write
 
 
@@ -43,6 +43,9 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=None)
     ap.add_argument("--duration", type=float, default=None,
                     help="per-point sim duration (s)")
+    ap.add_argument("--no-isolation", action="store_true",
+                    help="skip the two-tenant burst-isolation cell "
+                         "(relay_tenants acceptance; run by default)")
     args = ap.parse_args(argv)
 
     if args.matrix:
@@ -65,8 +68,17 @@ def main(argv=None) -> int:
     t0 = time.time()
     cells = run_matrix(spec, progress=lambda m: print(m, file=sys.stderr))
     print(render(cells), end="")
+    iso = None
+    if not args.no_isolation:
+        print("isolation: tenant A solo vs tenant B MMPP burst ...",
+              file=sys.stderr)
+        iso = isolation_cell(dur=spec.duration_s, slo_ms=spec.slo_ms,
+                             seed=spec.seed, coarse=spec.quick)
+        print(f"isolation: A knee {iso['solo']['knee_qps']:.0f} -> "
+              f"{iso['burst']['knee_qps']:.0f} qps under burst, "
+              f"hit_rate delta {iso['hit_delta']:+.4f}")
     if args.out:
-        json_path, csv_path = write(args.out, cells, spec)
+        json_path, csv_path = write(args.out, cells, spec, iso)
         print(f"# wrote {json_path} + {csv_path} "
               f"in {time.time() - t0:.1f}s", file=sys.stderr)
     return 0

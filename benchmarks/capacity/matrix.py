@@ -42,14 +42,15 @@ SLO_MS = 135.0
 #: every serving mode the harness understands (the BENCH_relay set)
 ALL_MODES = ("baseline", "relay", "relay_dram", "relay_batched",
              "relay_paged", "relay_devpool", "relay_segments",
-             "relay_multihost", "relay_disagg", "relay_cold")
+             "relay_multihost", "relay_disagg", "relay_cold",
+             "relay_tenants")
 
 
 def mode_config(mode: str, L: int, *, hosts: Optional[int] = None,
                 prefill_hosts: Optional[int] = None) -> RelayConfig:
     """mode: baseline | relay | relay_dram | relay_batched | relay_paged
     | relay_devpool | relay_segments | relay_multihost | relay_disagg
-    | relay_cold
+    | relay_cold | relay_tenants
 
     ``relay_batched`` is the ``relay`` deployment with continuous
     micro-batching switched on (same trigger/cache -> equal hit rates);
@@ -95,7 +96,14 @@ def mode_config(mode: str, L: int, *, hosts: Optional[int] = None,
     absorbs DRAM evictions as demotions and revives cold-resident
     users through an async cold->DRAM->HBM promotion priced on the
     cold bandwidth class — tail users that every DRAM-only mode
-    re-prefills come back as cache hits.
+    re-prefills come back as cache hits.  ``relay_tenants`` is
+    ``relay_batched`` serving TWO tenants off the one fleet: every
+    memory tier is split into per-tenant byte quotas (a tenant can
+    only evict its own entries), admission layers per-tenant token
+    buckets under the instance/pool split, and ``run_point`` stamps
+    each request's tenant as ``user_id % 2`` — a pure function of the
+    id, so the arrival trace is identical to ``relay_batched``'s and
+    any hit-rate delta is the partition itself.
 
     ``hosts`` / ``prefill_hosts`` override the mode's default topology
     (the capacity matrix's hosts axis); ``None`` keeps the default.
@@ -107,7 +115,7 @@ def mode_config(mode: str, L: int, *, hosts: Optional[int] = None,
     hbm_cache = 4e9
     batched = mode in ("relay_batched", "relay_paged", "relay_devpool",
                        "relay_segments", "relay_multihost",
-                       "relay_disagg", "relay_cold")
+                       "relay_disagg", "relay_cold", "relay_tenants")
     paged = mode in ("relay_paged", "relay_devpool", "relay_segments",
                      "relay_cold")
     multihost = mode in ("relay_multihost", "relay_disagg")
@@ -133,7 +141,8 @@ def mode_config(mode: str, L: int, *, hosts: Optional[int] = None,
             prefill_m_slots=20 if prefill_hosts else 0,
             page_tokens=64 if paged else 0,
             device_pool=mode == "relay_devpool",
-            segments=mode in ("relay_segments", "relay_cold")),
+            segments=mode in ("relay_segments", "relay_cold"),
+            tenants=2 if mode == "relay_tenants" else 1),
     )
 
 
@@ -188,6 +197,13 @@ def run_point(mode, L, qps, *, cost=None, dur=SIM_S, seed=0, refresh=None,
         arr = ((t, dataclasses.replace(
             m, seg_lens=segment_lens(m.user_id, m.incr_len)))
             for t, m in arr)
+    if cfg.cluster.tenants > 1:
+        # stamp each request's tenant as a pure function of the user id
+        # (no RNG draw): relay_tenants replays the exact trace the
+        # untenanted modes see, so any metric delta is the partition
+        n_t = int(cfg.cluster.tenants)
+        arr = ((t, dataclasses.replace(m, tenant=m.user_id % n_t))
+               for t, m in arr)
     sim = ClusterSim(cfg, cost)
     s = sim.run(arr)
     return _distribution(sim, s) if distribution else s
@@ -356,3 +372,92 @@ def run_matrix(spec: MatrixSpec, *, cost: Optional[GRCostModel] = None,
                      f"(goodput {c['knee_goodput_qps']:.0f}/s, "
                      f"{c['knee_probes']} probes)")
     return cells
+
+
+# ---------------------------------------------------------------------------
+# two-tenant burst isolation (the relay_tenants acceptance cell)
+# ---------------------------------------------------------------------------
+
+#: tenant B's mean offered load during the isolation bench's MMPP
+#: burst — sized well inside the fleet's headroom so the bench measures
+#: the PARTITION (quotas + per-tenant buckets), not raw compute
+#: contention, which no cache policy can hide
+ISO_BURST_QPS = 10.0
+
+
+def run_tenant_point(qps_a: float, *, burst_qps: float = 0.0,
+                     L: int = 2048, dur: float = SIM_S, seed: int = 0,
+                     cost: Optional[GRCostModel] = None) -> Dict:
+    """One two-tenant operating point: tenant A (skewed Poisson) at
+    ``qps_a`` next to tenant B (skewed MMPP burst) at mean
+    ``burst_qps`` (0 = solo A), through the ``relay_tenants``
+    deployment.  Returns tenant A's ``tenant_summary`` slice — the
+    isolation bench compares that slice solo vs under B's burst.
+
+    The config is IDENTICAL in both runs (two-tenant quotas either
+    way); only B's traffic changes, and ``multi_tenant_stream`` seeds
+    each tenant's RNG independently, so A's arrival/popularity draws
+    are bit-identical with or without the burst."""
+    from repro.data.synthetic import multi_tenant_stream
+    cost = cost or COST
+    cfg = mode_config("relay_tenants", L)
+    mixes = [dict(L=L, qps=qps_a, skew=1.1, arrival="poisson",
+                  dim=cost.cfg.d_model, n_items=512)]
+    if burst_qps > 0:
+        mixes.append(dict(L=L, qps=burst_qps, skew=1.1, arrival="mmpp",
+                          dim=cost.cfg.d_model, n_items=512))
+    sim = ClusterSim(cfg, cost)
+    sim.run(multi_tenant_stream(mixes, dur, seed=seed))
+    s = sim.runtime.tenant_summary().get(0, {"n": 0})
+    if s.get("n"):
+        s["goodput_qps"] = s["n"] * s["success_rate"] / dur
+    return s
+
+
+def isolation_cell(*, burst_qps: float = ISO_BURST_QPS, L: int = 2048,
+                   dur: float = SIM_S, slo_ms: float = SLO_MS,
+                   seed: int = 0, cost: Optional[GRCostModel] = None,
+                   coarse: bool = False) -> Dict:
+    """The committed burst-isolation record (``BENCH_capacity.json``'s
+    ``isolation`` block): tenant A's SLO knee and hit rate, measured
+    solo and again while tenant B runs an MMPP burst on the same
+    fleet.  The regression gate requires the burst to move neither —
+    per-tenant byte quotas keep B out of A's cache, and the per-tenant
+    admission bucket keeps B's surge out of A's pool-token share."""
+    def knee_of(burst: float) -> KneeResult:
+        return find_knee(
+            lambda q: run_tenant_point(q, burst_qps=burst, L=L, dur=dur,
+                                       seed=seed, cost=cost),
+            lambda s: meets_slo(s, slo_ms), coarse=coarse)
+
+    solo_knee = knee_of(0.0)
+    burst_knee = knee_of(burst_qps)
+    # hit-rate comparison at one fixed operating point safely below the
+    # solo knee (knee noise must not move the reference load)
+    q_ref = max(0.75 * solo_knee.knee_qps, 1.0)
+    solo = run_tenant_point(q_ref, burst_qps=0.0, L=L, dur=dur,
+                            seed=seed, cost=cost)
+    burst = run_tenant_point(q_ref, burst_qps=burst_qps, L=L, dur=dur,
+                             seed=seed, cost=cost)
+
+    def slice_rec(knee: KneeResult, s: Dict) -> Dict:
+        return {"knee_qps": round(knee.knee_qps, 1),
+                "n": int(s.get("n", 0)),
+                "hit_rate": round(s.get("hit_rate", 0.0), 4),
+                "hbm_hit": round(s.get("hbm_hit", 0.0), 4),
+                "miss": round(s.get("miss", 0.0), 4),
+                "p99_ms": round(s.get("p99_ms", 0.0), 3)}
+
+    return {
+        "mode": "relay_tenants", "L": L, "tenants": 2,
+        "tenant_a": {"skew": 1.1, "arrival": "poisson"},
+        "tenant_b": {"skew": 1.1, "arrival": "mmpp",
+                     "qps": burst_qps},
+        "ref_qps": round(q_ref, 1),
+        "solo": slice_rec(solo_knee, solo),
+        "burst": slice_rec(burst_knee, burst),
+        "hit_delta": round(burst.get("hit_rate", 0.0)
+                           - solo.get("hit_rate", 0.0), 4),
+        "knee_ratio": round(burst_knee.knee_qps
+                            / max(solo_knee.knee_qps, 1e-9), 4),
+    }

@@ -26,7 +26,8 @@ from .matrix import CURVE_FIELDS, MatrixSpec
 PROVENANCE_FIELDS = ("seed", "population", "slo_ms")
 
 
-def headline(cells: Dict[str, Dict], spec: MatrixSpec) -> Dict:
+def headline(cells: Dict[str, Dict], spec: MatrixSpec,
+             isolation: Dict = None) -> Dict:
     populations = sorted({w.population for w in spec.workloads})
     meta = {
         "seed": spec.seed,
@@ -39,7 +40,10 @@ def headline(cells: Dict[str, Dict], spec: MatrixSpec) -> Dict:
         "skews": sorted({w.skew for w in spec.workloads}),
         "matrix": spec.to_dict(),
     }
-    return {"meta": meta, "cells": cells}
+    out = {"meta": meta, "cells": cells}
+    if isolation is not None:
+        out["isolation"] = isolation
+    return out
 
 
 def curves_csv(cells: Dict[str, Dict]) -> str:
@@ -75,11 +79,11 @@ def render(cells: Dict[str, Dict]) -> str:
     return out.getvalue()
 
 
-def write(path: str, cells: Dict[str, Dict], spec: MatrixSpec
-          ) -> Tuple[str, str]:
+def write(path: str, cells: Dict[str, Dict], spec: MatrixSpec,
+          isolation: Dict = None) -> Tuple[str, str]:
     """Write ``BENCH_capacity.json`` and its sibling CSV; returns both
     paths."""
-    data = headline(cells, spec)
+    data = headline(cells, spec, isolation)
     with open(path, "w") as f:
         json.dump(data, f, indent=1, sort_keys=True)
     csv_path = path.rsplit(".", 1)[0] + "_curves.csv"

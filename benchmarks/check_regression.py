@@ -25,7 +25,13 @@ per-mode diff when any metric regresses past its stated tolerance:
     the committed capacity matrix every skewed POISSON cell's
     ``relay_cold`` knee must be >= the ``relay_batched`` knee (the
     Zipf-tail lift; MMPP knees carry burst-phase noise larger than
-    the lift and are gated by the knee floor only).
+    the lift and are gated by the knee floor only);
+  * multi-tenant — ``relay_tenants`` must keep ``relay_batched``'s
+    hit rates within 2% absolute (the equal-share partition of a
+    symmetric trace is near-free) and its committed ``slo_qps``
+    within 10%; the capacity headline's ``isolation`` record must
+    show tenant B's MMPP burst moving neither tenant A's hit rate
+    (``--hit-tol``) nor A's SLO knee (``--iso-knee-tol``, 10%).
 
 Replaces the old sanity-only ``slo_qps >= 0.8 * relay`` check: every
 mode is now gated against its own committed trajectory, so a perf
@@ -44,8 +50,11 @@ MMPP the dip inference doesn't hold, see ``compare_capacity``).
 Both gates refuse (exit 2, distinct from a regression's exit 1) to
 diff headlines produced under different workloads: the meta blocks
 must agree on provenance (seed/horizon/arrival/workload for the relay
-headline; seed/population/slo_ms for capacity), and a ``--quick``
-capacity file is never accepted as the committed reference.
+headline; seed/population/slo_ms for capacity), a ``--quick``
+capacity file is never accepted as the committed reference, and a
+capacity candidate whose meta lacks the ``quick`` flag entirely is
+refused as schema drift (the gate cannot pick tolerances for a file
+that won't say whether it is a smoke run).
 """
 
 from __future__ import annotations
@@ -262,6 +271,32 @@ def compare(reference: dict, candidate: dict, *, latency_tol: float,
                      rs["slo_qps"], rc["slo_qps"],
                      ">= 95% of relay_segments",
                      rc["slo_qps"] >= 0.95 * rs["slo_qps"]))
+
+    # multi-tenant acceptance: relay_tenants is relay_batched with the
+    # fleet split into two equal-share tenants (per-tenant byte quotas
+    # on every tier + per-tenant admission buckets) over the IDENTICAL
+    # arrival trace (tenant = user_id % 2, no RNG draw).  Partitioning
+    # symmetric traffic must be near-free: hit rates within 2% absolute
+    # of relay_batched and the committed slo_qps within 10% (each
+    # tenant's bucket is half the pool rate — never binding below the
+    # untenanted ceiling for a symmetric split).  The isolation
+    # property itself (one tenant bursting must not move the other) is
+    # gated on the capacity headline's ``isolation`` record.
+    if "relay_tenants" in reference and "relay_batched" in reference:
+        rb = candidate.get("relay_batched")
+        rt = candidate.get("relay_tenants")
+        if rb and rt:
+            for f in ("hbm_hit", "dram_hit", "miss"):
+                rows.append(("relay_tenants", f"{f} == relay_batched",
+                             rb[f], rt[f], "± 0.02",
+                             abs(rt[f] - rb[f]) <= 0.02))
+        rb = reference["relay_batched"]
+        rt = reference["relay_tenants"]
+        rows.append(("relay_tenants",
+                     "slo_qps vs relay_batched (committed)",
+                     rb["slo_qps"], rt["slo_qps"], "within 10%",
+                     abs(rt["slo_qps"] - rb["slo_qps"])
+                     <= 0.10 * rb["slo_qps"]))
     return rows
 
 
@@ -281,6 +316,38 @@ def _goodput_monotone(cell: dict, tol: float) -> bool:
             return False
         best = max(best, g)
     return True
+
+
+def compare_isolation(reference: dict, candidate: dict, *,
+                      hit_tol: float, knee_tol: float) -> list:
+    """Gate the two-tenant burst-isolation record (the ``isolation``
+    block of ``BENCH_capacity.json``): tenant B's MMPP burst must move
+    neither tenant A's hit rate (within ``hit_tol`` absolute) nor A's
+    SLO knee (within ``knee_tol`` relative).  Both the committed record
+    and — when present — the candidate's fresh record are gated, so a
+    partition regression fails CI from either side."""
+    rows = []
+    for label, head in (("committed", reference),
+                        ("candidate", candidate)):
+        iso = (head or {}).get("isolation")
+        if not iso:
+            continue
+        solo, burst = iso.get("solo", {}), iso.get("burst", {})
+        name = f"isolation[{label}]"
+        hs, hb = solo.get("hit_rate"), burst.get("hit_rate")
+        rows.append((name, "tenant A hit_rate under B burst",
+                     hs, hb, f"± {hit_tol}",
+                     hs is not None and hb is not None
+                     and abs(hb - hs) <= hit_tol))
+        ks, kb = solo.get("knee_qps"), burst.get("knee_qps")
+        rows.append((name, "tenant A knee_qps under B burst",
+                     ks, kb, f"within {knee_tol:.0%}",
+                     ks is not None and kb is not None and ks > 0
+                     and abs(kb - ks) <= knee_tol * ks))
+    if not rows:
+        rows.append(("isolation", "<record>", "present", "MISSING",
+                     "committed isolation record required", False))
+    return rows
 
 
 def compare_capacity(reference: dict, candidate: dict, *,
@@ -366,6 +433,11 @@ def main(argv=None) -> int:
     ap.add_argument("--qps-floor", type=float, default=None,
                     help="min fraction of committed slo_qps / knee_qps "
                          "(default 0.85, or 0.55 with --quick)")
+    ap.add_argument("--iso-knee-tol", type=float, default=None,
+                    help="max relative shift of tenant A's knee under "
+                         "tenant B's burst (default 0.10, or 0.35 with "
+                         "--quick: the coarse bisection alone carries "
+                         "~30% bracket slack)")
     ap.add_argument("--quick", action="store_true",
                     help="candidate came from a --quick run: coarse "
                          "4 s-sim bisection, so widen the slo_qps floor")
@@ -374,6 +446,8 @@ def main(argv=None) -> int:
         args.qps_floor = 0.55 if args.quick else 0.85
     if args.curve_tol is None:
         args.curve_tol = 0.10 if args.quick else 0.02
+    if args.iso_knee_tol is None:
+        args.iso_knee_tol = 0.35 if args.quick else 0.10
     if not args.candidate and not args.capacity_candidate:
         ap.error("need --candidate and/or --capacity-candidate")
 
@@ -402,11 +476,24 @@ def main(argv=None) -> int:
                     f"{args.capacity_reference} is a --quick run — "
                     "refusing to gate against a smoke matrix; commit a "
                     "full run")
+            # the candidate must SAY whether it is a smoke run: a
+            # headline whose meta lacks the ``quick`` flag is schema
+            # drift (or a hand-rolled file) and the knee tolerances
+            # below would be meaningless against it
+            if "quick" not in cap_cand.get("meta", {}):
+                raise ProvenanceMismatch(
+                    f"capacity: candidate {args.capacity_candidate} "
+                    "has no meta.quick flag — cannot tell a smoke "
+                    "matrix from a full run; regenerate the candidate "
+                    "with python -m benchmarks.capacity")
             check_provenance(cap_ref, cap_cand, PROVENANCE_FIELDS,
                              label="capacity: ")
             rows += compare_capacity(cap_ref, cap_cand,
                                      knee_floor=args.qps_floor,
                                      curve_tol=args.curve_tol)
+            rows += compare_isolation(cap_ref, cap_cand,
+                                      hit_tol=args.hit_tol,
+                                      knee_tol=args.iso_knee_tol)
     except ProvenanceMismatch as exc:
         print(f"REFUSED: {exc}", file=sys.stderr)
         return 2

@@ -392,7 +392,8 @@ def bench_relay_summary(quick: bool = False) -> Dict:
         "workload": "uniform"}}
     for mode in ("baseline", "relay", "relay_dram", "relay_batched",
                  "relay_paged", "relay_devpool", "relay_segments",
-                 "relay_multihost", "relay_disagg", "relay_cold"):
+                 "relay_multihost", "relay_disagg", "relay_cold",
+                 "relay_tenants"):
         s = _run(mode, L, qps)
         entry = {
             "p50_ms": round(s["p50_ms"], 3),

@@ -24,7 +24,8 @@ import time
 # every BENCH_relay.json must report these serving modes
 RELAY_MODES = ("baseline", "relay", "relay_dram", "relay_batched",
                "relay_paged", "relay_devpool", "relay_segments",
-               "relay_multihost", "relay_disagg", "relay_cold")
+               "relay_multihost", "relay_disagg", "relay_cold",
+               "relay_tenants")
 
 
 def main(argv=None) -> None:

@@ -90,19 +90,53 @@ class CacheEntry:
     # the cold store; the first rank it serves classifies as COLD_HIT
     # (then the flag clears — later lifecycles are ordinary warm hits)
     cold_sourced: bool = False
+    # multi-tenant serving: the tenant this psi belongs to.  Rides the
+    # entry through every tier (HBM -> DRAM -> cold) and every copy
+    # (spill / demotion / handoff), so partition enforcement never has
+    # to guess ownership.  0 for single-tenant deployments.
+    tenant: int = 0
+
+
+def tenant_ledger(quota: Optional[Dict[int, int]], *keys: str
+                  ) -> Optional[Dict[int, Dict[str, int]]]:
+    """Per-tenant counter block for a store: one zeroed dict of ``keys``
+    per tenant in the quota map, or None when the store is untenanted
+    (single-tenant deployments build no per-tenant machinery at all)."""
+    if quota is None:
+        return None
+    return {int(t): {k: 0 for k in keys} for t in quota}
 
 
 class HBMCacheStore:
-    """FIFO sliding-window cache under a byte budget (single instance)."""
+    """FIFO sliding-window cache under a byte budget (single instance).
 
-    def __init__(self, budget_bytes: int):
+    With a ``tenant_quota`` map (multi-tenant serving) the byte budget
+    is PARTITIONED: each tenant owns a fixed share, an insert can only
+    evict that tenant's own entries, and a cross-tenant eviction — the
+    isolation violation the partition exists to prevent — is counted in
+    ``stats["cross_tenant_evictions"]`` (asserted zero by the invariant
+    suite).  ``tenant_quota=None`` (the default) builds none of this
+    and is bit-identical to the untenanted store.
+    """
+
+    def __init__(self, budget_bytes: int,
+                 tenant_quota: Optional[Dict[int, int]] = None):
         self.budget = int(budget_bytes)
         self.entries: "OrderedDict[int, CacheEntry]" = OrderedDict()
         self.used_bytes = 0
         self.stats = {"inserts": 0, "hits": 0, "misses": 0,
                       "evictions": 0, "premature_evictions": 0,
                       "rejected_inserts": 0, "peak_bytes": 0,
-                      "handoffs": 0}
+                      "handoffs": 0, "cross_tenant_evictions": 0}
+        self.tenant_quota = ({int(t): int(b)
+                              for t, b in tenant_quota.items()}
+                             if tenant_quota is not None else None)
+        self.tenant_used: Optional[Dict[int, int]] = (
+            {t: 0 for t in self.tenant_quota}
+            if self.tenant_quota is not None else None)
+        self.tenant_stats = tenant_ledger(
+            self.tenant_quota, "inserts", "hits", "evictions",
+            "premature_evictions", "rejected_inserts", "handoffs")
 
     def __contains__(self, user_id: int) -> bool:
         return user_id in self.entries
@@ -111,10 +145,42 @@ class HBMCacheStore:
     def live_count(self) -> int:
         return len(self.entries)
 
+    # --- tenant partition helpers (inert when tenant_quota is None) ----------
+
+    def _tenant_budget(self, tenant: int) -> int:
+        if self.tenant_quota is None:
+            return self.budget
+        return self.tenant_quota.get(int(tenant), 0)
+
+    def _taccount(self, tenant: int, delta: int) -> None:
+        if self.tenant_used is not None:
+            self.tenant_used[int(tenant)] = \
+                self.tenant_used.get(int(tenant), 0) + delta
+
+    def _tbump(self, tenant: int, key: str, n: int = 1) -> None:
+        if self.tenant_stats is not None:
+            self.tenant_stats.setdefault(
+                int(tenant),
+                {k: 0 for k in next(iter(self.tenant_stats.values()))}
+            )[key] += n
+
+    def _victim_uid(self, tenant: int, exclude: Optional[int] = None
+                    ) -> Optional[int]:
+        """Oldest evictable entry for an insert by ``tenant``: FIFO over
+        the whole window when untenanted, FIFO over the tenant's OWN
+        entries under a partition (never another tenant's)."""
+        for uid, e in self.entries.items():
+            if uid == exclude:
+                continue
+            if self.tenant_quota is not None and e.tenant != tenant:
+                continue
+            return uid
+        return None
+
     def insert(self, user_id: int, value: Any, nbytes: int, now: float,
                prefix_len: int = 0,
-               spans: Optional[Tuple[Tuple[int, int], ...]] = None
-               ) -> List[CacheEntry]:
+               spans: Optional[Tuple[Tuple[int, int], ...]] = None,
+               tenant: int = 0) -> List[CacheEntry]:
         """Insert psi(u); evicts oldest entries past the budget.
         Returns the evicted entries (candidates for DRAM spill).
 
@@ -125,11 +191,16 @@ class HBMCacheStore:
         the absence instead of believing psi is resident.  A rejected
         same-user REFRESH still evicts the superseded psi — serving the
         stale cache for the new lifecycle would be the silent-drop bug
-        this path exists to prevent."""
-        if int(nbytes) > self.budget:
+        this path exists to prevent.
+
+        Under a tenant partition the budget tests run against the
+        tenant's OWN share and the pressure loop only evicts the
+        tenant's own entries."""
+        if int(nbytes) > self._tenant_budget(tenant):
             evicted = ([self._evict(user_id)]
                        if user_id in self.entries else [])
             self.stats["rejected_inserts"] += 1
+            self._tbump(tenant, "rejected_inserts")
             return evicted
         if user_id in self.entries:
             # same-user refresh: the superseded psi leaves the window
@@ -138,17 +209,31 @@ class HBMCacheStore:
             self._evict(user_id)
         entry = CacheEntry(user_id, value, int(nbytes), now,
                            prefix_len=prefix_len, tokens_resident=prefix_len,
-                           spans=tuple(spans) if spans else None)
+                           spans=tuple(spans) if spans else None,
+                           tenant=int(tenant))
         evicted = []
-        while self.used_bytes + entry.nbytes > self.budget and self.entries:
-            old_uid, old = next(iter(self.entries.items()))
+        used = (self.tenant_used.get(int(tenant), 0)
+                if self.tenant_used is not None else self.used_bytes)
+        while used + entry.nbytes > self._tenant_budget(tenant) \
+                and self.entries:
+            old_uid = self._victim_uid(tenant)
+            if old_uid is None:
+                break
+            old = self.entries[old_uid]
             self._evict(old_uid)
+            if old.tenant != entry.tenant:
+                self.stats["cross_tenant_evictions"] += 1
             if not old.consumed:
                 self.stats["premature_evictions"] += 1
+                self._tbump(old.tenant, "premature_evictions")
             evicted.append(old)
+            used = (self.tenant_used.get(int(tenant), 0)
+                    if self.tenant_used is not None else self.used_bytes)
         self.entries[user_id] = entry
         self.used_bytes += entry.nbytes
+        self._taccount(tenant, entry.nbytes)
         self.stats["inserts"] += 1
+        self._tbump(tenant, "inserts")
         self.stats["peak_bytes"] = max(self.stats["peak_bytes"],
                                        self.used_bytes)
         return evicted
@@ -159,6 +244,7 @@ class HBMCacheStore:
             self.stats["misses"] += 1
         else:
             self.stats["hits"] += 1
+            self._tbump(e.tenant, "hits")
         return e
 
     def consume(self, user_id: int) -> Optional[CacheEntry]:
@@ -189,14 +275,18 @@ class HBMCacheStore:
         if e is None:
             return None
         self.used_bytes -= e.nbytes
+        self._taccount(e.tenant, -e.nbytes)
         self.stats["handoffs"] += 1
+        self._tbump(e.tenant, "handoffs")
         return e
 
-    def fits(self, nbytes: int, prefix_len: int = 0) -> bool:
+    def fits(self, nbytes: int, prefix_len: int = 0,
+             tenant: int = 0) -> bool:
         """Could an entry of this size EVER land in the window?  False
-        means permanently unpromotable (over the whole budget) — the
-        expander uses this to stop scheduling doomed reloads."""
-        return int(nbytes) <= self.budget
+        means permanently unpromotable (over the whole budget — or over
+        the owning tenant's share, under a partition) — the expander
+        uses this to stop scheduling doomed reloads."""
+        return int(nbytes) <= self._tenant_budget(tenant)
 
     def missing_tokens(self, user_id: int, total: int) -> int:
         """Tokens a DRAM->HBM reload must stream for this user.  The
@@ -232,8 +322,10 @@ class HBMCacheStore:
     def _evict(self, user_id: int) -> CacheEntry:
         e = self.entries.pop(user_id)
         self.used_bytes -= e.nbytes
+        self._taccount(e.tenant, -e.nbytes)
         e.state = CacheState.EVICTED
         self.stats["evictions"] += 1
+        self._tbump(e.tenant, "evictions")
         return e
 
 
@@ -273,13 +365,22 @@ class PagedHBMStore(HBMCacheStore):
     """
 
     def __init__(self, budget_bytes: int, layout: PageLayout,
-                 device_pool: bool = False):
-        super().__init__(budget_bytes)
+                 device_pool: bool = False,
+                 tenant_quota: Optional[Dict[int, int]] = None):
+        super().__init__(budget_bytes, tenant_quota=tenant_quota)
         self.layout = layout
         pool_cls = DevicePagePool if device_pool else PagePool
         self.pool = pool_cls(
             n_pages=int(budget_bytes) // layout.page_bytes,
             page_bytes=layout.page_bytes)
+        # page-granular partition: each tenant's byte share floors to
+        # whole pages — a tenant's insert can only allocate inside its
+        # own page quota, so one tenant's footprint can never starve
+        # another's pool (None when untenanted)
+        self.tenant_pages: Optional[Dict[int, int]] = (
+            {t: int(b) // layout.page_bytes
+             for t, b in self.tenant_quota.items()}
+            if self.tenant_quota is not None else None)
         self.buffer: Optional[np.ndarray] = None   # lazily shaped
         # device-pool routing: when the runtime wires an executor here
         # (``InstanceRuntime``), page-data movement goes through its
@@ -337,10 +438,20 @@ class PagedHBMStore(HBMCacheStore):
 
     # --- insert: fresh / refresh / resume -----------------------------------
 
+    def _tenant_page_cap(self, tenant: int) -> int:
+        if self.tenant_pages is None:
+            return self.pool.n_pages
+        return self.tenant_pages.get(int(tenant), 0)
+
+    def _tenant_pages_used(self, tenant: int) -> int:
+        if self.tenant_used is None:
+            return 0
+        return self.tenant_used.get(int(tenant), 0) // self.layout.page_bytes
+
     def insert(self, user_id: int, value: Any, nbytes: int, now: float,
                prefix_len: int = 0,
-               spans: Optional[Tuple[Tuple[int, int], ...]] = None
-               ) -> List[CacheEntry]:
+               spans: Optional[Tuple[Tuple[int, int], ...]] = None,
+               tenant: int = 0) -> List[CacheEntry]:
         tokens = self._tokens_of(nbytes, prefix_len)
         if spans:
             # segmented entry: every span pads to whole pages so spans
@@ -357,12 +468,13 @@ class PagedHBMStore(HBMCacheStore):
             # so paged and dense ranking see identical keys
             tokens = max(tokens, int(value[0].shape[2]))
         need = self.layout.entry_pages(tokens)
-        if need > self.pool.n_pages:
+        if need > self._tenant_page_cap(tenant):
             # doomed insert: reject, but never let a superseded psi
             # serve the new lifecycle (same contract as the base store)
             evicted = ([self._evict(user_id)]
                        if user_id in self.entries else [])
             self.stats["rejected_inserts"] += 1
+            self._tbump(tenant, "rejected_inserts")
             return evicted
         self._ensure_buffer(value)
         existing = self.entries.get(user_id)
@@ -373,20 +485,21 @@ class PagedHBMStore(HBMCacheStore):
             # same-user refresh: superseded psi leaves through the
             # eviction turnstile, exactly like the dense store
             self._evict(user_id)
-        evicted = self._make_room(need, exclude=user_id)
+        evicted = self._make_room(need, exclude=user_id, tenant=tenant)
         pages = self.pool.alloc(need)
         if pages is None:
             # pinned zombie pages of in-flight launches can transiently
             # shrink the pool below the byte budget; reject, observed
             # by the runtime as a miss
             self.stats["rejected_inserts"] += 1
+            self._tbump(tenant, "rejected_inserts")
             return evicted
         pps = self.layout.pages_per_slab(tokens)
         table = np.asarray(pages, np.int32).reshape(self.layout.slabs, pps)
         entry = CacheEntry(
             user_id, value, need * self.layout.page_bytes, now,
             prefix_len=tokens, tokens_resident=tokens, page_table=table,
-            spans=tuple(spans) if spans else None)
+            spans=tuple(spans) if spans else None, tenant=int(tenant))
         if self.buffer is not None and _is_kv_pytree(value):
             slice_into_pages(self.buffer, table, value,
                              self.layout.page_tokens)
@@ -395,7 +508,9 @@ class PagedHBMStore(HBMCacheStore):
                                    spans=entry.spans, pool=self.pool)
         self.entries[user_id] = entry
         self.used_bytes += entry.nbytes
+        self._taccount(tenant, entry.nbytes)
         self.stats["inserts"] += 1
+        self._tbump(tenant, "inserts")
         self.stats["peak_bytes"] = max(self.stats["peak_bytes"],
                                        self.used_bytes)
         return evicted
@@ -408,7 +523,8 @@ class PagedHBMStore(HBMCacheStore):
         pps_res = self.layout.pages_per_slab(entry.tokens_resident) \
             if entry.tokens_resident else 0
         missing = (pps_full - pps_res) * self.layout.slabs
-        evicted = self._make_room(missing, exclude=entry.user_id)
+        evicted = self._make_room(missing, exclude=entry.user_id,
+                                  tenant=entry.tenant)
         pages = self.pool.alloc(missing)
         if pages is None:                  # zombie-pinched pool: restart
             evicted.append(self._evict(entry.user_id))
@@ -437,23 +553,33 @@ class PagedHBMStore(HBMCacheStore):
         entry.created_at = now
         self.entries.move_to_end(entry.user_id)
         self.used_bytes += added
+        self._taccount(entry.tenant, added)
         self.stats["resumed_reloads"] += 1
         self.stats["pages_reloaded"] += missing
         self.stats["peak_bytes"] = max(self.stats["peak_bytes"],
                                        self.used_bytes)
         return evicted
 
-    def _make_room(self, need: int, exclude: int) -> List[CacheEntry]:
+    def _make_room(self, need: int, exclude: int, tenant: int = 0
+                   ) -> List[CacheEntry]:
         """Free pages until ``need`` fit: partial tail eviction of the
         oldest consumed DRAM-backed entry when that covers the deficit,
-        whole-entry FIFO eviction otherwise."""
+        whole-entry FIFO eviction otherwise.  Under a tenant partition
+        the pressure test is the tenant's own page quota and victims
+        come only from the tenant's own entries."""
         evicted: List[CacheEntry] = []
-        while self.pool.free_pages < need:
-            victim = next((u for u in self.entries if u != exclude), None)
+        while (self.pool.free_pages < need
+               or self._tenant_pages_used(tenant) + need
+               > self._tenant_page_cap(tenant)):
+            victim = self._victim_uid(tenant, exclude=exclude)
             if victim is None:
                 break
             old = self.entries[victim]
-            deficit = need - self.pool.free_pages
+            if self.tenant_pages is None:
+                deficit = need - self.pool.free_pages
+            else:
+                deficit = (self._tenant_pages_used(tenant) + need
+                           - self._tenant_page_cap(tenant))
             per_slab = ceil_div(deficit, self.layout.slabs)
             pps_res = self.layout.pages_per_slab(old.tokens_resident) \
                 if old.tokens_resident else 0
@@ -467,11 +593,15 @@ class PagedHBMStore(HBMCacheStore):
                 old.tokens_resident = keep * self.layout.page_tokens
                 old.nbytes -= freed * self.layout.page_bytes
                 self.used_bytes -= freed * self.layout.page_bytes
+                self._taccount(old.tenant, -freed * self.layout.page_bytes)
                 self.stats["partial_evictions"] += 1
                 continue
             self._evict(victim)
+            if old.tenant != int(tenant):
+                self.stats["cross_tenant_evictions"] += 1
             if not old.consumed:
                 self.stats["premature_evictions"] += 1
+                self._tbump(old.tenant, "premature_evictions")
             evicted.append(old)
         return evicted
 
@@ -484,9 +614,11 @@ class PagedHBMStore(HBMCacheStore):
             return None
         return super().lookup(user_id)
 
-    def fits(self, nbytes: int, prefix_len: int = 0) -> bool:
+    def fits(self, nbytes: int, prefix_len: int = 0,
+             tenant: int = 0) -> bool:
         tokens = self._tokens_of(nbytes, prefix_len)
-        return self.layout.entry_pages(tokens) <= self.pool.n_pages
+        return self.layout.entry_pages(tokens) \
+            <= self._tenant_page_cap(tenant)
 
     def missing_tokens(self, user_id: int, total: int) -> int:
         e = self.entries.get(user_id)
@@ -562,11 +694,15 @@ class PagedHBMStore(HBMCacheStore):
 
 
 def make_hbm_store(budget_bytes: int, layout: Optional[PageLayout] = None,
-                   device_pool: bool = False) -> HBMCacheStore:
+                   device_pool: bool = False,
+                   tenant_quota: Optional[Dict[int, int]] = None
+                   ) -> HBMCacheStore:
     """Window factory: dense store, or the paged pool when a layout is
     given (``ClusterConfig.page_tokens > 0``).  ``device_pool`` makes
     the pool's data plane a device-resident array mutated in place by
-    scatter-on-insert (``ClusterConfig.device_pool``)."""
+    scatter-on-insert (``ClusterConfig.device_pool``).  ``tenant_quota``
+    (tenant id -> byte share) partitions the window per tenant."""
     if layout is None:
-        return HBMCacheStore(budget_bytes)
-    return PagedHBMStore(budget_bytes, layout, device_pool=device_pool)
+        return HBMCacheStore(budget_bytes, tenant_quota=tenant_quota)
+    return PagedHBMStore(budget_bytes, layout, device_pool=device_pool,
+                         tenant_quota=tenant_quota)

@@ -37,7 +37,7 @@ import dataclasses
 from collections import OrderedDict
 from typing import Dict, Optional
 
-from .cache import CacheEntry
+from .cache import CacheEntry, tenant_ledger
 from .types import CacheState
 
 
@@ -51,14 +51,52 @@ class ColdStoreConfig:
 class ColdStore:
     """LRU cold store for demoted psi (one per rank host)."""
 
-    def __init__(self, cfg: ColdStoreConfig):
+    def __init__(self, cfg: ColdStoreConfig,
+                 tenant_quota: Optional[Dict[int, int]] = None):
         self.cfg = cfg
         self.entries: "OrderedDict[int, CacheEntry]" = OrderedDict()
         self.used_bytes = 0
         self.stats: Dict[str, int] = {
             "inserts": 0, "evictions": 0, "handoffs": 0, "promotions": 0,
             "hits": 0, "misses": 0, "rejected_inserts": 0,
+            "cross_tenant_evictions": 0,
         }
+        # multi-tenant partition (same discipline as the HBM window and
+        # DRAM expander): tenant id -> byte share; a tenant's demotion
+        # only LRU-evicts that tenant's own copies.  None = untenanted.
+        self.tenant_quota = ({int(t): int(b)
+                              for t, b in tenant_quota.items()}
+                             if tenant_quota is not None else None)
+        self.tenant_used: Optional[Dict[int, int]] = (
+            {t: 0 for t in self.tenant_quota}
+            if self.tenant_quota is not None else None)
+        self.tenant_stats = tenant_ledger(
+            self.tenant_quota, "inserts", "evictions", "handoffs",
+            "promotions", "hits")
+
+    # --- tenant partition helpers ------------------------------------------
+    def _tenant_budget(self, tenant: int) -> float:
+        if self.tenant_quota is None:
+            return self.cfg.budget_bytes
+        return self.tenant_quota.get(int(tenant), 0)
+
+    def _taccount(self, tenant: int, delta: int):
+        if self.tenant_used is not None:
+            t = int(tenant)
+            self.tenant_used[t] = self.tenant_used.get(t, 0) + delta
+
+    def _tbump(self, tenant: int, key: str, n: int = 1):
+        if self.tenant_stats is not None:
+            s = self.tenant_stats.get(int(tenant))
+            if s is not None:
+                s[key] = s.get(key, 0) + n
+
+    def _lru_victim(self, tenant: int) -> Optional[int]:
+        for uid, e in self.entries.items():
+            if self.tenant_quota is not None and e.tenant != int(tenant):
+                continue
+            return uid
+        return None
 
     @property
     def live_count(self) -> int:
@@ -72,19 +110,33 @@ class ColdStore:
         evicts until the budget fits, and rejects entries that could
         never fit.  The entry must carry a dense ``value`` (the DRAM
         tier materializes paged psi at spill time)."""
-        if entry.nbytes > self.cfg.budget_bytes or entry.value is None:
+        if entry.nbytes > self._tenant_budget(entry.tenant) \
+                or entry.value is None:
             self.stats["rejected_inserts"] += 1
             return False
         self.drop(entry.user_id)            # stale same-user copy
-        while (self.used_bytes + entry.nbytes > self.cfg.budget_bytes
+        used = (self.tenant_used.get(int(entry.tenant), 0)
+                if self.tenant_used is not None else self.used_bytes)
+        while (used + entry.nbytes > self._tenant_budget(entry.tenant)
                and self.entries):
-            _, old = self.entries.popitem(last=False)
+            old_uid = self._lru_victim(entry.tenant)
+            if old_uid is None:
+                break
+            old = self.entries.pop(old_uid)
             self.used_bytes -= old.nbytes
+            self._taccount(old.tenant, -old.nbytes)
+            if old.tenant != entry.tenant:
+                self.stats["cross_tenant_evictions"] += 1
             self.stats["evictions"] += 1
+            self._tbump(old.tenant, "evictions")
+            used = (self.tenant_used.get(int(entry.tenant), 0)
+                    if self.tenant_used is not None else self.used_bytes)
         entry.state = CacheState.COLD
         self.entries[entry.user_id] = entry
         self.used_bytes += entry.nbytes
+        self._taccount(entry.tenant, entry.nbytes)
         self.stats["inserts"] += 1
+        self._tbump(entry.tenant, "inserts")
         return True
 
     # --- reads ---------------------------------------------------------------
@@ -103,6 +155,7 @@ class ColdStore:
             return None
         self.entries.move_to_end(user_id)
         self.stats["hits"] += 1
+        self._tbump(e.tenant, "hits")
         return e
 
     # --- removals (the three turnstiles) ------------------------------------
@@ -125,5 +178,7 @@ class ColdStore:
         if e is None:
             return None
         self.used_bytes -= e.nbytes
+        self._taccount(e.tenant, -e.nbytes)
         self.stats[counter] += 1
+        self._tbump(e.tenant, counter)
         return e

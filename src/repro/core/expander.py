@@ -29,7 +29,7 @@ import dataclasses
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
 
-from .cache import CacheEntry, HBMCacheStore
+from .cache import CacheEntry, HBMCacheStore, tenant_ledger
 from .paging import PagedPsi
 from .types import CacheState
 
@@ -68,12 +68,26 @@ class SingleFlight:
 
 
 class DRAMExpander:
-    def __init__(self, cfg: ExpanderConfig):
+    def __init__(self, cfg: ExpanderConfig,
+                 tenant_quota: Optional[Dict[int, int]] = None):
         self.cfg = cfg
         self.entries: "OrderedDict[int, CacheEntry]" = OrderedDict()
         self.used_bytes = 0
         self.flight = SingleFlight()
         self.active_reloads = 0
+        # multi-tenant partition: tenant id -> byte share of the DRAM
+        # budget.  A tenant's spill only LRU-evicts that tenant's own
+        # copies; None (single-tenant) builds no tenant machinery.
+        self.tenant_quota = ({int(t): int(b)
+                              for t, b in tenant_quota.items()}
+                             if tenant_quota is not None else None)
+        self.tenant_used: Optional[Dict[int, int]] = (
+            {t: 0 for t in self.tenant_quota}
+            if self.tenant_quota is not None else None)
+        self.tenant_stats = tenant_ledger(
+            self.tenant_quota, "inserts", "evictions", "demotions",
+            "promotions", "handoffs", "spills", "dram_hits",
+            "lru_evictions")
         # Optional cold-tier hook: when a runtime wires a sink, LRU
         # evictees are DEMOTED down the hierarchy (the sink prices and
         # lands the copy asynchronously) instead of dropped.  Returns
@@ -94,7 +108,34 @@ class DRAMExpander:
                       "spills": 0, "reloads": 0, "redundant_avoided": 0,
                       "dram_hits": 0, "dram_misses": 0, "lru_evictions": 0,
                       "reload_throttled": 0, "unfit_dropped": 0,
-                      "rejected_spills": 0}
+                      "rejected_spills": 0, "cross_tenant_evictions": 0}
+
+    # --- tenant partition helpers ------------------------------------------
+    def _tenant_budget(self, tenant: int) -> float:
+        if self.tenant_quota is None:
+            return self.cfg.dram_budget_bytes
+        return self.tenant_quota.get(int(tenant), 0)
+
+    def _taccount(self, tenant: int, delta: int):
+        if self.tenant_used is not None:
+            t = int(tenant)
+            self.tenant_used[t] = self.tenant_used.get(t, 0) + delta
+
+    def _tbump(self, tenant: int, key: str, n: int = 1):
+        if self.tenant_stats is not None:
+            s = self.tenant_stats.get(int(tenant))
+            if s is not None:
+                s[key] = s.get(key, 0) + n
+
+    def _lru_victim(self, tenant: int) -> Optional[int]:
+        """Oldest entry eligible for eviction on behalf of ``tenant``:
+        the global LRU head untenanted, the tenant's OWN LRU head under
+        partition (a tenant's spill never displaces another tenant)."""
+        for uid, e in self.entries.items():
+            if self.tenant_quota is not None and e.tenant != int(tenant):
+                continue
+            return uid
+        return None
 
     # --- spill (after consumption, off the critical path) -------------------
     def spill(self, entry: CacheEntry) -> bool:
@@ -108,7 +149,7 @@ class DRAMExpander:
                 self.entries.move_to_end(entry.user_id)
                 return True
             return False
-        if entry.nbytes > self.cfg.dram_budget_bytes:
+        if entry.nbytes > self._tenant_budget(entry.tenant):
             # an entry that can never fit must be rejected UP FRONT,
             # without disturbing the tier: letting it reach the LRU
             # loop would evict every resident psi before the final fit
@@ -126,23 +167,38 @@ class DRAMExpander:
             entry = dataclasses.replace(entry, page_table=None,
                                         tokens_resident=entry.prefix_len)
         if entry.user_id in self.entries:
-            self._remove(entry.user_id)
+            stale = self._remove(entry.user_id)
             self.stats["evictions"] += 1       # replaced same-user copy
-        while (self.used_bytes + entry.nbytes > self.cfg.dram_budget_bytes
+            self._tbump(stale.tenant, "evictions")
+        used = (self.tenant_used.get(int(entry.tenant), 0)
+                if self.tenant_used is not None else self.used_bytes)
+        while (used + entry.nbytes > self._tenant_budget(entry.tenant)
                and self.entries):
-            old, _ = self.entries.popitem(last=False)  # LRU
-            self.used_bytes -= _.nbytes
+            old_uid = self._lru_victim(entry.tenant)
+            if old_uid is None:
+                break
+            _ = self._remove(old_uid)          # LRU (same-tenant under quota)
+            if _.tenant != entry.tenant:
+                self.stats["cross_tenant_evictions"] += 1
             self.stats["lru_evictions"] += 1
+            self._tbump(_.tenant, "lru_evictions")
             if self.demote_sink is not None and self.demote_sink(_):
                 self.stats["demotions"] += 1   # spilled DOWN, not dropped
+                self._tbump(_.tenant, "demotions")
             else:
                 self.stats["evictions"] += 1
-        if entry.nbytes <= self.cfg.dram_budget_bytes:
+                self._tbump(_.tenant, "evictions")
+            used = (self.tenant_used.get(int(entry.tenant), 0)
+                    if self.tenant_used is not None else self.used_bytes)
+        if entry.nbytes <= self._tenant_budget(entry.tenant):
             entry.state = CacheState.DRAM
             self.entries[entry.user_id] = entry
             self.used_bytes += entry.nbytes
+            self._taccount(entry.tenant, entry.nbytes)
             self.stats["spills"] += 1
             self.stats["inserts"] += 1
+            self._tbump(entry.tenant, "spills")
+            self._tbump(entry.tenant, "inserts")
             return True
         return False
 
@@ -153,11 +209,14 @@ class DRAMExpander:
         else:
             self.entries.move_to_end(user_id)  # LRU touch
             self.stats["dram_hits"] += 1
+            self._tbump(e.tenant, "dram_hits")
         return e
 
-    def _remove(self, user_id: int):
+    def _remove(self, user_id: int) -> CacheEntry:
         e = self.entries.pop(user_id)
         self.used_bytes -= e.nbytes
+        self._taccount(e.tenant, -e.nbytes)
+        return e
 
     def take(self, user_id: int) -> Optional[CacheEntry]:
         """Remove an entry for ownership handoff (rebalancing churn):
@@ -168,6 +227,7 @@ class DRAMExpander:
         if e is not None:
             self._remove(user_id)
             self.stats["handoffs"] = self.stats.get("handoffs", 0) + 1
+            self._tbump(e.tenant, "handoffs")
         return e
 
     # --- pseudo-pre-infer --------------------------------------------------
@@ -193,7 +253,7 @@ class DRAMExpander:
         d = self.lookup(user_id)
         if d is None:
             return "miss", None
-        if not hbm.fits(d.nbytes, d.prefix_len):
+        if not hbm.fits(d.nbytes, d.prefix_len, tenant=d.tenant):
             # permanently unpromotable (psi over the whole window
             # budget): drop the copy so we stop scheduling doomed
             # reloads — otherwise every request for this user would pay
@@ -201,6 +261,7 @@ class DRAMExpander:
             self._remove(user_id)
             self.stats["unfit_dropped"] += 1
             self.stats["evictions"] += 1
+            self._tbump(d.tenant, "evictions")
             return "miss", None
         if self.active_reloads >= self.cfg.max_reload_concurrency:
             self.stats["reload_throttled"] += 1
@@ -220,7 +281,8 @@ class DRAMExpander:
         if e is not None:
             e.reload_tokens = None
             evicted = hbm.insert(user_id, e.value, e.nbytes, now,
-                                 prefix_len=e.prefix_len, spans=e.spans)
+                                 prefix_len=e.prefix_len, spans=e.spans,
+                                 tenant=e.tenant)
             if hbm.resident(user_id) is None:
                 # the window rejected the promotion: the reload is
                 # wasted, but a TRANSIENTLY rejected copy (zombie-
@@ -229,10 +291,11 @@ class DRAMExpander:
                 # full-inference miss although psi still exists
                 # locally.  A permanently unfit psi is dropped so no
                 # further reloads get scheduled for it.
-                if not hbm.fits(e.nbytes, e.prefix_len):
+                if not hbm.fits(e.nbytes, e.prefix_len, tenant=e.tenant):
                     self._remove(user_id)
                     self.stats["unfit_dropped"] += 1
                     self.stats["evictions"] += 1
+                    self._tbump(e.tenant, "evictions")
                 return evicted
             self._remove(user_id)
             e.state = CacheState.HBM
@@ -243,6 +306,7 @@ class DRAMExpander:
             hbm.entries[user_id].cold_sourced = e.cold_sourced
             self.stats["reloads"] += 1
             self.stats["promotions"] += 1
+            self._tbump(e.tenant, "promotions")
         return evicted
 
     def finish(self, user_id: int):

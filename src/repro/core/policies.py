@@ -92,8 +92,11 @@ def make_router(name: str, special: List[str], normal: List[str], *,
                                                  topology=topology)
 
 
-def make_expander(name: str, cfg: ExpanderConfig):
-    return _get(EXPANDER_POLICIES, "expander", name)(cfg)
+def make_expander(name: str, cfg: ExpanderConfig, tenant_quota=None):
+    cls = _get(EXPANDER_POLICIES, "expander", name)
+    if tenant_quota is not None:
+        return cls(cfg, tenant_quota=tenant_quota)
+    return cls(cfg)
 
 
 def policy_names() -> Dict[str, List[str]]:
@@ -207,7 +210,7 @@ class NullExpander(DRAMExpander):
     """No DRAM reuse tier: psi lives only in the HBM window (equivalent
     to a zero DRAM budget, kept as an explicit policy for ablations)."""
 
-    def __init__(self, cfg: ExpanderConfig):
+    def __init__(self, cfg: ExpanderConfig, tenant_quota=None):
         super().__init__(ExpanderConfig(
             dram_budget_bytes=0.0,
             max_reload_concurrency=cfg.max_reload_concurrency))

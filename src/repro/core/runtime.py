@@ -137,6 +137,12 @@ class ClusterConfig:
     # that would land hopelessly late must not be queued at all, or a
     # saturated SSD turns into an unbounded promise backlog
     cold_backlog_ms: float = 50.0
+    # multi-tenant serving: partition the whole HBM->DRAM->cold
+    # hierarchy into per-tenant byte/page quotas (equal shares) and give
+    # the trigger per-tenant admission buckets + SLO classes.  tenants=1
+    # (the default) builds NONE of this — bit-identical to the
+    # single-workload runtime (tests/test_runtime_parity.py).
+    tenants: int = 1
     rebalance: str = "handoff"           # churn policy: handoff | none
     # >0 -> disaggregated prefill: dedicate N hosts (one pooled prefill
     # engine each) to the pre-infer side path; produced psi is SHIPPED
@@ -241,6 +247,7 @@ class Record:
     # pair to the fleet-wide reused-token fraction
     reused_tokens: int = 0
     ctx_tokens: int = 0
+    tenant: int = 0
 
     @property
     def e2e_ms(self) -> float:
@@ -265,6 +272,10 @@ class InstanceConfig:
     segments: bool = False              # span-aware (beyond-prefix) entries
     device_pool: bool = False           # device-resident page pool
     role: str = "rank"                  # "rank" | "prefill" (side path only)
+    # multi-tenant byte partitions (tenant id -> share); None builds the
+    # untenanted stores
+    tenant_quota: Optional[Dict[int, int]] = None        # HBM window
+    dram_tenant_quota: Optional[Dict[int, int]] = None   # private expander
 
 
 class InstanceRuntime:
@@ -298,7 +309,8 @@ class InstanceRuntime:
         device = bool(cfg.device_pool
                       or getattr(executor, "device_pool", False))
         self.hbm = make_hbm_store(int(cfg.hbm_cache_bytes), layout,
-                                  device_pool=device and layout is not None)
+                                  device_pool=device and layout is not None,
+                                  tenant_quota=cfg.tenant_quota)
         if (isinstance(getattr(self.hbm, "pool", None), DevicePagePool)
                 and hasattr(executor, "insert_pages")):
             # route the window's page-data movement (insert / resume /
@@ -313,7 +325,8 @@ class InstanceRuntime:
         # deployment, where affinity makes per-instance and per-host
         # tiers equivalent) own a private one
         self.expander = expander if expander is not None \
-            else make_expander(cfg.expander_policy, cfg.dram)
+            else make_expander(cfg.expander_policy, cfg.dram,
+                               tenant_quota=cfg.dram_tenant_quota)
         # continuous micro-batching: opted into by the executor carrying
         # a BatchingConfig + rank_group (the `batched` live executor or
         # a batching-enabled SimExecutor mirror)
@@ -359,7 +372,8 @@ class InstanceRuntime:
         # knows the true reused-token count
         spans = reuse_spans(meta) if self.segments else None
         evicted = self.hbm.insert(meta.user_id, psi, nbytes, now,
-                                  prefix_len=meta.prefix_len, spans=spans)
+                                  prefix_len=meta.prefix_len, spans=spans,
+                                  tenant=meta.tenant)
         if meta.user_id not in self.hbm:
             # oversized psi rejected by the window (surfaced via
             # hbm.stats["rejected_inserts"]): the runtime must treat
@@ -534,6 +548,17 @@ class RelayRuntime:
         self.cost = cost
         self.clock: Clock = clock if clock is not None else VirtualClock()
         cl = self.cfg.cluster
+        # multi-tenant serving: tenants > 1 partitions every memory tier
+        # into equal byte shares and layers per-tenant admission buckets
+        # / SLO classes under the trigger.  The cluster knob is the
+        # source of truth — sync the trigger config so one
+        # ``relay_config(tenants=N)`` (or a bare ClusterConfig) is
+        # enough.  tenants=1 leaves every config and store untouched.
+        self.tenants = max(int(getattr(cl, "tenants", 1)), 1)
+        if self.tenants != max(int(self.cfg.trigger.tenants), 1):
+            self.cfg = dataclasses.replace(
+                self.cfg, trigger=dataclasses.replace(
+                    self.cfg.trigger, tenants=self.tenants))
         # disaggregated prefill: dedicated side-path hosts + psi shipped
         # cross-host to the owner — the shipping delay is priced into
         # the trigger's slack test (a late psi is a useless psi)
@@ -601,7 +626,9 @@ class RelayRuntime:
                 self.host_expanders[hname] = make_expander(
                     cl.expander_policy, ExpanderConfig(
                         dram_budget_bytes=cl.dram_budget_bytes,
-                        max_reload_concurrency=cl.pcie_concurrency))
+                        max_reload_concurrency=cl.pcie_concurrency),
+                    tenant_quota=self._tenant_quota_map(
+                        cl.dram_budget_bytes))
         # hierarchical cold tier (MTServe-style, ROADMAP "Hierarchical
         # cache below DRAM"): one host-local SSD / remote-store
         # ColdStore per rank host.  DRAM LRU evictees demote into it
@@ -616,7 +643,16 @@ class RelayRuntime:
         # touch), never eagerly at host_leave
         self._orphan_cold: Dict[str, ColdStore] = {}
         self.cold_links: Dict[str, Dict[str, float]] = {}
-        self.cold = {"demotions": 0, "demote_landed": 0,
+        # conservation holds at ALL event boundaries, not just after a
+        # drain:  demotions == demote_landed + demote_dropped +
+        # demote_inflight.  The inflight term covers the write window
+        # between _demote (the copy left DRAM) and _on_demote_done (it
+        # became cold-resident or was dropped) — without it a stats()
+        # probe inside that window, e.g. while the DRAM source is being
+        # handed off by concurrent churn, sees the family transiently
+        # violated (tests/test_coldstore.py locks the interleaving).
+        self.cold = {"demotions": 0, "demote_inflight": 0,
+                     "demote_landed": 0,
                      "demote_dropped": 0, "demote_throttled": 0,
                      "promotions": 0, "promote_dropped": 0,
                      "promote_throttled": 0, "lazy_handoffs": 0,
@@ -627,7 +663,9 @@ class RelayRuntime:
             for hname, h in self.topology.hosts.items():
                 if h.role != "prefill":
                     self.cold_stores[hname] = ColdStore(
-                        ColdStoreConfig(budget_bytes=cl.cold_budget_bytes))
+                        ColdStoreConfig(budget_bytes=cl.cold_budget_bytes),
+                        tenant_quota=self._tenant_quota_map(
+                            cl.cold_budget_bytes))
             # cold-aware admission: a cold-resident user's side path is
             # a promotion + reload, not a prefill — the trigger's slack
             # test prices THAT instead of the full pre-infer estimate
@@ -737,6 +775,15 @@ class RelayRuntime:
             inst.loop = self
         return inst
 
+    def _tenant_quota_map(self, budget: float) -> Optional[Dict[int, int]]:
+        """Equal-share byte partition of ``budget`` over the configured
+        tenants; None (build the untenanted store) for tenants=1 or a
+        disabled tier."""
+        if self.tenants <= 1 or budget <= 0:
+            return None
+        share = int(budget) // self.tenants
+        return {t: share for t in range(self.tenants)}
+
     def _make_instance(self, name: str, special: bool, host: str,
                        role: str = "rank") -> InstanceRuntime:
         cl = self.cfg.cluster
@@ -751,7 +798,12 @@ class RelayRuntime:
             expander_policy=cl.expander_policy,
             page_layout=None if role == "prefill" else self._layout,
             segments=cl.segments,
-            device_pool=cl.device_pool and role != "prefill", role=role)
+            device_pool=cl.device_pool and role != "prefill", role=role,
+            tenant_quota=(None if role == "prefill" else
+                          self._tenant_quota_map(cl.hbm_cache_bytes)),
+            dram_tenant_quota=(None if role == "prefill" else
+                               self._tenant_quota_map(
+                                   cl.dram_budget_bytes)))
         icfg.dram.dram_budget_bytes = (0.0 if role == "prefill"
                                        else cl.dram_budget_bytes)
         icfg.dram.max_reload_concurrency = cl.pcie_concurrency
@@ -794,14 +846,18 @@ class RelayRuntime:
             self.host_expanders[host.name] = make_expander(
                 cl.expander_policy, ExpanderConfig(
                     dram_budget_bytes=cl.dram_budget_bytes,
-                    max_reload_concurrency=cl.pcie_concurrency))
+                    max_reload_concurrency=cl.pcie_concurrency),
+                tenant_quota=self._tenant_quota_map(cl.dram_budget_bytes))
         self.router.add_host(host)
         if self.cold_enabled:
             # the new server brings an (empty) cold store; entries the
             # join re-homes stay put until their next touch — the
             # rebalance walk below never moves cold copies eagerly
-            self.cold_stores[host.name] = ColdStore(ColdStoreConfig(
-                budget_bytes=self.cfg.cluster.cold_budget_bytes))
+            self.cold_stores[host.name] = ColdStore(
+                ColdStoreConfig(
+                    budget_bytes=self.cfg.cluster.cold_budget_bytes),
+                tenant_quota=self._tenant_quota_map(
+                    self.cfg.cluster.cold_budget_bytes))
         for name in host.instances:
             self.instances[name] = self._make_instance(
                 name, name in host.special, host.name)
@@ -1060,7 +1116,7 @@ class RelayRuntime:
             return
         evicted = inst.hbm.insert(entry.user_id, entry.value, entry.nbytes,
                                   t, prefix_len=entry.prefix_len,
-                                  spans=entry.spans)
+                                  spans=entry.spans, tenant=entry.tenant)
         landed = inst.hbm.entries.get(entry.user_id)
         if landed is not None:
             # the entry continues its lifecycle: a consumed psi must not
@@ -1157,6 +1213,7 @@ class RelayRuntime:
         arrival, ms = self._cold_transfer(now, host, entry.nbytes,
                                           entry.prefix_len or 1)
         self.cold["demotions"] += 1
+        self.cold["demote_inflight"] += 1
         self.cold["ms"] += ms
         self.schedule(arrival, "demote_done", host=host, entry=entry)
         return True
@@ -1164,7 +1221,10 @@ class RelayRuntime:
     def _on_demote_done(self, t: float, host: str, entry) -> None:
         # the write completed: the copy becomes cold-resident NOW (a
         # promotion probe during the in-flight window missed — the disk
-        # copy was not readable yet)
+        # copy was not readable yet).  Resolve the inflight term FIRST
+        # so the landed/dropped increment below keeps the conservation
+        # family exact at this very event boundary.
+        self.cold["demote_inflight"] -= 1
         store = self.cold_stores.get(host) or self._orphan_cold.get(host)
         if store is None or not store.insert(entry):
             self.cold["demote_dropped"] += 1
@@ -1302,7 +1362,8 @@ class RelayRuntime:
     def _on_arrival(self, t: float, meta: UserMeta, sink=None) -> None:
         rec = Record(user_id=meta.user_id, t_arrival=t,
                      prefix_len=meta.prefix_len,
-                     ctx_tokens=meta.prefix_len + meta.incr_len)
+                     ctx_tokens=meta.prefix_len + meta.incr_len,
+                     tenant=getattr(meta, "tenant", 0))
         pp = self.cfg.pipeline
         if self.cfg.cluster.relay_enabled:
             signal, target = self.open_lifecycle(meta, t)
@@ -1772,7 +1833,8 @@ class RelayRuntime:
         from .cache import CacheEntry
         spans = (reuse_spans(meta) if self.cfg.cluster.segments else None)
         entry = CacheEntry(meta.user_id, psi, int(nbytes), t,
-                           prefix_len=meta.prefix_len, spans=spans)
+                           prefix_len=meta.prefix_len, spans=spans,
+                           tenant=meta.tenant)
         self.schedule(arrival, "handoff_done", target=target,
                       entry=entry, tier="hbm")
 
@@ -2016,6 +2078,37 @@ class RelayRuntime:
             out["prefill_util"] = self._util(self.prefill, dur)
         return out
 
+    def tenant_summary(self) -> Dict[int, Dict[str, float]]:
+        """Per-tenant slice of ``summary()``: latency percentiles and
+        hit-kind mix over each tenant's own records.  The isolation
+        bench compares a tenant's slice across runs (solo vs a
+        co-tenant bursting) — its hit rate and knee must not move."""
+        by: Dict[int, List[Record]] = defaultdict(list)
+        for r in self.records:
+            by[r.tenant].append(r)
+        out: Dict[int, Dict[str, float]] = {}
+        pp = self.cfg.pipeline
+        for t, recs in sorted(by.items()):
+            n = len(recs)
+            e2e = np.array([r.e2e_ms for r in recs])
+            ok = e2e <= pp.pipeline_slo_ms
+            hits = defaultdict(int)
+            for r in recs:
+                hits[r.hit] += 1
+            miss = hits[HitKind.MISS_FALLBACK.value] / n
+            out[t] = {
+                "n": n,
+                "p50_ms": float(np.percentile(e2e, 50)),
+                "p99_ms": float(np.percentile(e2e, 99)),
+                "success_rate": float(ok.mean()),
+                "hbm_hit": hits[HitKind.HBM_HIT.value] / n,
+                "dram_hit": hits[HitKind.DRAM_HIT.value] / n,
+                "cold_hit": hits[HitKind.COLD_HIT.value] / n,
+                "miss": miss,
+                "hit_rate": 1.0 - miss,
+            }
+        return out
+
     def _util(self, names, dur) -> float:
         if not names or dur <= 0:
             return 0.0
@@ -2085,4 +2178,41 @@ class RelayRuntime:
                 device_resident |= isinstance(pool, DevicePagePool)
         agg["h2d"] = {**h2d, "device_resident": device_resident}
         agg["instances"] = inst
+        if self.tenants > 1:
+            agg["tenants"] = self._tenant_rollup()
         return agg
+
+    def _tenant_rollup(self) -> Dict[str, Dict]:
+        """Fleet-wide per-tenant ledgers: the trigger's admission
+        counters plus every tier's tenant_stats summed over stores.
+        ``cross_tenant_evictions`` totals the partition-invariant
+        violations across ALL tiers — 0 by construction."""
+        def merge(dst: Dict[int, Dict[str, int]], src) -> None:
+            if not src:
+                return
+            for t, d in src.items():
+                row = dst.setdefault(int(t), {})
+                for k, v in d.items():
+                    row[k] = row.get(k, 0) + v
+
+        hbm: Dict[int, Dict[str, int]] = {}
+        dram: Dict[int, Dict[str, int]] = {}
+        cold: Dict[int, Dict[str, int]] = {}
+        cross = 0
+        seen: set = set()
+        for i in self.instances.values():
+            merge(hbm, getattr(i.hbm, "tenant_stats", None))
+            cross += i.hbm.stats.get("cross_tenant_evictions", 0)
+            if id(i.expander) in seen:
+                continue          # hosts share one expander tier
+            seen.add(id(i.expander))
+            merge(dram, getattr(i.expander, "tenant_stats", None))
+            cross += i.expander.stats.get("cross_tenant_evictions", 0)
+        for s in list(self.cold_stores.values()) \
+                + list(self._orphan_cold.values()):
+            merge(cold, getattr(s, "tenant_stats", None))
+            cross += s.stats.get("cross_tenant_evictions", 0)
+        admission = {int(t): dict(d) for t, d in
+                     getattr(self.trigger, "tenant_stats", {}).items()}
+        return {"admission": admission, "hbm": hbm, "dram": dram,
+                "cold": cold, "cross_tenant_evictions": cross}

@@ -45,23 +45,73 @@ class TriggerConfig:
     # test prices the cross-host psi shipment too — a psi that arrives
     # after its rank request is useless, so it must not be admitted.
     slack_budget_ms: float = 0.0
+    # multi-tenant serving: number of tenants sharing the fleet.  1
+    # (default) builds no tenant machinery at all — bit-identical to
+    # the single-tenant trigger.  With tenants > 1, admission layers a
+    # per-tenant token bucket between the instance and pool buckets so
+    # one tenant's surge cannot consume another tenant's admission
+    # budget.
+    tenants: int = 1
+    # per-tenant share of the pool admission rate, indexed by tenant id
+    # (tuple to stay hashable).  Empty -> equal shares.
+    tenant_shares: tuple = ()
+    # per-tenant SLO classes: (rank_p99_budget_ms, slack_budget_ms)
+    # per tenant id.  A tenant beyond the tuple (or an empty tuple)
+    # falls back to the global rank_p99_budget_ms / slack_budget_ms.
+    tenant_slo: tuple = ()
 
     @property
     def n_special(self) -> int:
         return max(1, int(round(self.r2 * self.n_instances)))
 
+    def tenant_rank_budget_ms(self, tenant: int) -> float:
+        if 0 <= tenant < len(self.tenant_slo):
+            return float(self.tenant_slo[tenant][0])
+        return self.rank_p99_budget_ms
+
+    def tenant_slack_ms(self, tenant: int) -> float:
+        if 0 <= tenant < len(self.tenant_slo):
+            return float(self.tenant_slo[tenant][1])
+        return self.slack_budget_ms
+
+    def tenant_share(self, tenant: int) -> float:
+        if 0 <= tenant < len(self.tenant_shares):
+            return float(self.tenant_shares[tenant])
+        return 1.0 / max(self.tenants, 1)
+
 
 class TokenBucket:
-    def __init__(self, rate: float, burst: Optional[float] = None):
+    """Leaky token bucket with a LAZY epoch.
+
+    The bucket's clock starts at the first ``try_take`` — not at
+    construction.  The old ``t_last = 0.0`` initialisation credited the
+    whole wall-clock epoch (``now - 0``) as idle refill on the first
+    take: harmless while the initial allowance equals ``burst`` (the
+    cap masks it), but any bucket configured to start below ``burst``
+    would be silently topped up to a full free burst the moment it was
+    first consulted with a real timestamp.  Refill is also clamped to
+    non-negative elapsed time so an out-of-order timestamp can never
+    drain (or mint) tokens.
+    """
+
+    def __init__(self, rate: float, burst: Optional[float] = None,
+                 tokens: Optional[float] = None):
         self.rate = float(rate)
         self.burst = burst if burst is not None else max(rate, 1.0)
-        self.tokens = self.burst
-        self.t_last = 0.0
+        # initial allowance: a full bucket by default (deliberate — the
+        # first T_life window may admit a burst), never above burst
+        self.tokens = (self.burst if tokens is None
+                       else min(float(tokens), self.burst))
+        self.t_last: Optional[float] = None   # epoch set on first take
 
     def try_take(self, now: float) -> bool:
-        self.tokens = min(self.burst,
-                          self.tokens + (now - self.t_last) * self.rate)
-        self.t_last = now
+        if self.t_last is not None:
+            elapsed = max(0.0, now - self.t_last)
+            self.tokens = min(self.burst,
+                              self.tokens + elapsed * self.rate)
+            self.t_last = max(self.t_last, now)
+        else:
+            self.t_last = now
         if self.tokens >= 1.0:
             self.tokens -= 1.0
             return True
@@ -95,6 +145,20 @@ class SequenceAwareTrigger:
         # fills this for the prefill tier
         self.instance_rates: Dict[str, float] = {}
         self._pool_bucket = TokenBucket(self.q_max)
+        # multi-tenant admission: one bucket per tenant, layered
+        # between the instance and pool buckets (empty dict — and zero
+        # overhead on the admit path — when tenants == 1)
+        self._tenant_buckets: Dict[int, TokenBucket] = {}
+        self.tenant_stats: Dict[int, Dict[str, int]] = {}
+        if cfg.tenants > 1:
+            for t in range(cfg.tenants):
+                self._tenant_buckets[t] = TokenBucket(
+                    self.q_max * cfg.tenant_share(t))
+                self.tenant_stats[t] = {
+                    "assessed": 0, "at_risk": 0, "admitted": 0,
+                    "rate_limited": 0, "rate_limited_tenant": 0,
+                    "rate_limited_instance": 0, "rate_limited_pool": 0,
+                    "slack_rejected": 0}
         # disaggregated prefill: the runtime installs an estimate of the
         # cross-host psi shipping delay (ms as a function of UserMeta);
         # the slack test then admits only when pre-infer AND the
@@ -116,20 +180,32 @@ class SequenceAwareTrigger:
         self.segments = False
         self.stats = {"assessed": 0, "at_risk": 0, "admitted": 0,
                       "rate_limited": 0, "rate_limited_pool": 0,
-                      "rate_limited_instance": 0, "slack_rejected": 0,
+                      "rate_limited_instance": 0,
+                      "rate_limited_tenant": 0, "slack_rejected": 0,
                       "cold_scored": 0, "reusable_tokens_admitted": 0}
+
+    def _tbump(self, tenant: int, key: str) -> None:
+        ts = self.tenant_stats.get(tenant)
+        if ts is not None:
+            ts[key] += 1
 
     # --- side-path risk test (metadata only) -------------------------------
     def assess(self, meta: UserMeta) -> Decision:
         self.stats["assessed"] += 1
+        tenant = getattr(meta, "tenant", 0)
+        self._tbump(tenant, "assessed")
         dim_scale = (meta.dim / self.cost.cfg.d_model) ** 2 \
             if meta.dim else 1.0
         est = self.cost.full_rank_ms(
             meta.prefix_len, meta.incr_len, meta.n_items,
             dim_scale=dim_scale) * self.cfg.concurrency_factor
-        at_risk = est > self.cfg.rank_p99_budget_ms
+        # per-tenant SLO class: each tenant is at-risk against ITS OWN
+        # ranking budget (identical to the global budget when no
+        # tenant_slo classes are configured)
+        at_risk = est > self.cfg.tenant_rank_budget_ms(tenant)
         if at_risk:
             self.stats["at_risk"] += 1
+            self._tbump(tenant, "at_risk")
         return Decision(False, at_risk, est,
                         "at-risk" if at_risk else "safe")
 
@@ -147,10 +223,12 @@ class SequenceAwareTrigger:
     # --- admission ----------------------------------------------------------
     def admit(self, meta: UserMeta, instance: str, now: float) -> Decision:
         d = self.assess(meta)
+        tenant = getattr(meta, "tenant", 0)
         if not d.at_risk:
             return Decision(False, False, d.est_full_ms, "safe")
         reuse = self.reusable_tokens(meta)
-        if self.cfg.slack_budget_ms:
+        slack_ms = self.cfg.tenant_slack_ms(tenant)
+        if slack_ms:
             cold_est = (self.cold_estimator(meta)
                         if self.cold_estimator is not None else None)
             if cold_est is not None:
@@ -165,8 +243,9 @@ class SequenceAwareTrigger:
                     # psi must land at the OWNER before ranking arrives:
                     # the shipping hop is on the relay's deadline path
                     pre_est += self.ship_estimator(meta)
-            if pre_est > self.cfg.slack_budget_ms:
+            if pre_est > slack_ms:
                 self.stats["slack_rejected"] += 1
+                self._tbump(tenant, "slack_rejected")
                 return Decision(False, True, d.est_full_ms,
                                 "insufficient-slack")
         bucket = self._instance_buckets.get(instance)
@@ -176,20 +255,40 @@ class SequenceAwareTrigger:
             self._instance_buckets[instance] = bucket
         # instance bucket first: an instance-rate rejection must not
         # burn a pool token (pool-wide under-admission under
-        # per-instance contention); the pool take refunds the instance
-        # token on ITS rejection for the same reason
+        # per-instance contention); each later take refunds the earlier
+        # tokens on ITS rejection for the same reason
         if not bucket.try_take(now):
             self.stats["rate_limited"] += 1
             self.stats["rate_limited_instance"] += 1
+            self._tbump(tenant, "rate_limited")
+            self._tbump(tenant, "rate_limited_instance")
             return Decision(False, True, d.est_full_ms,
                             "instance-rate-limited")
-        if not self._pool_bucket.try_take(now):
+        # tenant bucket second (multi-tenant only): a tenant that has
+        # exhausted its share is rejected HERE, before it can burn a
+        # pool token another tenant is entitled to — the isolation
+        # guarantee admission contributes
+        tbucket = self._tenant_buckets.get(tenant)
+        if tbucket is not None and not tbucket.try_take(now):
             bucket.tokens = min(bucket.burst, bucket.tokens + 1.0)
             self.stats["rate_limited"] += 1
+            self.stats["rate_limited_tenant"] += 1
+            self._tbump(tenant, "rate_limited")
+            self._tbump(tenant, "rate_limited_tenant")
+            return Decision(False, True, d.est_full_ms,
+                            "tenant-rate-limited")
+        if not self._pool_bucket.try_take(now):
+            bucket.tokens = min(bucket.burst, bucket.tokens + 1.0)
+            if tbucket is not None:
+                tbucket.tokens = min(tbucket.burst, tbucket.tokens + 1.0)
+            self.stats["rate_limited"] += 1
             self.stats["rate_limited_pool"] += 1
+            self._tbump(tenant, "rate_limited")
+            self._tbump(tenant, "rate_limited_pool")
             return Decision(False, True, d.est_full_ms, "pool-rate-limited")
         self.stats["admitted"] += 1
         self.stats["reusable_tokens_admitted"] += reuse
+        self._tbump(tenant, "admitted")
         return Decision(True, True, d.est_full_ms, "admitted")
 
     # --- derived quantities (paper §3.2 sanity check) ------------------------

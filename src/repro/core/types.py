@@ -53,6 +53,10 @@ class UserMeta:
     # sum(seg_lens) <= incr_len; the remainder is fresh critical-path
     # tokens.
     seg_lens: Tuple[int, ...] = ()
+    # multi-tenant serving: the scenario/surface this request belongs
+    # to.  Tenant 0 is the default — single-tenant deployments never
+    # set it and every tenant-aware code path is inert for them.
+    tenant: int = 0
 
 
 def reuse_spans(meta: "UserMeta"

@@ -292,15 +292,17 @@ def capacity_stream(L: int, qps: float, duration_s: float, *,
                     arrival: str = "poisson", seed: int = 0,
                     dim: int = 256, n_items: int = 512,
                     incr_len: int = 64, arrival_kw: Optional[Dict] = None,
-                    segments: bool = False
+                    segments: bool = False, tenant: int = 0
                     ) -> Iterator[Tuple[float, UserMeta]]:
     """The capacity-harness request stream: WHO (Zipf(skew) popularity
     over ``population`` users) × WHEN (a named arrival process at mean
     ``qps``), at a fixed request profile (prefix ``L``, ``n_items``
     candidates).  Yields ``(t, UserMeta)`` and feeds ``ClusterSim.run``
     unchanged.  ``segments=True`` attaches per-user candidate-
-    independent ``seg_lens`` from a separate hash RNG (the arrival and
-    popularity draws are identical either way)."""
+    independent ``seg_lens`` from a separate hash RNG; ``tenant``
+    stamps every request with a tenant id — neither consumes any
+    stream RNG draw, so the arrival and popularity sequences are
+    identical either way."""
     rng = np.random.default_rng(seed)
     pop = ZipfPopularity(population, skew)
     for t in arrival_times(arrival, qps, duration_s, rng=rng,
@@ -308,18 +310,60 @@ def capacity_stream(L: int, qps: float, duration_s: float, *,
         uid = pop.sample_one(rng)
         segs = segment_lens(uid, incr_len) if segments else ()
         yield t, UserMeta(user_id=uid, prefix_len=L, incr_len=incr_len,
-                          dim=dim, n_items=n_items, seg_lens=segs)
+                          dim=dim, n_items=n_items, seg_lens=segs,
+                          tenant=int(tenant))
+
+
+#: user-id stride between tenant workloads in ``multi_tenant_stream``:
+#: far above any per-tenant ``population``, so tenants can never share
+#: a cache key (the isolation guarantee starts at the workload layer)
+TENANT_UID_STRIDE = 100_000_000
+
+
+def multi_tenant_stream(mixes, duration_s: float, *, seed: int = 0
+                        ) -> Iterator[Tuple[float, UserMeta]]:
+    """Per-tenant traffic mixes merged into ONE timed request stream.
+
+    ``mixes[i]`` is a dict of ``capacity_stream`` keyword args for
+    tenant ``i`` — each tenant gets its own offered load, skew, prefix
+    length and arrival process (e.g. tenant A steady Poisson, tenant B
+    an MMPP burst for the isolation bench).  Isolation discipline:
+
+      * every tenant draws from its OWN seeded RNG (``seed + 1000·i``
+        unless the mix pins ``seed``), so one tenant's draw order can
+        never perturb another's arrivals or popularity;
+      * user ids live in DISJOINT per-tenant spaces (offset by
+        ``i · TENANT_UID_STRIDE``) — tenants never share cache keys.
+
+    Yields globally time-ordered ``(t, UserMeta)`` with
+    ``UserMeta.tenant`` set, ready for ``RelayRuntime.run``."""
+    import heapq
+
+    def tagged(i: int, kw: Dict) -> Iterator[Tuple[float, UserMeta]]:
+        kw = dict(kw)
+        kw.setdefault("seed", seed + 1000 * i)
+        kw["tenant"] = i
+        for t, meta in capacity_stream(duration_s=duration_s, **kw):
+            yield t, dataclasses.replace(
+                meta, user_id=meta.user_id + i * TENANT_UID_STRIDE)
+
+    return heapq.merge(*(tagged(i, kw) for i, kw in enumerate(mixes)),
+                       key=lambda tm: tm[0])
 
 
 def request_stream(store: UserBehaviorStore, qps: float, duration_s: float,
                    *, seed: int = 0, refresh_prob: float = 0.0,
                    refresh_horizon: int = 256, long_only: bool = False,
-                   min_len: int = 0, segments: bool = False
+                   min_len: int = 0, segments: bool = False,
+                   tenants: int = 1
                    ) -> Iterator[Tuple[float, UserMeta]]:
     """Poisson arrivals; with probability ``refresh_prob`` a request is a
     rapid-refresh repeat of a recent user (drives DRAM-tier reuse).
     ``segments=True`` attaches hash-derived per-user ``seg_lens``
-    without consuming any stream RNG draws."""
+    without consuming any stream RNG draws.  ``tenants > 1`` assigns
+    each request a deterministic tenant (``user_id % tenants`` — a pure
+    function of the id, no RNG draw), so the same trace replays
+    identically with tenancy on or off."""
     rng = np.random.default_rng(seed)
     t = 0.0
     recent: list = []
@@ -336,4 +380,6 @@ def request_stream(store: UserBehaviorStore, qps: float, duration_s: float,
         if segments:
             m = dataclasses.replace(
                 m, seg_lens=segment_lens(uid, m.incr_len))
+        if tenants > 1:
+            m = dataclasses.replace(m, tenant=uid % int(tenants))
         yield t, m

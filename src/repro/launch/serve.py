@@ -75,6 +75,12 @@ def main(argv=None):
                          "cold->DRAM promotion")
     ap.add_argument("--dram-budget", type=float, default=500e9,
                     help="per-host DRAM expander budget in bytes")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help=">1 serves N tenants off the one fleet: every "
+                         "memory tier is partitioned into per-tenant "
+                         "byte/page quotas (a tenant can only evict its "
+                         "own entries), admission gets per-tenant token "
+                         "buckets, and stats report per-tenant ledgers")
     args = ap.parse_args(argv)
     if (args.segments or args.device_pool) and not args.page_tokens:
         args.page_tokens = 64  # segment spans / device pool need pages
@@ -86,7 +92,7 @@ def main(argv=None):
         from repro.serving.simulator import run_sim
         store = UserBehaviorStore()
         arr = request_stream(store, args.qps, args.requests / args.qps,
-                             segments=args.segments)
+                             segments=args.segments, tenants=args.tenants)
         s = run_sim(relay_config(
             trigger=TriggerConfig(n_instances=10),
             cluster=ClusterConfig(hosts=args.hosts,
@@ -95,7 +101,8 @@ def main(argv=None):
                                   segments=args.segments,
                                   device_pool=args.device_pool,
                                   dram_budget_bytes=args.dram_budget,
-                                  cold_budget_bytes=args.cold_budget)),
+                                  cold_budget_bytes=args.cold_budget,
+                                  tenants=args.tenants)),
             cost, arr)
         print(json.dumps(s, indent=1))
         return s
@@ -123,7 +130,8 @@ def main(argv=None):
                               prefill_hosts=args.prefill_hosts,
                               hbm_cache_bytes=hbm_bytes,
                               dram_budget_bytes=args.dram_budget,
-                              cold_budget_bytes=args.cold_budget))
+                              cold_budget_bytes=args.cold_budget,
+                              tenants=args.tenants))
 
     def report(results):
         hits, lat = {}, []
@@ -135,6 +143,22 @@ def main(argv=None):
         print(f"rank compute ms: p50={np.percentile(lat, 50):.1f} "
               f"p99={np.percentile(lat, 99):.1f}")
         return hits
+
+    def report_tenants(svc):
+        if args.tenants <= 1:
+            return
+        ten = svc.stats()["tenants"]
+        print(json.dumps({"tenants": ten}, indent=1))
+        # isolation invariants the live smoke leans on: every tenant's
+        # admission ledger saw traffic, and no tenant ever evicted
+        # another tenant's entry out of any tier
+        assert ten["cross_tenant_evictions"] == 0, (
+            f"tenant partition violated: "
+            f"{ten['cross_tenant_evictions']} cross-tenant evictions")
+        assert all(ten["admission"].get(t, {}).get("assessed", 0) > 0
+                   for t in range(args.tenants)), (
+            "per-tenant admission ledger not populated: "
+            f"{ten['admission']}")
 
     def report_h2d(svc):
         if not args.page_tokens:
@@ -163,7 +187,7 @@ def main(argv=None):
         arrivals = []
         for i, (t, meta) in enumerate(request_stream(
                 store, args.qps, 1e9, refresh_prob=0.2,
-                segments=args.segments)):
+                segments=args.segments, tenants=args.tenants)):
             if i >= args.requests:
                 break
             arrivals.append((t, meta))
@@ -192,6 +216,7 @@ def main(argv=None):
         batch = {n: i.batcher.stats for n, i in svc.instances.items()
                  if i.batcher is not None and i.batcher.stats["requests"]}
         print(json.dumps({"batch": batch}, indent=1))
+        report_tenants(svc)
         report_h2d(svc)
         return hits
     svc = RelayGRService(
@@ -202,7 +227,7 @@ def main(argv=None):
     results = []
     for i, (t, meta) in enumerate(request_stream(
             store, args.qps, 1e9, refresh_prob=0.2,
-            segments=args.segments)):
+            segments=args.segments, tenants=args.tenants)):
         if i >= args.requests:
             break
         results.append(svc.submit(meta, now=t))
@@ -212,6 +237,7 @@ def main(argv=None):
         print(json.dumps({"shipping": svc.stats()["shipping"]}, indent=1))
     if args.cold_budget:
         print(json.dumps({"cold": svc.stats()["cold"]}, indent=1))
+    report_tenants(svc)
     report_h2d(svc)
     return hits
 

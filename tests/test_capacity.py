@@ -38,7 +38,9 @@ from benchmarks.capacity import (HARD_CAP_QPS, MatrixSpec, WorkloadSpec,
                                  run_point)
 from benchmarks.check_regression import (ProvenanceMismatch,
                                          check_provenance,
-                                         compare_capacity)
+                                         compare_capacity,
+                                         compare_isolation)
+from benchmarks.check_regression import main as check_regression_main
 
 
 # ---------------------------------------------------------------------------
@@ -350,3 +352,71 @@ def test_compare_capacity_mmpp_cells_exempt_from_shape_gates():
     lift = [f for f in poisson if f.startswith("knee_qps >=")]
     assert lift and poisson[lift[0]]
     assert not any(f.startswith("knee_qps >=") for f in mmpp)
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant isolation gates + schema-drift refusal
+# ---------------------------------------------------------------------------
+
+
+def test_compare_isolation_gates_burst_shift():
+    """The burst-isolation gate: tenant B's MMPP burst moving tenant
+    A's hit rate or knee past tolerance fails; a missing record is a
+    FAIL (the gate demands evidence), never a silent pass."""
+    iso = {"solo": {"hit_rate": 0.93, "knee_qps": 560.0},
+           "burst": {"hit_rate": 0.935, "knee_qps": 560.0}}
+    rows = compare_isolation({"isolation": iso}, {},
+                             hit_tol=0.02, knee_tol=0.10)
+    assert rows and all(ok for *_, ok in rows)
+    # B's burst stealing A's cache fails the hit gate
+    moved = {"isolation": dict(iso, burst={"hit_rate": 0.80,
+                                           "knee_qps": 560.0})}
+    rows = compare_isolation(moved, {}, hit_tol=0.02, knee_tol=0.10)
+    assert any(f == "tenant A hit_rate under B burst" and not ok
+               for _, f, *_, ok in rows)
+    # A's knee collapsing under the burst fails the knee gate
+    knee = {"isolation": dict(iso, burst={"hit_rate": 0.93,
+                                          "knee_qps": 300.0})}
+    rows = compare_isolation(knee, {}, hit_tol=0.02, knee_tol=0.10)
+    assert any(f == "tenant A knee_qps under B burst" and not ok
+               for _, f, *_, ok in rows)
+    # both records gated when both sides carry one
+    rows = compare_isolation({"isolation": iso}, {"isolation": iso},
+                             hit_tol=0.02, knee_tol=0.10)
+    assert {r[0] for r in rows} == {"isolation[committed]",
+                                    "isolation[candidate]"}
+    # no record anywhere: a FAIL row, not a pass
+    rows = compare_isolation({}, {}, hit_tol=0.02, knee_tol=0.10)
+    assert rows == [("isolation", "<record>", "present", "MISSING",
+                     "committed isolation record required", False)]
+
+
+def test_capacity_candidate_without_quick_flag_refused(tmp_path, capsys):
+    """Schema-drift refusal: a capacity candidate whose meta lacks the
+    ``quick`` flag entirely cannot be told apart from a smoke run, so
+    the gate refuses it (exit 2 with a message naming the flag) instead
+    of diffing under arbitrary tolerances."""
+    cell = {"knee_qps": 100.0,
+            "curve": [{"offered_qps": 50.0, "goodput_qps": 50.0}],
+            "workload": {"skew": 1.1, "arrival": "poisson"}}
+    iso = {"solo": {"hit_rate": 0.9, "knee_qps": 100.0},
+           "burst": {"hit_rate": 0.9, "knee_qps": 100.0}}
+    meta = {"seed": 0, "population": 1, "slo_ms": 300.0}
+    ref = tmp_path / "ref.json"
+    ref.write_text(json.dumps(
+        {"meta": dict(meta, quick=False), "cells": {"c": cell},
+         "isolation": iso}))
+    cand = tmp_path / "cand.json"
+    cand.write_text(json.dumps({"meta": meta, "cells": {"c": cell}}))
+    rc = check_regression_main(["--capacity-candidate", str(cand),
+                                "--capacity-reference", str(ref)])
+    assert rc == 2
+    assert "meta.quick" in capsys.readouterr().err
+    # the SAME candidate with the flag present clears the refusal and
+    # reaches the tolerance gates (identical cells: all pass)
+    cand.write_text(json.dumps(
+        {"meta": dict(meta, quick=True), "cells": {"c": cell},
+         "isolation": iso}))
+    rc = check_regression_main(["--capacity-candidate", str(cand),
+                                "--capacity-reference", str(ref)])
+    assert rc == 0

@@ -292,6 +292,68 @@ def test_rank_racing_own_promotion_served_as_miss():
     _store_conserved(store)
 
 
+def test_demote_family_conserved_mid_flight():
+    """Regression (demote/evict race): the demote conservation family
+    must hold at EVERY event boundary —
+
+        demotions == demote_landed + demote_dropped + demote_inflight
+
+    The old ledger had no inflight term, so any ``stats()`` probe
+    inside the write window (the copy has left DRAM but the cold write
+    has not completed) transiently violated the family."""
+    rt = _race_runtime()
+    host = next(iter(rt.cold_stores))
+    entry = CacheEntry(111, "psi", COST.kv_bytes(2048), 0.0,
+                       prefix_len=2048)
+    assert rt._demote(0.0, host, entry)
+
+    def family(c):
+        return c["demotions"] == (c["demote_landed"]
+                                  + c["demote_dropped"]
+                                  + c["demote_inflight"])
+
+    # mid-flight: the write is scheduled but not landed
+    assert rt.cold["demote_inflight"] == 1
+    assert rt.cold["demote_landed"] == 0
+    assert family(rt.cold)
+    assert family(rt.stats()["cold"])
+    rt.drain()
+    # drained: the inflight term resolves to a landing and the
+    # pre-inflight end-state invariant still holds exactly
+    c = rt.cold
+    assert c["demote_inflight"] == 0
+    assert c["demotions"] == 1 == c["demote_landed"]
+    assert c["demote_dropped"] == 0 and family(c)
+    store = rt.cold_stores[host]
+    assert store.live_count == 1
+    _store_conserved(store)
+
+
+def test_demote_family_conserved_under_racing_demotes():
+    """Deterministic interleaving of the race itself: two demotions of
+    the SAME user are in flight together (the second supersedes the
+    first — its landing replaces the stale copy, counted as a cold
+    eviction).  The family holds at each boundary and after the drain
+    the store's own conservation closes over the replacement."""
+    rt = _race_runtime()
+    host = next(iter(rt.cold_stores))
+    for ts in (0.0, 0.0005):
+        e = CacheEntry(7, "psi", COST.kv_bytes(1024), ts, prefix_len=1024)
+        assert rt._demote(ts, host, e)
+        c = rt.cold
+        assert c["demotions"] == (c["demote_landed"] + c["demote_dropped"]
+                                  + c["demote_inflight"]), c
+    assert rt.cold["demote_inflight"] == 2
+    rt.drain()
+    c = rt.cold
+    assert c["demote_inflight"] == 0
+    assert c["demotions"] == 2 == c["demote_landed"] + c["demote_dropped"]
+    store = rt.cold_stores[host]
+    assert store.stats["inserts"] == 2 and store.stats["evictions"] == 1
+    assert store.live_count == 1
+    _store_conserved(store)
+
+
 def test_promotion_wins_when_rank_arrives_on_time():
     """Control for the race test: with the full 62 ms pre-signal ->
     rank window the promotion lands first and the rank classifies as a

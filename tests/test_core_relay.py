@@ -320,6 +320,97 @@ def test_pool_rejection_refunds_instance_token():
         "pool rejection must refund the instance token"
 
 
+def test_token_bucket_idle_never_accumulates_past_burst():
+    """Regression: tokens must not bank past ``burst`` over a long
+    idle gap — a year of silence buys one burst, not rate x elapsed."""
+    from repro.core.trigger import TokenBucket
+    b = TokenBucket(rate=10.0, burst=2.0)
+    assert b.try_take(0.0) and b.try_take(0.0)
+    assert not b.try_take(0.0)            # burst spent
+    year = 3.15e7
+    assert b.try_take(year)               # refilled...
+    assert b.tokens == pytest.approx(1.0), \
+        "idle refill overshot the burst cap"
+    assert b.try_take(year)
+    assert not b.try_take(year)           # ...to exactly burst, no more
+
+
+def test_token_bucket_first_take_grants_no_epoch_skew_burst():
+    """Regression: the bucket's clock starts at the FIRST take — the
+    old ``t_last = 0.0`` init credited the whole wall-clock epoch as
+    idle refill, silently topping any below-burst initial allowance up
+    to a full free burst on first consult."""
+    from repro.core.trigger import TokenBucket
+    b = TokenBucket(rate=100.0, burst=50.0, tokens=1.0)
+    assert b.try_take(1e9)                # spends the single token
+    assert not b.try_take(1e9), \
+        "clock-epoch skew minted a free burst on the first take"
+    # refill accrues only from the first-take epoch onward
+    assert b.try_take(1e9 + 0.0100001)    # 10ms x 100/s = 1 token
+    # and the initial allowance itself is capped at burst
+    assert TokenBucket(rate=1.0, burst=2.0, tokens=99.0).tokens \
+        == pytest.approx(2.0)
+
+
+def test_token_bucket_out_of_order_timestamp_is_inert():
+    """Clamped elapsed time: a timestamp from the past neither mints
+    nor drains tokens, and never rewinds the epoch."""
+    from repro.core.trigger import TokenBucket
+    b = TokenBucket(rate=1.0, burst=1.0)
+    assert b.try_take(100.0)
+    assert not b.try_take(50.0)           # back in time: no refill
+    assert b.tokens == pytest.approx(0.0)
+    assert b.try_take(101.0)              # 1s after the TRUE epoch
+
+
+def test_tenant_rate_limit_preserves_cotenant_share():
+    """Multi-tenant admission: a surging tenant exhausts ITS OWN
+    bucket (an equal share of the pool rate) and is rejected with
+    ``tenant-rate-limited`` — the co-tenant's share stays intact and
+    no pool token is burned on the rejection."""
+    cfg = TriggerConfig(q_m=2.0, m_slots=1, r2=1.0, n_instances=4,
+                        tenants=2)
+    trig = SequenceAwareTrigger(cfg, COST)
+    assert trig.q_max == pytest.approx(8.0)
+    # tenant 0 hammers the pool round-robin: its share is q_max/2 = 4
+    got = [trig.admit(UserMeta(user_id=i, tenant=0, **AT_RISK),
+                      f"i{i % 4}", 0.0).admitted for i in range(8)]
+    assert sum(got) == 4
+    d = trig.admit(UserMeta(user_id=99, tenant=0, **AT_RISK), "i3", 0.0)
+    assert not d.admitted and d.reason == "tenant-rate-limited"
+    assert trig.tenant_stats[0]["rate_limited_tenant"] == 5
+    assert trig.stats["rate_limited_tenant"] == 5
+    # tenant 1's share is untouched by tenant 0's surge
+    d = trig.admit(UserMeta(user_id=100, tenant=1, **AT_RISK), "i3", 0.0)
+    assert d.admitted
+    assert trig.tenant_stats[1]["admitted"] == 1
+    assert trig.tenant_stats[1]["rate_limited"] == 0
+
+
+def test_tenant_slo_classes_drive_risk():
+    """Per-tenant SLO classes: each tenant is at-risk against ITS OWN
+    rank budget, so the same prefix can be at-risk for a strict tenant
+    and safe for a lenient one."""
+    cfg = TriggerConfig(tenants=2,
+                        tenant_slo=((0.001, 1e9), (1e9, 1e9)))
+    trig = SequenceAwareTrigger(cfg, COST)
+    assert trig.assess(UserMeta(user_id=1, tenant=0,
+                                prefix_len=2048)).at_risk
+    assert not trig.assess(UserMeta(user_id=2, tenant=1,
+                                    prefix_len=2048)).at_risk
+    assert trig.tenant_stats[0]["at_risk"] == 1
+    assert trig.tenant_stats[1]["at_risk"] == 0
+
+
+def test_single_tenant_builds_no_tenant_machinery():
+    """Bit-identity precondition: tenants=1 (default) allocates no
+    tenant buckets and no per-tenant ledgers."""
+    trig = SequenceAwareTrigger(TriggerConfig(), COST)
+    assert trig._tenant_buckets == {} and trig.tenant_stats == {}
+    d = trig.admit(UserMeta(user_id=1, **AT_RISK), "i", 0.0)
+    assert d.admitted and trig.stats["rate_limited_tenant"] == 0
+
+
 def test_oversized_spill_rejected_up_front():
     """Deterministic core of the property below (runs even where
     hypothesis is unavailable)."""

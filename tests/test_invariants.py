@@ -10,6 +10,7 @@ hole: hypothesis samples random cluster configs across the full matrix
     hosts x page_tokens x batched x churn events x prefill_hosts
     x segments (beyond-prefix span reuse over the paged window)
     x cold tier (host-local SSD / remote psi store under DRAM)
+    x tenants (per-tenant partitions across every memory tier)
 
 plus timed arrival streams (repeat visitors for reuse, uniques for
 window pressure, mixed prefix lengths), runs the virtual-clock sim and
@@ -26,7 +27,10 @@ asserts the GLOBAL invariants on every run:
   * single ownership — no user psi resident on two instances' HBM, no
     DRAM copy in two expander tiers;
   * shipping conservation — ``shipped == landed + dropped`` with
-    nothing left in flight after the drain.
+    nothing left in flight after the drain;
+  * tenant isolation (tenants > 1) — zero cross-tenant evictions,
+    per-tenant byte accounting that matches the live set and never
+    exceeds the quota, and zero per-tenant premature evictions.
 
 Hypothesis-driven via the tests/_hyp.py shim (skips cleanly when
 hypothesis is absent).
@@ -74,16 +78,21 @@ CONFIGS = st.fixed_dictionaries({
     # beyond-prefix segment reuse rides the paged window only; the flag
     # is a no-op when page_tokens samples 0 (see _build)
     "segments": st.booleans(),
+    # multi-tenant serving: tenants > 1 partitions every memory tier
+    # and must uphold the isolation invariants under every combination
+    "tenants": st.sampled_from([1, 2, 3]),
 })
 
 
-def _stream(n: int, qps: float, seed: int):
+def _stream(n: int, qps: float, seed: int, tenants: int = 1):
     """Timed arrivals: ~half repeat visitors (reuse, DRAM cycling,
     shipping dedup), ~half uniques (window pressure, cold shipments).
     A user's prefix length is a function of the user — identical
     visits, like a real history — otherwise the same key legitimately
     caches through BOTH pools (short visit -> normal instance, long
-    visit -> special) and single-ownership would be vacuously false."""
+    visit -> special) and single-ownership would be vacuously false.
+    The tenant stamp is a pure function of the user id (no RNG draws),
+    so the tenants axis never perturbs the sampled stream."""
     rng = np.random.default_rng(seed)
     pool = [1000 + i for i in range(6)]
     t, out = 0.0, []
@@ -94,6 +103,7 @@ def _stream(n: int, qps: float, seed: int):
         out.append((t, UserMeta(
             user_id=uid,
             prefix_len=PREFIX_LENS[uid % len(PREFIX_LENS)],
+            tenant=uid % tenants,
             # inert annotation unless the config samples segments=True
             seg_lens=segment_lens(uid, 64))))
     return out
@@ -120,8 +130,35 @@ def _build(p) -> ClusterSim:
             cold_budget_bytes=p.get("cold", 0.0),
             hosts=p["hosts"], prefill_hosts=p["prefill_hosts"],
             page_tokens=p["page_tokens"], max_batch=p["max_batch"],
-            segments=segments))
+            segments=segments, tenants=p.get("tenants", 1)))
     return ClusterSim(cfg, COST)
+
+
+def _assert_tenant_partition(label: str, store) -> None:
+    """Multi-tenant isolation invariants for any tiered store (HBM /
+    DRAM expander / cold): nobody ever evicted across the partition,
+    per-tenant byte accounting matches the live set exactly, no tenant
+    exceeds its quota, and the per-tenant bytes sum to the store total.
+    All inert (vacuously true) on untenanted stores."""
+    assert store.stats.get("cross_tenant_evictions", 0) == 0, \
+        f"{label}: cross-tenant eviction (isolation violated)"
+    if getattr(store, "tenant_quota", None) is None:
+        return
+    live = {}
+    for e in store.entries.values():
+        live[e.tenant] = live.get(e.tenant, 0) + e.nbytes
+    for t, quota in store.tenant_quota.items():
+        used = store.tenant_used.get(t, 0)
+        assert used == live.get(t, 0), \
+            f"{label}: tenant {t} accounting {used} != live {live.get(t, 0)}"
+        assert used <= quota, \
+            f"{label}: tenant {t} over quota ({used} > {quota})"
+    assert sum(store.tenant_used.values()) == store.used_bytes, \
+        f"{label}: tenant partition does not sum to used_bytes"
+    if store.tenant_stats is not None:
+        for t, ts in store.tenant_stats.items():
+            assert ts.get("premature_evictions", 0) == 0, \
+                f"{label}: tenant {t} admitted psi died unconsumed: {ts}"
 
 
 def _assert_invariants(sim: ClusterSim, n_arrivals: int) -> None:
@@ -162,6 +199,7 @@ def _assert_invariants(sim: ClusterSim, n_arrivals: int) -> None:
             assert uid not in owners_hbm, \
                 f"user {uid} on {owners_hbm[uid]} AND {name}"
             owners_hbm[uid] = name
+        _assert_tenant_partition(f"{name}/hbm", inst.hbm)
         expanders[id(inst.expander)] = inst.expander
     for exp in expanders.values():
         # DRAM tier conservation through every turnstile: LRU drops,
@@ -175,6 +213,7 @@ def _assert_invariants(sim: ClusterSim, n_arrivals: int) -> None:
             assert uid not in owners_dram, \
                 f"user {uid} in two DRAM tiers"
             owners_dram[uid] = id(exp)
+        _assert_tenant_partition("dram", exp)
 
     # cold-tier conservation: every insert is live, evicted, handed
     # off, or promoted back up; every demotion landed or was dropped;
@@ -182,7 +221,9 @@ def _assert_invariants(sim: ClusterSim, n_arrivals: int) -> None:
     # copy lives in two stores
     cold = rt.stats()["cold"]
     assert cold["demotions"] == cold["demote_landed"] \
-        + cold["demote_dropped"], cold
+        + cold["demote_dropped"] + cold["demote_inflight"], cold
+    assert cold["demote_inflight"] == 0, \
+        f"demotion still on a cold link after drain: {cold}"
     assert cold["inflight"] == 0, cold
     all_stores = dict(rt.cold_stores)
     all_stores.update(rt._orphan_cold)
@@ -195,6 +236,7 @@ def _assert_invariants(sim: ClusterSim, n_arrivals: int) -> None:
             assert uid not in owners_cold, \
                 f"user {uid} cold-resident on {owners_cold[uid]} AND {host}"
             owners_cold[uid] = host
+        _assert_tenant_partition(f"{host}/cold", store)
     for link in rt.cold_links.values():
         assert link["wait_ms"] >= 0.0 and link["bytes"] >= 0
 
@@ -210,6 +252,12 @@ def _assert_invariants(sim: ClusterSim, n_arrivals: int) -> None:
     # migrations never silently lose entries under the handoff policy
     assert rt.migration["dropped"] >= 0
 
+    # multi-tenant rollup: the fleet-wide partition-violation total is
+    # zero (the per-store checks above imply it; the rollup must agree)
+    if rt.tenants > 1:
+        roll = rt.stats()["tenants"]
+        assert roll["cross_tenant_evictions"] == 0, roll
+
 
 @given(CONFIGS)
 @settings(max_examples=12, deadline=None)
@@ -217,7 +265,8 @@ def test_global_invariants_across_config_matrix(p):
     """Any sampled (hosts, prefill_hosts, page_tokens, batched, DRAM,
     churn, stream) combination upholds every global invariant."""
     sim = _build(p)
-    arrivals = _stream(p["n"], p["qps"], p["seed"])
+    arrivals = _stream(p["n"], p["qps"], p["seed"],
+                       tenants=p.get("tenants", 1))
     t_mid = arrivals[len(arrivals) // 2][0]
     churn = p["churn"]
     if churn == "leave" and p["hosts"] < 2:
@@ -318,3 +367,49 @@ def test_cold_tier_exercised_not_vacuous():
     assert cold["demote_landed"] > 0, cold
     assert cold["promotions"] > 0, cold
     assert sim.runtime.summary()["cold_hit"] > 0.0
+
+
+def test_single_tenant_builds_no_tenant_machinery():
+    """Guard the bit-identity contract: tenants=1 (the default) builds
+    untenanted stores everywhere — no quota maps, no per-tenant
+    ledgers, no ``tenants`` block in the stats rollup."""
+    sim = _build({"hosts": 2, "prefill_hosts": 0, "page_tokens": 64,
+                  "max_batch": 0, "dram": 500e9, "cold": 400e9,
+                  "dram_small": True})
+    sim.run(iter(_stream(30, 60.0, 3)))
+    rt = sim.runtime
+    assert rt.tenants == 1
+    for inst in rt.instances.values():
+        assert inst.hbm.tenant_quota is None
+        assert inst.hbm.tenant_stats is None
+        assert inst.expander.tenant_quota is None
+    for store in rt.cold_stores.values():
+        assert store.tenant_quota is None
+    assert "tenants" not in rt.stats()
+
+
+def test_tenant_partition_exercised_not_vacuous():
+    """The tenants axis must actually create pressure INSIDE a
+    tenant's share: a small window split two ways forces same-tenant
+    evictions in both partitions while every isolation invariant holds
+    and the per-tenant ledgers populate on both sides."""
+    rng = np.random.default_rng(11)
+    sim = _build({"hosts": 1, "prefill_hosts": 0, "page_tokens": 0,
+                  "max_batch": 0, "dram": 0.0, "tenants": 2,
+                  "hbm": 300e6})
+    pool = [1000 + i for i in range(60)]
+    arrivals, t = [], 0.0
+    for _ in range(200):
+        t += rng.exponential(1.0 / 60.0)
+        uid = (int(rng.choice(pool)) if rng.random() < 0.9
+               else int(rng.integers(0, 10 ** 9)))
+        arrivals.append((t, UserMeta(user_id=uid, prefix_len=2048,
+                                     tenant=uid % 2)))
+    sim.run(iter(arrivals))
+    _assert_invariants(sim, len(arrivals))
+    assert all(i.hbm.tenant_quota is not None
+               for i in sim.runtime.instances.values())
+    roll = sim.runtime.stats()["tenants"]
+    for tid in (0, 1):
+        assert roll["hbm"][tid]["inserts"] > 0, roll["hbm"]
+        assert roll["hbm"][tid]["evictions"] > 0, roll["hbm"]

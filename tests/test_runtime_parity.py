@@ -451,3 +451,37 @@ def test_segments_require_paged_window():
         ClusterSim(relay_config(
             trigger=TriggerConfig(n_instances=5, r2=0.4),
             cluster=ClusterConfig(segments=True)), COST)
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant bit-identity
+# ---------------------------------------------------------------------------
+
+
+def _tenant_trace(tenants, stamp):
+    cfg = relay_config(
+        trigger=TriggerConfig(n_instances=5, r2=0.4, kv_p99_len=4096,
+                              q_m=0.1),
+        cluster=ClusterConfig(hbm_cache_bytes=1.5e8,
+                              dram_budget_bytes=500e9, tenants=tenants))
+    arrivals = _arrivals()
+    if stamp:
+        arrivals = [(t, dataclasses.replace(m, tenant=m.user_id % 2))
+                    for t, m in arrivals]
+    sim = ClusterSim(cfg, COST)
+    s = sim.run(iter(arrivals))
+    trace = [(r.user_id, r.hit, r.e2e_ms, r.queue_ms, r.pre_ms,
+              r.load_ms, r.rank_ms) for r in sim.records]
+    return trace, s
+
+
+def test_single_tenant_is_trace_identical():
+    """Bit-identity contract of the multi-tenant PR (same discipline as
+    hosts=1 / page_tokens=0 / segments=off): tenants=1 — the default —
+    builds no tenant machinery, and tenant annotations on the stream
+    are inert.  Both variants must match the baseline trace and summary
+    bit-for-bit over the full parity workload (every HitKind)."""
+    base, s0 = _tenant_trace(1, False)
+    annotated, s1 = _tenant_trace(1, True)
+    assert annotated == base
+    assert s1 == s0
